@@ -1,0 +1,6 @@
+# Allow `pytest python/tests/` from the repo root: the compile package
+# lives under python/.
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

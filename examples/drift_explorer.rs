@@ -1,0 +1,101 @@
+//! Drift explorer: device-physics playground over the compact model —
+//! relaxation trajectories in time (paper Fig. 1a), programming-error
+//! statistics of the write-verify loop, and the endurance histogram.
+//! Substrate-only (no PJRT), runs instantly.
+//!
+//!     cargo run --release --example drift_explorer
+
+use rimc_dora::device::{constants, DriftModel, ProgramModel};
+use rimc_dora::rram::Crossbar;
+use rimc_dora::util::rng::Rng;
+use rimc_dora::util::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(1);
+    let w = Tensor::new(
+        vec![64, 64],
+        (0..64 * 64).map(|_| rng.normal_scaled(0.0, 0.2) as f32).collect(),
+    )?;
+    let w_max = w.max_abs() as f64 + 1e-9;
+
+    // -- Fig. 1(a): conductance relaxation over time ------------------
+    println!("== relaxation trajectory (weight-space RMS error vs time) ==");
+    println!("| hours | time factor | rms error (weight units) |");
+    println!("|---|---|---|");
+    let drift = DriftModel::with_rel(0.2);
+    for &hours in &[0.0, 0.5, 2.0, 10.0, 50.0, 200.0, 1000.0, 5000.0] {
+        let mut xb = Crossbar::program_weights(
+            &w, w_max, drift, ProgramModel::default(), 7,
+        )?;
+        if hours > 0.0 {
+            xb.advance_time(hours);
+        }
+        let back = xb.read_weights();
+        let rms = (back
+            .data()
+            .iter()
+            .zip(w.data())
+            .map(|(a, b)| ((a - b) * (a - b)) as f64)
+            .sum::<f64>()
+            / w.len() as f64)
+            .sqrt();
+        println!(
+            "| {hours:6.1} | {:.3} | {rms:.5} |",
+            drift.time_factor(hours)
+        );
+    }
+
+    // -- write-verify statistics --------------------------------------
+    println!("\n== write-and-verify programming statistics ==");
+    let xb = Crossbar::program_weights(
+        &w, w_max, DriftModel::with_rel(0.0), ProgramModel::default(), 9,
+    )?;
+    let c = &xb.counters;
+    println!("devices programmed:      {}", xb.rows() * xb.cols() * 2);
+    println!("write pulses issued:     {}", c.write_attempts);
+    println!("mean attempts/cell:      {:.2}", c.mean_attempts());
+    println!(
+        "attempts histogram [1,2,3,4,>=5]: {:?}",
+        c.attempts_hist
+    );
+    println!(
+        "array write time:        {:.2} ms   energy: {:.1} nJ",
+        c.write_time_ns / 1e6,
+        c.write_energy_pj / 1e3
+    );
+    println!(
+        "rms programming error:   {:.5} weight units (verify tol {:.1}% of \
+         G_max)",
+        xb.programming_rms_error(&w),
+        100.0 * ProgramModel::default().verify_tol
+    );
+
+    // -- drift-magnitude sweep (Fig. 2's x-axis, device level) ---------
+    println!("\n== weight-space error vs relative drift ==");
+    println!("| rel drift | rms error | vs weight std (0.2) |");
+    println!("|---|---|---|");
+    for &rel in &[0.05, 0.10, 0.15, 0.20, 0.25, 0.30] {
+        let mut xb = Crossbar::program_weights(
+            &w, w_max, DriftModel::with_rel(rel), ProgramModel::default(), 11,
+        )?;
+        xb.apply_saturated_drift();
+        let back = xb.read_weights();
+        let rms = (back
+            .data()
+            .iter()
+            .zip(w.data())
+            .map(|(a, b)| ((a - b) * (a - b)) as f64)
+            .sum::<f64>()
+            / w.len() as f64)
+            .sqrt();
+        println!("| {rel:.2} | {rms:.5} | {:.1}% |", 100.0 * rms / 0.2);
+    }
+
+    println!(
+        "\n(compact model: sigma = rel * max(G_t, {:.0}% G_max), \
+         mu = -{:.0}% * rel * G_t; see device::constants)",
+        100.0 * constants::HRS_DRIFT_FLOOR,
+        100.0 * constants::DRIFT_DECAY_FRAC
+    );
+    Ok(())
+}

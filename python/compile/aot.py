@@ -1,0 +1,155 @@
+"""AOT build: train teachers, lower every entry point to HLO text, bundle.
+
+This is the ONLY python that needs to run before the rust binary is
+self-contained.  `make artifacts` invokes it once; it is incremental at the
+Makefile level (stamp on the python sources).
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (into --outdir, default ../artifacts):
+    <name>.hlo.txt          one per entry point (see model.entry_points)
+    bundle_<model>.bin      teacher weights, ADC scales, dataset splits
+    manifest.json           models, artifacts + I/O shapes, dataset info
+
+The per-layer ADC full-scale is measured here (1.2 x p99.9 of the teacher's
+pre-activation magnitudes on a training subset) — the analog of the ADC
+range calibration every real RIMC macro performs at deployment.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import ref
+from .tensorfile import write_tensors
+
+GMAX = 100.0          # full conductance range (arbitrary uS units)
+ADC_MARGIN = 1.2      # full-scale = margin * p99.9(|preactivation|)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def measure_adc_fs(wb: np.ndarray, wh: np.ndarray,
+                   ds: data_mod.SyntheticDataset, n_probe: int = 256):
+    """Per-layer ADC full-scale from teacher pre-activation statistics."""
+    d = wb.shape[-1]
+    h = jnp.asarray(ds.train_x[:n_probe].reshape(-1, d))
+    fs = []
+    for l in range(wb.shape[0]):
+        y = h @ jnp.asarray(wb[l])
+        fs.append(ADC_MARGIN * float(jnp.quantile(jnp.abs(y), 0.999)))
+        h = ref.teacher_block(h, jnp.asarray(wb[l]))
+    pooled = model_mod.pool(h, n_probe)
+    fs_head = ADC_MARGIN * float(
+        jnp.quantile(jnp.abs(pooled @ jnp.asarray(wh)), 0.999))
+    return np.asarray(fs, np.float32), np.float32(fs_head)
+
+
+def build_model_bundle(name: str, outdir: pathlib.Path, quick: bool):
+    spec = model_mod.SPECS[name]
+    dspec = data_mod.SPECS[name]
+    ds = data_mod.make_dataset(dspec)
+
+    epochs = 4 if quick else (30 if name == "m20" else 25)
+    print(f"[aot] training teacher {name} ({epochs} epochs) ...")
+    t0 = time.time()
+    wb, wh, acc = train_mod.train_teacher(
+        spec, ds, train_mod.TrainConfig(epochs=epochs))
+    print(f"[aot] {name} teacher eval acc {acc:.4f} "
+          f"({time.time() - t0:.0f}s)")
+
+    adc_fs, adc_fs_head = measure_adc_fs(wb, wh, ds)
+
+    write_tensors(outdir / f"bundle_{name}.bin", {
+        "wb": wb, "wh": wh,
+        "adc_fs": adc_fs, "adc_fs_head": np.asarray([adc_fs_head]),
+        "calib_x": ds.calib_x, "calib_y": ds.calib_y,
+        "eval_x": ds.eval_x, "eval_y": ds.eval_y,
+    })
+    return spec, ds, float(acc)
+
+
+def lower_entry_points(spec, outdir: pathlib.Path):
+    entries = {}
+    eps = model_mod.entry_points(spec)
+    for name, (fn, args) in eps.items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        entries[name] = {
+            "file": path.name,
+            "inputs": [list(a.shape) for a in args],
+        }
+        print(f"[aot]   {name}: {len(text)} chars ({time.time() - t0:.1f}s)")
+    return entries
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default="../artifacts")
+    p.add_argument("--models", nargs="*", default=["m20", "m50"])
+    p.add_argument("--quick", action="store_true",
+                   help="fast teachers (tests only; accuracy suffers)")
+    args = p.parse_args()
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "constants": {
+            "g_max": GMAX,
+            "adc_bits": model_mod.ADC_BITS,
+            "adc_margin": ADC_MARGIN,
+            "tokens": data_mod.TOKENS,
+            "step_batch": model_mod.STEP_BATCH,
+            "eval_batch": model_mod.EVAL_BATCH,
+        },
+        "models": {},
+    }
+
+    for name in args.models:
+        spec, ds, teacher_acc = build_model_bundle(name, outdir, args.quick)
+        print(f"[aot] lowering entry points for {name} ...")
+        entries = lower_entry_points(spec, outdir)
+        dspec = ds.spec
+        manifest["models"][name] = {
+            "n_blocks": spec.n_blocks,
+            "width": spec.width,
+            "n_classes": spec.n_classes,
+            "ranks": list(spec.ranks),
+            "with_lora": spec.with_lora,
+            "teacher_acc": teacher_acc,
+            "bundle": f"bundle_{name}.bin",
+            "n_calib": dspec.n_calib,
+            "n_eval": dspec.n_eval,
+            "artifacts": entries,
+        }
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] wrote {outdir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

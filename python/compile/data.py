@@ -1,0 +1,135 @@
+"""Synthetic dataset generation for the RIMC calibration reproduction.
+
+The paper evaluates on CIFAR-100/ResNet-20 and ImageNet-1K/ResNet-50,
+neither of which is available here (repro band 0/5).  We substitute a
+deterministic synthetic classification task whose *structure* exercises the
+same code paths.
+
+Token structure — why samples are [T, d] and not [d]
+----------------------------------------------------
+The paper's feature-based calibration generalizes from 10 images because a
+conv layer reuses its weights at every spatial position: 10 images hand a
+3x3 conv thousands of (input-patch -> output-feature) row equations.  To
+preserve that mechanism, one sample here is a grid of T "patch tokens"; the
+MicroNet blocks apply the same weight matrix to every token (the 1x1-conv /
+im2col view that an RRAM crossbar executes anyway), and the head mean-pools
+tokens before classifying.  Tokens within a sample share a per-sample
+latent, so they are *correlated* — 10 samples provide ~10xT row equations
+with diminishing information per token, exactly like real image patches.
+This keeps Fig. 4's dataset-size axis meaningful.
+
+Construction (all seeded; identical arrays are consumed by pytest and, via
+the artifact bundle, by the rust side):
+1. `n_classes` unit-norm class centers in R^dim.
+2. Per sample: a class center + a sample-level anisotropic latent
+   (shared across tokens) + per-token jitter.
+3. A fixed random two-layer tanh warp applied per token (makes class
+   boundaries non-linear so depth matters).
+4. Feature-wise standardization (population stats).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["DatasetSpec", "SyntheticDataset", "make_dataset", "SPECS",
+           "TOKENS"]
+
+# patch tokens per sample (shared by every model; baked into artifacts)
+TOKENS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """Shape parameters of one synthetic classification task."""
+
+    name: str
+    dim: int            # feature dimension == model width d
+    n_classes: int
+    n_train: int        # teacher-training split
+    n_calib: int        # calibration pool (paper draws 1..2000 from it)
+    n_eval: int         # held-out accuracy-evaluation split
+    noise: float        # sample-level latent scale (before the warp)
+    token_jitter: float  # per-token jitter scale
+    seed: int
+
+    @property
+    def n_total(self) -> int:
+        return self.n_train + self.n_calib + self.n_eval
+
+
+# m20 stands in for ResNet-20/CIFAR-100, m50 for ResNet-50/ImageNet-1K.
+# n_calib is sized for the paper's largest calibration sweep (2000 on
+# CIFAR-100, 125 on ImageNet-1K).
+SPECS: dict[str, DatasetSpec] = {
+    "m20": DatasetSpec(
+        name="m20", dim=64, n_classes=64, n_train=8000, n_calib=2048,
+        n_eval=1024, noise=0.75, token_jitter=0.45, seed=20,
+    ),
+    "m50": DatasetSpec(
+        name="m50", dim=96, n_classes=100, n_train=12000, n_calib=512,
+        n_eval=1024, noise=0.70, token_jitter=0.45, seed=50,
+    ),
+}
+
+
+@dataclasses.dataclass
+class SyntheticDataset:
+    spec: DatasetSpec
+    train_x: np.ndarray   # [N, T, d] f32
+    train_y: np.ndarray   # [N] i32
+    calib_x: np.ndarray
+    calib_y: np.ndarray
+    eval_x: np.ndarray
+    eval_y: np.ndarray
+
+    def splits(self):
+        return {
+            "train": (self.train_x, self.train_y),
+            "calib": (self.calib_x, self.calib_y),
+            "eval": (self.eval_x, self.eval_y),
+        }
+
+
+def _warp(x: np.ndarray, rng: np.random.Generator, dim: int) -> np.ndarray:
+    """Fixed random two-layer tanh warp: makes class boundaries non-linear."""
+    h = 2 * dim
+    w1 = rng.normal(0.0, 1.0 / np.sqrt(dim), size=(dim, h)).astype(np.float32)
+    w2 = rng.normal(0.0, 1.0 / np.sqrt(h), size=(h, dim)).astype(np.float32)
+    return np.tanh(x @ w1) @ w2 + 0.3 * x
+
+
+def make_dataset(spec: DatasetSpec) -> SyntheticDataset:
+    rng = np.random.default_rng(spec.seed)
+    d, c, t = spec.dim, spec.n_classes, TOKENS
+
+    centers = rng.normal(size=(c, d)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    # per-class anisotropy: a few dominant latent directions per class
+    n_dirs = 4
+    dirs = rng.normal(size=(c, n_dirs, d)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=2, keepdims=True)
+
+    n = spec.n_total
+    y = rng.integers(0, c, size=n).astype(np.int32)
+    # sample-level latent, shared by all tokens of the sample
+    coeff = rng.normal(0.0, spec.noise, size=(n, n_dirs)).astype(np.float32)
+    latent = centers[y] + np.einsum("nk,nkd->nd", coeff, dirs[y])
+    # per-token jitter
+    jit = rng.normal(0.0, spec.token_jitter, size=(n, t, d)).astype(np.float32)
+    x = latent[:, None, :] + jit
+
+    x = _warp(x.reshape(n * t, d), rng, d).reshape(n, t, d)
+    mu = x.reshape(-1, d).mean(axis=0)
+    sd = x.reshape(-1, d).std(axis=0) + 1e-6
+    x = ((x - mu) / sd).astype(np.float32)
+
+    a, b = spec.n_train, spec.n_train + spec.n_calib
+    return SyntheticDataset(
+        spec=spec,
+        train_x=x[:a], train_y=y[:a],
+        calib_x=x[a:b], calib_y=y[a:b],
+        eval_x=x[b:], eval_y=y[b:],
+    )

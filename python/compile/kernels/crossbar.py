@@ -1,0 +1,82 @@
+"""Pallas crossbar-MVM kernel — the analog RRAM array readout, modeled.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+"kernel" is an analog crossbar macro, not a GPU kernel.  On TPU the natural
+mapping is: one grid step = one wordline-group activation; the HBM->VMEM
+BlockSpec schedule plays the role of the macro's time-multiplexed
+row/column drivers; the differential subtraction, weight rescale and ADC
+quantization are fused into the same VMEM pass as the MXU matmul so the
+"readout" never round-trips to HBM.
+
+All kernels run with `interpret=True` (CPU PJRT cannot execute Mosaic
+custom-calls); they lower into the same HLO as the surrounding jax code.
+
+Tiling: grid over batch rows only.  The weight panel (d x k, f32) for the
+models in this repo is 16..37 KiB — it fits VMEM whole alongside the
+activation tile, so the MXU sees one (bm x d) @ (d x k) per grid step.
+VMEM footprint is asserted in `vmem_bytes()` and reported by the perf pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch-tile height. 8-row granularity matches the f32 MXU/VPU
+# sublane; real batches here are 32/64 so a single tile is typical.
+DEFAULT_BLOCK_B = 64
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # v4/v5 VMEM per core, upper bound
+
+
+def vmem_bytes(block_b: int, d: int, k: int) -> int:
+    """f32 VMEM residency of one grid step: X tile + G+ + G- + out tile."""
+    return 4 * (block_b * d + 2 * d * k + block_b * k)
+
+
+def _crossbar_kernel(x_ref, gp_ref, gn_ref, inv_scale_ref, fs_ref, o_ref,
+                     *, adc_bits: int):
+    # Differential read + rescale: W_r = (G+ - G-) / w_scale (paper Eq. 2).
+    w = (gp_ref[...] - gn_ref[...]) * inv_scale_ref[0]
+    y = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+    # ADC: uniform mid-rise quantizer, full-scale fs, `adc_bits` bits.
+    half = 2 ** (adc_bits - 1)
+    lsb = fs_ref[0] / half
+    o_ref[...] = jnp.clip(jnp.round(y / lsb), -half, half - 1) * lsb
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "block_b"))
+def crossbar_mvm(x, gp, gn, inv_w_scale, adc_fs, *, adc_bits: int = 8,
+                 block_b: int = DEFAULT_BLOCK_B):
+    """Analog MVM  X @ ((G+ - G-) / w_scale)  with ADC readout quantization.
+
+    Args:
+      x:            [B, d] activations.
+      gp, gn:       [d, k] differential conductance pair.
+      inv_w_scale:  [1] scalar 1/w_scale = W_max/G_max.
+      adc_fs:       [1] ADC full-scale (per-array calibration constant).
+      adc_bits:     ADC resolution (hardware constant, baked into artifact).
+    Returns: [B, k] quantized readout.
+    """
+    bsz, d = x.shape
+    k = gp.shape[1]
+    bm = min(block_b, bsz)
+    grid = (pl.cdiv(bsz, bm),)
+    assert vmem_bytes(bm, d, k) <= VMEM_BUDGET_BYTES, "weight panel > VMEM"
+    return pl.pallas_call(
+        functools.partial(_crossbar_kernel, adc_bits=adc_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k), jnp.float32),
+        interpret=True,
+    )(x, gp, gn, inv_w_scale, adc_fs)

@@ -1,0 +1,177 @@
+"""Pallas DoRA kernels — the paper's SRAM-side digital hot path, fused.
+
+Two kernels plus a hand-derived VJP:
+
+* `dora_mvm` — the deployment forward (merged form): analog crossbar
+  readout + low-rank SRAM correction + magnitude scale in ONE pass:
+      Y = (quant(X W_r) + (X A) B) o M_eff
+  Both GEMMs hit the MXU per tile; the rank-r panel (A, B) and the scale
+  vector stay VMEM-resident across the whole grid.
+
+* `dora_colnorm` — per-column L2 norm of W' = W_r + A@B, tiled over
+  columns; produces the `n` used by the unmerged (training) form and by
+  the Algorithm-2 line-12 merge.
+
+* `dora_linear_vjp` — `jax.custom_vjp` wrapper whose forward runs the
+  Pallas kernels and whose backward is the hand-derived gradient of the
+  *unmerged* DoRA forward w.r.t. (A, B, M) (layer-local calibration never
+  needs dX or dW_r).  Asserted against `jax.grad` of `ref.dora_linear`
+  in pytest.
+
+Gradient derivation (used by `_dora_bwd`):
+    W' = W_r + A B,   n_j = ||W'_:,j||,   S = quant(X W_r) + (X A) B,
+    s = M / n,        Y = S o s
+    dS = G o s                                  (G = dL/dY)
+    dM_j = sum_b G_bj S_bj / n_j
+    dn_j = -(M_j / n_j^2) * sum_b G_bj S_bj
+    dW'(norm path)_ij = W'_ij * dn_j / n_j
+    dA = X^T dS B^T + dW' B^T,   dB = (X A)^T dS + A^T dW'
+(quant uses a straight-through estimate, consistent with ref.adc_quantize.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .crossbar import DEFAULT_BLOCK_B, VMEM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# fused deployment forward
+# ---------------------------------------------------------------------------
+
+def _dora_mvm_kernel(x_ref, gp_ref, gn_ref, inv_scale_ref, fs_ref,
+                     a_ref, b_ref, meff_ref, o_ref, *, adc_bits: int):
+    x = x_ref[...]
+    # analog path: differential readout + ADC
+    w = (gp_ref[...] - gn_ref[...]) * inv_scale_ref[0]
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    half = 2 ** (adc_bits - 1)
+    lsb = fs_ref[0] / half
+    z = jnp.clip(jnp.round(z / lsb), -half, half - 1) * lsb
+    # digital path: rank-r correction, second MXU pass on the small panel
+    corr = jnp.dot(jnp.dot(x, a_ref[...],
+                           preferred_element_type=jnp.float32),
+                   b_ref[...], preferred_element_type=jnp.float32)
+    # magnitude rescale (merged M_eff = M / n), VPU elementwise
+    o_ref[...] = (z + corr) * meff_ref[...]
+
+
+def dora_vmem_bytes(block_b: int, d: int, k: int, r: int) -> int:
+    """f32 VMEM residency of one fused-forward grid step."""
+    return 4 * (block_b * d + 2 * d * k + d * r + r * k + k + block_b * k)
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "block_b"))
+def dora_mvm(x, gp, gn, inv_w_scale, adc_fs, a, b, m_eff, *,
+             adc_bits: int = 8, block_b: int = DEFAULT_BLOCK_B):
+    """Fused merged-DoRA forward: Y = (quant(X W_r) + (X A) B) o M_eff."""
+    bsz, d = x.shape
+    k = gp.shape[1]
+    r = a.shape[1]
+    bm = min(block_b, bsz)
+    assert dora_vmem_bytes(bm, d, k, r) <= VMEM_BUDGET_BYTES
+    return pl.pallas_call(
+        functools.partial(_dora_mvm_kernel, adc_bits=adc_bits),
+        grid=(pl.cdiv(bsz, bm),),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((d, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k), jnp.float32),
+        interpret=True,
+    )(x, gp, gn, inv_w_scale, adc_fs, a, b, m_eff)
+
+
+# ---------------------------------------------------------------------------
+# column norm of the effective weight
+# ---------------------------------------------------------------------------
+
+def _colnorm_kernel(gp_ref, gn_ref, inv_scale_ref, a_ref, b_ref, o_ref):
+    w = (gp_ref[...] - gn_ref[...]) * inv_scale_ref[0]
+    w = w + jnp.dot(a_ref[...], b_ref[...],
+                    preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.sqrt(jnp.sum(w * w, axis=0) + ref.NORM_EPS)
+
+
+@jax.jit
+def dora_colnorm(gp, gn, inv_w_scale, a, b):
+    """n_j = ||(W_r + A@B)_{:,j}||_2, tiled over column panels."""
+    d, k = gp.shape
+    r = a.shape[1]
+    # column-panel tiling: keep panels multiple-of-128 shaped when possible
+    bk = k if k <= 512 else 128
+    return pl.pallas_call(
+        _colnorm_kernel,
+        grid=(pl.cdiv(k, bk),),
+        in_specs=[
+            pl.BlockSpec((d, bk), lambda j: (0, j)),
+            pl.BlockSpec((d, bk), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((d, r), lambda j: (0, 0)),
+            pl.BlockSpec((r, bk), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(gp, gn, inv_w_scale, a, b)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP training forward (unmerged)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8,))
+def dora_linear_vjp(x, gp, gn, inv_w_scale, adc_fs, a, b, m, adc_bits: int):
+    """Unmerged DoRA forward with hand-derived (A, B, M) gradients."""
+    y, _ = _dora_fwd_impl(x, gp, gn, inv_w_scale, adc_fs, a, b, m, adc_bits)
+    return y
+
+
+def _dora_fwd_impl(x, gp, gn, inv_w_scale, adc_fs, a, b, m, adc_bits):
+    n = dora_colnorm(gp, gn, inv_w_scale, a, b)
+    y = dora_mvm(x, gp, gn, inv_w_scale, adc_fs, a, b, m / n,
+                 adc_bits=adc_bits)
+    return y, n
+
+
+def _dora_fwd(x, gp, gn, inv_w_scale, adc_fs, a, b, m, adc_bits):
+    y, n = _dora_fwd_impl(x, gp, gn, inv_w_scale, adc_fs, a, b, m, adc_bits)
+    # Residuals: recompute S (pre-scale sum) from y to avoid storing both.
+    s_scale = m / n
+    s_mat = y / s_scale  # S = quant(X W_r) + (X A) B
+    wr = ref.weights_from_conductance(gp, gn, jnp.reshape(inv_w_scale, ()))
+    return y, (x, wr, a, b, m, n, s_mat)
+
+
+def _dora_bwd(adc_bits, res, g):
+    x, wr, a, b, m, n, s_mat = res
+    s_scale = m / n
+    ds = g * s_scale                                  # dL/dS
+    gs = jnp.sum(g * s_mat, axis=0)                   # sum_b G o S
+    dm = gs / n
+    dn = -(m / (n * n)) * gs
+    w_eff = wr + a @ b
+    dw_norm = w_eff * (dn / n)                        # norm-path dW'
+    xt_ds = x.T @ ds
+    da = xt_ds @ b.T + dw_norm @ b.T
+    db = a.T @ xt_ds + a.T @ dw_norm
+    # non-diff inputs (x, conductances, scales) get zero/None cotangents
+    zeros = (jnp.zeros_like(x), jnp.zeros_like(wr), jnp.zeros_like(wr),
+             jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32))
+    return (*zeros, da, db, dm)
+
+
+dora_linear_vjp.defvjp(_dora_fwd, _dora_bwd)

@@ -1,0 +1,153 @@
+"""Pure-jnp reference ("oracle") implementations of every kernel.
+
+These definitions are the single source of truth for the math:
+
+* the Pallas kernels in `crossbar.py` / `dora.py` are asserted allclose
+  against these in pytest (hypothesis sweeps shapes/values),
+* the L2 calibration-step functions in `model.py` differentiate through
+  these (they lower to plain HLO and fuse fine),
+* the hand-derived DoRA VJP in `dora.py` is asserted against `jax.grad`
+  of these.
+
+Conventions
+-----------
+Differential conductance pair (paper Eq. 2):
+    W_r = (G+ - G-) / w_scale          with  w_scale = G_max / W_max
+ADC readout quantization (bit-sliced RIMC ADC, straight-through grads):
+    q = clip(round(y / lsb)) * lsb     with  lsb = fs / 2**(bits-1)
+DoRA (paper Eq. 6 / Algorithm 2, with `Adapt`'s norm read as the
+column norm of the *effective weight* W' = W_r + A@B — the only reading
+under which the line-12 merge `M <- M o ||Adapt||` is input-independent):
+    n_j   = || (W_r + A B)_{:,j} ||_2
+    Y     = (X W_r + (X A) B) o (M / n)
+Merged inference form:  Y = (X W_r + (X A) B) o M_eff,  M_eff = M / n.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NORM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# crossbar / device
+# ---------------------------------------------------------------------------
+
+def weights_from_conductance(gp, gn, inv_w_scale):
+    """Paper Eq. 2: effective weight seen by the array readout."""
+    return (gp - gn) * inv_w_scale
+
+
+def adc_quantize(y, fs, bits: int):
+    """Uniform mid-rise ADC with full-scale `fs`, straight-through gradient.
+
+    `fs` is a scalar (or [1]) runtime input; `bits` is a hardware constant
+    baked into the artifact.
+    """
+    fs = jnp.reshape(fs, ())
+    half = 2 ** (bits - 1)
+    lsb = fs / half
+    q = jnp.clip(jnp.round(y / lsb), -half, half - 1) * lsb
+    return y + jax.lax.stop_gradient(q - y)
+
+
+def crossbar_mvm(x, gp, gn, inv_w_scale, adc_fs, adc_bits: int):
+    """Analog MVM: X @ W_r through the differential pair + ADC readout."""
+    inv_w_scale = jnp.reshape(inv_w_scale, ())
+    w = weights_from_conductance(gp, gn, inv_w_scale)
+    return adc_quantize(x @ w, adc_fs, adc_bits)
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+def dora_colnorm(wr, a, b):
+    """Per-column L2 norm of the effective weight W' = W_r + A@B  -> [k]."""
+    w_eff = wr + a @ b
+    return jnp.sqrt(jnp.sum(w_eff * w_eff, axis=0) + NORM_EPS)
+
+
+def dora_linear(x, gp, gn, inv_w_scale, adc_fs, a, b, m, adc_bits: int):
+    """Unmerged (training-time) DoRA forward. Returns (y, n)."""
+    inv_w_scale = jnp.reshape(inv_w_scale, ())
+    wr = weights_from_conductance(gp, gn, inv_w_scale)
+    z = adc_quantize(x @ wr, adc_fs, adc_bits)   # analog path (RRAM)
+    corr = (x @ a) @ b                            # digital path (SRAM)
+    n = dora_colnorm(wr, a, b)
+    return (z + corr) * (m / n), n
+
+
+def dora_linear_merged(x, gp, gn, inv_w_scale, adc_fs, a, b, m_eff,
+                       adc_bits: int):
+    """Merged (inference-time) DoRA forward: M_eff = M / n is precomputed."""
+    inv_w_scale = jnp.reshape(inv_w_scale, ())
+    wr = weights_from_conductance(gp, gn, inv_w_scale)
+    z = adc_quantize(x @ wr, adc_fs, adc_bits)
+    corr = (x @ a) @ b
+    return (z + corr) * m_eff
+
+
+def lora_linear(x, gp, gn, inv_w_scale, adc_fs, a, b, adc_bits: int):
+    """LoRA forward (Fig. 6 baseline): Y = X W_r + (X A) B."""
+    inv_w_scale = jnp.reshape(inv_w_scale, ())
+    wr = weights_from_conductance(gp, gn, inv_w_scale)
+    z = adc_quantize(x @ wr, adc_fs, adc_bits)
+    return z + (x @ a) @ b
+
+
+# ---------------------------------------------------------------------------
+# blocks (residual matmul net = crossbar-mapped ResNet block, see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def teacher_block(x, w):
+    """Digital (teacher / pre-drift) residual block."""
+    return jax.nn.relu(x @ w) + x
+
+
+def teacher_head(x, w):
+    return x @ w
+
+
+def student_block(x, gp, gn, inv_w_scale, adc_fs, adc_bits: int):
+    """Uncalibrated drifted block (Fig. 2 subject)."""
+    return jax.nn.relu(crossbar_mvm(x, gp, gn, inv_w_scale, adc_fs,
+                                    adc_bits)) + x
+
+
+def student_head(x, gp, gn, inv_w_scale, adc_fs, adc_bits: int):
+    return crossbar_mvm(x, gp, gn, inv_w_scale, adc_fs, adc_bits)
+
+
+def dora_block(x, gp, gn, inv_w_scale, adc_fs, a, b, m_eff, adc_bits: int):
+    """Calibrated block, merged form (deployment hot path)."""
+    y = dora_linear_merged(x, gp, gn, inv_w_scale, adc_fs, a, b, m_eff,
+                           adc_bits)
+    return jax.nn.relu(y) + x
+
+
+def lora_block(x, gp, gn, inv_w_scale, adc_fs, a, b, adc_bits: int):
+    y = lora_linear(x, gp, gn, inv_w_scale, adc_fs, a, b, adc_bits)
+    return jax.nn.relu(y) + x
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def masked_mse(pred, target, mask):
+    """Mean squared error over rows with mask==1 (padding rows excluded)."""
+    mask = mask.reshape(-1, 1)
+    se = jnp.sum(((pred - target) ** 2) * mask)
+    denom = jnp.maximum(jnp.sum(mask) * pred.shape[1], 1.0)
+    return se / denom
+
+
+def masked_cross_entropy(logits, y_onehot, mask):
+    """Masked softmax cross-entropy; y is one-hot f32 (avoids i32 literals)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    ll = jnp.sum((logits - logz) * y_onehot, axis=1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / denom

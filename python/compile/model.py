@@ -1,0 +1,369 @@
+"""L2 — the paper's compute graphs in JAX, calling the L1 kernels.
+
+Everything here is lowered ONCE by `aot.py` to HLO text and executed from
+rust; nothing in this file runs at request time.
+
+Model family ("MicroNet", see DESIGN.md §2 for the ResNet substitution
+argument): L residual matmul blocks of uniform width d applied per patch
+token (the 1x1-conv / im2col view of a conv layer — exactly what an RRAM
+crossbar executes), plus a mean-pool + linear head:
+
+    block_l(x) = relu(x @ W_l) + x      x: [rows, d], rows = batch*TOKENS
+    head(x)    = mean_tokens(x) @ W_h   W_h in R^{d x C}
+
+On RIMC hardware each W lives in a crossbar as a differential conductance
+pair; adapters (A, B, M) live in SRAM.
+
+Entry points lowered per model/rank (all shapes static; padded batches are
+masked — see `ref.masked_mse`):
+
+  forward family (deployment hot path, Pallas kernels inside):
+    teacher_block / teacher_head      digital reference forward
+    student_block                     drifted, uncalibrated (Fig. 2)
+    dora_block / lora_block           calibrated forwards (merged M_eff)
+    model_fwd / student_fwd /
+    dora_model_fwd / lora_model_fwd   full stacked nets -> logits (eval)
+
+  calibration family (Algorithm 1 + 2):
+    dora_step_block / dora_step_head  one Adam step on (A, B, M) against
+                                      the layer's teacher features (MSE)
+    lora_step_block / lora_step_head  same for LoRA (Fig. 6 baseline)
+    bp_step                           full-network backprop baseline
+                                      (cross-entropy, updates every W)
+    dora_merge                        Algorithm 2 line 12: M_eff = M / n
+
+Optimizer: Adam (beta1=.9, beta2=.999, eps=1e-8), state threaded through
+the artifact I/O so the rust coordinator owns it between steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .data import TOKENS
+from .kernels import crossbar as xb
+from .kernels import dora as dk
+from .kernels import ref
+
+ADC_BITS = 8          # hardware constant; baked into every artifact
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# model specs (must mirror rust/src/model/spec.rs and data.SPECS)
+# ---------------------------------------------------------------------------
+
+class ModelSpec:
+    """Static shape description of one MicroNet variant."""
+
+    def __init__(self, name: str, n_blocks: int, width: int, n_classes: int,
+                 ranks: tuple[int, ...], with_lora: bool):
+        self.name = name
+        self.n_blocks = n_blocks
+        self.width = width
+        self.n_classes = n_classes
+        self.ranks = ranks
+        self.with_lora = with_lora
+
+    def n_params(self) -> int:
+        d = self.width
+        return self.n_blocks * d * d + d * self.n_classes
+
+    def dora_params(self, r: int) -> int:
+        d, c = self.width, self.n_classes
+        return self.n_blocks * (d * r + r * d + d) + (d * r + r * c + c)
+
+    def gamma(self, r: int) -> float:
+        """Paper Eq. 7: trainable-parameter ratio."""
+        return self.dora_params(r) / self.n_params()
+
+
+# m20 ~ ResNet-20/CIFAR-100, m50 ~ ResNet-50/ImageNet-1K (see DESIGN.md).
+SPECS: dict[str, ModelSpec] = {
+    "m20": ModelSpec("m20", n_blocks=20, width=64, n_classes=64,
+                     ranks=(1, 2, 4, 8), with_lora=True),
+    "m50": ModelSpec("m50", n_blocks=50, width=96, n_classes=100,
+                     ranks=(1, 2, 4, 8), with_lora=False),
+}
+
+STEP_BATCH = 32    # calibration minibatch, in samples (masked)
+EVAL_BATCH = 64    # accuracy-evaluation minibatch, in samples
+STEP_ROWS = STEP_BATCH * TOKENS
+EVAL_ROWS = EVAL_BATCH * TOKENS
+
+
+def pool(x_rows, batch: int):
+    """Mean over the token axis: [batch*TOKENS, d] -> [batch, d]."""
+    return x_rows.reshape(batch, TOKENS, -1).mean(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# single-layer forwards (lowered at STEP_ROWS)
+# ---------------------------------------------------------------------------
+
+def teacher_block(x, w):
+    return ref.teacher_block(x, w)
+
+
+def teacher_head(x, w, *, batch: int):
+    return ref.teacher_head(pool(x, batch), w)
+
+
+def student_block(x, gp, gn, inv_s, fs):
+    return jax.nn.relu(
+        xb.crossbar_mvm(x, gp, gn, inv_s, fs, adc_bits=ADC_BITS)) + x
+
+
+def dora_block(x, gp, gn, inv_s, fs, a, b, m_eff):
+    y = dk.dora_mvm(x, gp, gn, inv_s, fs, a, b, m_eff, adc_bits=ADC_BITS)
+    return jax.nn.relu(y) + x
+
+
+def lora_block(x, gp, gn, inv_s, fs, a, b):
+    z = xb.crossbar_mvm(x, gp, gn, inv_s, fs, adc_bits=ADC_BITS)
+    return jax.nn.relu(z + (x @ a) @ b) + x
+
+
+def dora_merge(gp, gn, inv_s, a, b, m):
+    """Algorithm 2 line 12: fold the column norm into M for deployment."""
+    n = dk.dora_colnorm(gp, gn, inv_s, a, b)
+    return m / n
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def _adam_update(p, g, mu, nu, t, lr):
+    mu = ADAM_B1 * mu + (1.0 - ADAM_B1) * g
+    nu = ADAM_B2 * nu + (1.0 - ADAM_B2) * g * g
+    t = jnp.reshape(t, ())
+    mu_hat = mu / (1.0 - ADAM_B1 ** t)
+    nu_hat = nu / (1.0 - ADAM_B2 ** t)
+    p = p - jnp.reshape(lr, ()) * mu_hat / (jnp.sqrt(nu_hat) + ADAM_EPS)
+    return p, mu, nu
+
+
+# ---------------------------------------------------------------------------
+# calibration steps (Algorithm 1 line 6-9 / Algorithm 2 line 5-10)
+# ---------------------------------------------------------------------------
+
+def _dora_layer_out(x, gp, gn, inv_s, fs, a, b, m, head_batch: int | None):
+    """Unmerged training forward through the hand-VJP Pallas path.
+
+    head_batch=None -> residual block on token rows; otherwise the head:
+    mean-pool to [head_batch, d] first, no residual.
+    """
+    if head_batch is None:
+        y = dk.dora_linear_vjp(x, gp, gn, inv_s, fs, a, b, m, ADC_BITS)
+        return jax.nn.relu(y) + x
+    xp = pool(x, head_batch)
+    return dk.dora_linear_vjp(xp, gp, gn, inv_s, fs, a, b, m, ADC_BITS)
+
+
+def dora_step(x, mask, ft, gp, gn, inv_s, fs, a, b, m,
+              ma, va, mb, vb, mm, vm, t, lr, *,
+              head_batch: int | None):
+    """One feature-calibration Adam step on (A, B, M) for one layer.
+
+    Block mode: x/ft are token rows, mask is a row mask.
+    Head mode:  x is token rows, ft/mask are per-sample.
+    Returns (a', b', m', ma', va', mb', vb', mm', vm', loss, n); rust uses
+    the final `n` for the Algorithm-2 merge.
+    """
+
+    def objective(a_, b_, m_):
+        pred = _dora_layer_out(x, gp, gn, inv_s, fs, a_, b_, m_, head_batch)
+        return ref.masked_mse(pred, ft, mask)
+
+    loss, (ga, gb, gm) = jax.value_and_grad(objective, argnums=(0, 1, 2))(
+        a, b, m)
+    a, ma, va = _adam_update(a, ga, ma, va, t, lr)
+    b, mb, vb = _adam_update(b, gb, mb, vb, t, lr)
+    m, mm, vm = _adam_update(m, gm, mm, vm, t, lr)
+    n = dk.dora_colnorm(gp, gn, inv_s, a, b)
+    return a, b, m, ma, va, mb, vb, mm, vm, jnp.reshape(loss, (1,)), n
+
+
+def _lora_layer_out(x, gp, gn, inv_s, fs, a, b, head_batch: int | None):
+    if head_batch is None:
+        y = ref.lora_linear(x, gp, gn, inv_s, fs, a, b, ADC_BITS)
+        return jax.nn.relu(y) + x
+    xp = pool(x, head_batch)
+    return ref.lora_linear(xp, gp, gn, inv_s, fs, a, b, ADC_BITS)
+
+
+def lora_step(x, mask, ft, gp, gn, inv_s, fs, a, b,
+              ma, va, mb, vb, t, lr, *, head_batch: int | None):
+    """LoRA variant of `dora_step` (Fig. 6 baseline): no magnitude vector."""
+
+    def objective(a_, b_):
+        pred = _lora_layer_out(x, gp, gn, inv_s, fs, a_, b_, head_batch)
+        return ref.masked_mse(pred, ft, mask)
+
+    loss, (ga, gb) = jax.value_and_grad(objective, argnums=(0, 1))(a, b)
+    a, ma, va = _adam_update(a, ga, ma, va, t, lr)
+    b, mb, vb = _adam_update(b, gb, mb, vb, t, lr)
+    return a, b, ma, va, mb, vb, jnp.reshape(loss, (1,))
+
+
+# ---------------------------------------------------------------------------
+# stacked full-network forwards (scan over the block axis)
+# ---------------------------------------------------------------------------
+
+def model_fwd(x, wb, wh, *, batch: int):
+    """Digital forward: teacher, or backprop-calibrated weight snapshot."""
+
+    def body(h, w):
+        return ref.teacher_block(h, w), None
+
+    h, _ = jax.lax.scan(body, x, wb)
+    return ref.teacher_head(pool(h, batch), wh)
+
+
+def student_fwd(x, gp, gn, inv_s, fs, gph, gnh, inv_sh, fsh, *, batch: int):
+    """Drifted, uncalibrated forward (Fig. 2). gp/gn: [L,d,d]; inv_s/fs: [L]."""
+
+    def body(h, layer):
+        lgp, lgn, ls, lf = layer
+        return ref.student_block(h, lgp, lgn, ls, lf, ADC_BITS), None
+
+    h, _ = jax.lax.scan(body, x, (gp, gn, inv_s, fs))
+    return ref.student_head(pool(h, batch), gph, gnh, inv_sh, fsh, ADC_BITS)
+
+
+def dora_model_fwd(x, gp, gn, inv_s, fs, a, b, meff,
+                   gph, gnh, inv_sh, fsh, ah, bh, meffh, *, batch: int):
+    """Calibrated forward, merged adapters. a: [L,d,r], b: [L,r,d], meff: [L,d]."""
+
+    def body(h, layer):
+        lgp, lgn, ls, lf, la, lb, lm = layer
+        return ref.dora_block(h, lgp, lgn, ls, lf, la, lb, lm, ADC_BITS), None
+
+    h, _ = jax.lax.scan(body, x, (gp, gn, inv_s, fs, a, b, meff))
+    return ref.dora_linear_merged(pool(h, batch), gph, gnh, inv_sh, fsh,
+                                  ah, bh, meffh, ADC_BITS)
+
+
+def lora_model_fwd(x, gp, gn, inv_s, fs, a, b,
+                   gph, gnh, inv_sh, fsh, ah, bh, *, batch: int):
+    def body(h, layer):
+        lgp, lgn, ls, lf, la, lb = layer
+        return ref.lora_block(h, lgp, lgn, ls, lf, la, lb, ADC_BITS), None
+
+    h, _ = jax.lax.scan(body, x, (gp, gn, inv_s, fs, a, b))
+    return ref.lora_linear(pool(h, batch), gph, gnh, inv_sh, fsh, ah, bh,
+                           ADC_BITS)
+
+
+# ---------------------------------------------------------------------------
+# backprop baseline (paper §II-B): end-to-end CE, updates EVERY weight
+# ---------------------------------------------------------------------------
+
+def bp_step(x, mask, y_onehot, wb, wh, mwb, vwb, mwh, vwh, t, lr, *,
+            batch: int):
+    """One Adam step of conventional retraining on all weights.
+
+    The rust coordinator charges every updated parameter as an RRAM
+    write-and-verify (endurance + 100 ns/cell latency, Table I).
+    `mask`/`y_onehot` are per-sample; `x` is token rows.
+    """
+
+    def objective(wb_, wh_):
+        logits = model_fwd(x, wb_, wh_, batch=batch)
+        return ref.masked_cross_entropy(logits, y_onehot, mask)
+
+    loss, (gwb, gwh) = jax.value_and_grad(objective, argnums=(0, 1))(wb, wh)
+    wb, mwb, vwb = _adam_update(wb, gwb, mwb, vwb, t, lr)
+    wh, mwh, vwh = _adam_update(wh, gwh, mwh, vwh, t, lr)
+    return wb, wh, mwb, vwb, mwh, vwh, jnp.reshape(loss, (1,))
+
+
+# ---------------------------------------------------------------------------
+# entry-point registry used by aot.py (name -> (fn, arg-shape builder))
+# ---------------------------------------------------------------------------
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def entry_points(spec: ModelSpec):
+    """Yield (name, fn, example_args) for every artifact of one model."""
+    d, c, L = spec.width, spec.n_classes, spec.n_blocks
+    B, E = STEP_BATCH, EVAL_BATCH
+    R, ER = STEP_ROWS, EVAL_ROWS
+    s1 = f32(1)
+
+    out = {}
+    out[f"teacher_block_{spec.name}"] = (teacher_block, [f32(R, d), f32(d, d)])
+    out[f"teacher_head_{spec.name}"] = (
+        functools.partial(teacher_head, batch=B), [f32(R, d), f32(d, c)])
+    out[f"student_block_{spec.name}"] = (
+        student_block, [f32(R, d), f32(d, d), f32(d, d), s1, s1])
+    out[f"model_fwd_{spec.name}"] = (
+        functools.partial(model_fwd, batch=E),
+        [f32(ER, d), f32(L, d, d), f32(d, c)])
+    out[f"student_fwd_{spec.name}"] = (
+        functools.partial(student_fwd, batch=E),
+        [f32(ER, d), f32(L, d, d), f32(L, d, d), f32(L), f32(L),
+         f32(d, c), f32(d, c), s1, s1])
+    out[f"bp_step_{spec.name}"] = (
+        functools.partial(bp_step, batch=B),
+        [f32(R, d), f32(B), f32(B, c), f32(L, d, d), f32(d, c),
+         f32(L, d, d), f32(L, d, d), f32(d, c), f32(d, c), s1, s1])
+
+    for r in spec.ranks:
+        tag = f"{spec.name}_r{r}"
+        out[f"dora_block_{tag}"] = (
+            dora_block,
+            [f32(R, d), f32(d, d), f32(d, d), s1, s1,
+             f32(d, r), f32(r, d), f32(d)])
+        out[f"dora_merge_block_{tag}"] = (
+            dora_merge, [f32(d, d), f32(d, d), s1, f32(d, r), f32(r, d),
+                         f32(d)])
+        out[f"dora_merge_head_{tag}"] = (
+            dora_merge, [f32(d, c), f32(d, c), s1, f32(d, r), f32(r, c),
+                         f32(c)])
+        out[f"dora_step_block_{tag}"] = (
+            functools.partial(dora_step, head_batch=None),
+            [f32(R, d), f32(R), f32(R, d), f32(d, d), f32(d, d), s1, s1,
+             f32(d, r), f32(r, d), f32(d),
+             f32(d, r), f32(d, r), f32(r, d), f32(r, d), f32(d), f32(d),
+             s1, s1])
+        out[f"dora_step_head_{tag}"] = (
+            functools.partial(dora_step, head_batch=B),
+            [f32(R, d), f32(B), f32(B, c), f32(d, c), f32(d, c), s1, s1,
+             f32(d, r), f32(r, c), f32(c),
+             f32(d, r), f32(d, r), f32(r, c), f32(r, c), f32(c), f32(c),
+             s1, s1])
+        out[f"dora_model_fwd_{tag}"] = (
+            functools.partial(dora_model_fwd, batch=E),
+            [f32(ER, d), f32(L, d, d), f32(L, d, d), f32(L), f32(L),
+             f32(L, d, r), f32(L, r, d), f32(L, d),
+             f32(d, c), f32(d, c), s1, s1, f32(d, r), f32(r, c), f32(c)])
+        if spec.with_lora:
+            out[f"lora_block_{tag}"] = (
+                lora_block,
+                [f32(R, d), f32(d, d), f32(d, d), s1, s1, f32(d, r),
+                 f32(r, d)])
+            out[f"lora_step_block_{tag}"] = (
+                functools.partial(lora_step, head_batch=None),
+                [f32(R, d), f32(R), f32(R, d), f32(d, d), f32(d, d), s1, s1,
+                 f32(d, r), f32(r, d),
+                 f32(d, r), f32(d, r), f32(r, d), f32(r, d), s1, s1])
+            out[f"lora_step_head_{tag}"] = (
+                functools.partial(lora_step, head_batch=B),
+                [f32(R, d), f32(B), f32(B, c), f32(d, c), f32(d, c), s1, s1,
+                 f32(d, r), f32(r, c),
+                 f32(d, r), f32(d, r), f32(r, c), f32(r, c), s1, s1])
+            out[f"lora_model_fwd_{tag}"] = (
+                functools.partial(lora_model_fwd, batch=E),
+                [f32(ER, d), f32(L, d, d), f32(L, d, d), f32(L), f32(L),
+                 f32(L, d, r), f32(L, r, d),
+                 f32(d, c), f32(d, c), s1, s1, f32(d, r), f32(r, c)])
+    return out

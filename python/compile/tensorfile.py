@@ -1,0 +1,59 @@
+"""RIMC tensor-bundle binary format (shared with rust/src/util/tensorfile.rs).
+
+Layout (little-endian):
+    magic   8 bytes  b"RIMCTNSR"
+    version u32      currently 1
+    count   u32      number of tensors
+    per tensor:
+        name_len u32, name bytes (utf-8)
+        dtype    u8   0 = f32, 1 = i32
+        ndim     u8
+        dims     ndim x u32
+        data     prod(dims) x 4 bytes
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"RIMCTNSR"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32}
+_DTYPE_IDS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensors(path, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_IDS:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_IDS[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError("bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            dtype_id, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype=_DTYPES[dtype_id])
+            out[name] = data.reshape(dims).copy()
+    return out

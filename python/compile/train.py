@@ -1,0 +1,98 @@
+"""Build-time teacher training (the paper's "DNN trained on GPU").
+
+Trains each MicroNet teacher on its synthetic dataset with Adam + jit.
+Runs once inside `make artifacts`; the resulting weights are written to the
+artifact bundle and never touched again (they are what gets "programmed"
+into the RRAM crossbars by the rust side).
+
+Residual-net initialization: W ~ N(0, (init_gain / sqrt(d * L))^2) keeps the
+pre-activation variance roughly constant through L residual blocks without
+BatchNorm, which mirrors the paper's setting (feature calibration explicitly
+avoids BN updates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    epochs: int = 30
+    batch: int = 128
+    lr: float = 2e-3
+    init_gain: float = 2.2
+    seed: int = 7
+
+
+def init_weights(spec: model_mod.ModelSpec, cfg: TrainConfig):
+    rng = np.random.default_rng(cfg.seed)
+    d, c, L = spec.width, spec.n_classes, spec.n_blocks
+    std = cfg.init_gain / np.sqrt(d * L)
+    wb = rng.normal(0.0, std, size=(L, d, d)).astype(np.float32)
+    wh = rng.normal(0.0, 1.0 / np.sqrt(d), size=(d, c)).astype(np.float32)
+    return jnp.asarray(wb), jnp.asarray(wh)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",),
+                   donate_argnums=(0, 1, 2, 3, 4, 5))
+def _train_step(wb, wh, mwb, vwb, mwh, vwh, t, x_rows, y_onehot, lr, batch):
+    mask = jnp.ones((batch,), jnp.float32)
+    return model_mod.bp_step(x_rows, mask, y_onehot, wb, wh, mwb, vwb, mwh,
+                             vwh, t, lr, batch=batch)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def _logits(wb, wh, x_rows, batch):
+    return model_mod.model_fwd(x_rows, wb, wh, batch=batch)
+
+
+def accuracy(wb, wh, x, y, batch: int = 256) -> float:
+    """x: [N, T, d] token grids; evaluated in fixed-size chunks."""
+    correct = 0
+    n = (len(x) // batch) * batch if len(x) >= batch else len(x)
+    for i in range(0, n, batch):
+        xs = x[i:i + batch]
+        rows = jnp.asarray(xs.reshape(-1, xs.shape[-1]))
+        lg = _logits(wb, wh, rows, len(xs))
+        correct += int((np.argmax(np.asarray(lg), axis=1)
+                        == y[i:i + batch]).sum())
+    return correct / max(n, 1)
+
+
+def train_teacher(spec: model_mod.ModelSpec, ds: data_mod.SyntheticDataset,
+                  cfg: TrainConfig = TrainConfig(), verbose: bool = True):
+    """Returns (wb [L,d,d], wh [d,C], eval_accuracy)."""
+    wb, wh = init_weights(spec, cfg)
+    mwb, vwb = jnp.zeros_like(wb), jnp.zeros_like(wb)
+    mwh, vwh = jnp.zeros_like(wh), jnp.zeros_like(wh)
+    x, y = ds.train_x, ds.train_y
+    onehot = np.eye(spec.n_classes, dtype=np.float32)[y]
+    rng = np.random.default_rng(cfg.seed + 1)
+    lr = jnp.asarray([cfg.lr], jnp.float32)
+    t = 0
+    for epoch in range(cfg.epochs):
+        perm = rng.permutation(len(x))
+        for i in range(0, len(x) - cfg.batch + 1, cfg.batch):
+            idx = perm[i:i + cfg.batch]
+            t += 1
+            rows = x[idx].reshape(-1, x.shape[-1])
+            out = _train_step(wb, wh, mwb, vwb, mwh, vwh,
+                              jnp.asarray([float(t)], jnp.float32),
+                              jnp.asarray(rows), jnp.asarray(onehot[idx]),
+                              lr, cfg.batch)
+            wb, wh, mwb, vwb, mwh, vwh, loss = out
+        if verbose and (epoch % 5 == 4 or epoch == cfg.epochs - 1):
+            acc = accuracy(wb, wh, ds.eval_x, ds.eval_y)
+            print(f"  [{spec.name}] epoch {epoch + 1:3d} "
+                  f"loss={float(loss[0]):.4f} eval_acc={acc:.4f}")
+    acc = accuracy(wb, wh, ds.eval_x, ds.eval_y)
+    return np.asarray(wb), np.asarray(wh), acc

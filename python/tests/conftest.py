@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_programmed(rng, d, k, gmax=100.0, wstd=0.2):
+    """Random weight -> differential conductance pair (no drift)."""
+    w = rng.normal(0, wstd, size=(d, k)).astype(np.float32)
+    wmax = float(np.abs(w).max()) + 1e-9
+    ws = gmax / wmax
+    gp = np.maximum(w, 0) * ws
+    gn = np.maximum(-w, 0) * ws
+    return w, gp.astype(np.float32), gn.astype(np.float32), np.float32(1 / ws)

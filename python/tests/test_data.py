@@ -1,0 +1,81 @@
+"""Dataset generator invariants."""
+
+import numpy as np
+
+from compile import data as data_mod
+from compile.tensorfile import read_tensors, write_tensors
+
+
+class TestSyntheticDataset:
+    def test_determinism(self):
+        a = data_mod.make_dataset(data_mod.SPECS["m20"])
+        b = data_mod.make_dataset(data_mod.SPECS["m20"])
+        np.testing.assert_array_equal(a.train_x, b.train_x)
+        np.testing.assert_array_equal(a.eval_y, b.eval_y)
+
+    def test_shapes(self):
+        spec = data_mod.SPECS["m20"]
+        ds = data_mod.make_dataset(spec)
+        assert ds.train_x.shape == (spec.n_train, data_mod.TOKENS, spec.dim)
+        assert ds.calib_x.shape == (spec.n_calib, data_mod.TOKENS, spec.dim)
+        assert ds.eval_x.shape == (spec.n_eval, data_mod.TOKENS, spec.dim)
+        assert ds.train_y.shape == (spec.n_train,)
+        assert ds.train_y.dtype == np.int32
+
+    def test_standardized(self):
+        ds = data_mod.make_dataset(data_mod.SPECS["m20"])
+        flat = ds.train_x.reshape(-1, ds.spec.dim)
+        # standardization used population stats over ALL splits
+        assert abs(float(flat.mean())) < 0.05
+        assert 0.8 < float(flat.std()) < 1.2
+
+    def test_labels_cover_classes(self):
+        spec = data_mod.SPECS["m20"]
+        ds = data_mod.make_dataset(spec)
+        assert set(np.unique(ds.train_y)) == set(range(spec.n_classes))
+
+    def test_tokens_within_sample_correlated(self):
+        """Patch tokens share a per-sample latent -> within-sample token
+        correlation must exceed across-sample correlation (the property
+        that keeps Fig. 4's dataset-size axis meaningful)."""
+        ds = data_mod.make_dataset(data_mod.SPECS["m20"])
+        x = ds.train_x[:512]
+        within = np.mean([
+            np.corrcoef(x[i, 0], x[i, 1])[0, 1] for i in range(256)])
+        across = np.mean([
+            np.corrcoef(x[i, 0], x[i + 256, 0])[0, 1] for i in range(256)])
+        assert within > across + 0.1
+
+    def test_splits_disjoint_samples(self):
+        ds = data_mod.make_dataset(data_mod.SPECS["m20"])
+        # different splits must not share identical rows
+        a = ds.train_x[:200].reshape(200, -1)
+        b = ds.calib_x[:200].reshape(200, -1)
+        d = np.abs(a[:, None, :] - b[None, :, :]).sum(axis=2)
+        assert d.min() > 1e-3
+
+
+class TestTensorFile:
+    def test_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "a": rng.normal(size=(3, 4, 5)).astype(np.float32),
+            "b": rng.integers(0, 100, size=(7,)).astype(np.int32),
+            "scalar_ish": np.asarray([3.25], np.float32),
+        }
+        p = tmp_path / "t.bin"
+        write_tensors(p, tensors)
+        back = read_tensors(p)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_bad_magic_rejected(self, tmp_path):
+        p = tmp_path / "bad.bin"
+        p.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+        try:
+            read_tensors(p)
+            assert False, "should have raised"
+        except ValueError:
+            pass

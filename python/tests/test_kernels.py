@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value ranges; every kernel must match ref to
+float32 tolerance for all of them.  This is the CORE correctness signal of
+the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import crossbar as xb
+from compile.kernels import dora as dk
+from compile.kernels import ref
+
+from .conftest import make_programmed
+
+ATOL = 2e-5
+
+
+def _rand_case(seed, bsz, d, k, r):
+    rng = np.random.default_rng(seed)
+    w, gp, gn, inv = make_programmed(rng, d, k)
+    x = rng.normal(0, 1, size=(bsz, d)).astype(np.float32)
+    a = rng.normal(0, 0.1, size=(d, r)).astype(np.float32)
+    b = rng.normal(0, 0.1, size=(r, k)).astype(np.float32)
+    m = rng.uniform(0.5, 2.0, size=(k,)).astype(np.float32)
+    fs = np.float32(max(4.0, 3 * np.sqrt(d) * 0.2))
+    return (jnp.asarray(x), jnp.asarray(gp), jnp.asarray(gn),
+            jnp.asarray([inv]), jnp.asarray([fs]), jnp.asarray(a),
+            jnp.asarray(b), jnp.asarray(m))
+
+
+shape_strategy = st.tuples(
+    st.integers(0, 2 ** 31 - 1),            # seed
+    st.sampled_from([1, 3, 8, 32, 64, 100]),  # batch
+    st.sampled_from([16, 64, 96]),          # d
+    st.sampled_from([16, 64, 100]),         # k
+    st.sampled_from([1, 2, 4, 8]),          # r
+)
+
+
+class TestCrossbarKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(shape_strategy)
+    def test_matches_ref(self, case):
+        seed, bsz, d, k, r = case
+        x, gp, gn, inv, fs, *_ = _rand_case(seed, bsz, d, k, r)
+        got = xb.crossbar_mvm(x, gp, gn, inv, fs, adc_bits=8)
+        want = ref.crossbar_mvm(x, gp, gn, inv, fs, 8)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 4, 6, 8, 12]))
+    def test_adc_bits_sweep(self, seed, bits):
+        x, gp, gn, inv, fs, *_ = _rand_case(seed, 16, 64, 64, 2)
+        got = xb.crossbar_mvm(x, gp, gn, inv, fs, adc_bits=bits)
+        want = ref.crossbar_mvm(x, gp, gn, inv, fs, bits)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    def test_quantization_levels(self):
+        """ADC output must live on the quantization grid."""
+        x, gp, gn, inv, fs, *_ = _rand_case(7, 8, 64, 64, 1)
+        y = np.asarray(xb.crossbar_mvm(x, gp, gn, inv, fs, adc_bits=6))
+        lsb = float(fs[0]) / 2 ** 5
+        np.testing.assert_allclose(y / lsb, np.round(y / lsb), atol=1e-3)
+
+    def test_zero_drift_recovers_weights(self):
+        """No-drift programming + wide ADC ~= exact matmul."""
+        rng = np.random.default_rng(0)
+        w, gp, gn, inv = make_programmed(rng, 64, 64)
+        x = rng.normal(size=(32, 64)).astype(np.float32)
+        # 16-bit ADC with a full-scale just above the signal range:
+        # lsb ~ 1e-3, so the readout is effectively exact.
+        y = xb.crossbar_mvm(jnp.asarray(x), jnp.asarray(gp), jnp.asarray(gn),
+                            jnp.asarray([inv]), jnp.asarray([32.0]),
+                            adc_bits=16)
+        np.testing.assert_allclose(np.asarray(y), x @ w, atol=2e-2)
+
+    def test_batch_not_multiple_of_block(self):
+        x, gp, gn, inv, fs, *_ = _rand_case(3, 70, 64, 64, 1)
+        got = xb.crossbar_mvm(x, gp, gn, inv, fs, adc_bits=8, block_b=32)
+        want = ref.crossbar_mvm(x, gp, gn, inv, fs, 8)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    def test_vmem_accounting(self):
+        assert xb.vmem_bytes(64, 64, 64) == 4 * (64 * 64 * 3 + 64 * 64)
+        assert xb.vmem_bytes(64, 96, 96) < xb.VMEM_BUDGET_BYTES
+
+
+class TestDoraKernels:
+    @settings(max_examples=25, deadline=None)
+    @given(shape_strategy)
+    def test_colnorm_matches_ref(self, case):
+        seed, bsz, d, k, r = case
+        x, gp, gn, inv, fs, a, b, m = _rand_case(seed, bsz, d, k, r)
+        got = dk.dora_colnorm(gp, gn, inv, a, b)
+        wr = ref.weights_from_conductance(gp, gn, jnp.reshape(inv, ()))
+        want = ref.dora_colnorm(wr, a, b)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(shape_strategy)
+    def test_fused_forward_matches_ref(self, case):
+        seed, bsz, d, k, r = case
+        x, gp, gn, inv, fs, a, b, m = _rand_case(seed, bsz, d, k, r)
+        meff = m  # any positive vector works as a merged magnitude
+        got = dk.dora_mvm(x, gp, gn, inv, fs, a, b, meff, adc_bits=8)
+        want = ref.dora_linear_merged(x, gp, gn, inv, fs, a, b, meff, 8)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(shape_strategy)
+    def test_vjp_forward_matches_ref(self, case):
+        seed, bsz, d, k, r = case
+        x, gp, gn, inv, fs, a, b, m = _rand_case(seed, bsz, d, k, r)
+        got = dk.dora_linear_vjp(x, gp, gn, inv, fs, a, b, m, 8)
+        want, _ = ref.dora_linear(x, gp, gn, inv, fs, a, b, m, 8)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 2, 4, 8]))
+    def test_hand_vjp_matches_autodiff(self, seed, r):
+        """The hand-derived (A, B, M) gradients == jax.grad of the oracle."""
+        x, gp, gn, inv, fs, a, b, m = _rand_case(seed, 16, 64, 64, r)
+        tgt = jnp.zeros((16, 64), jnp.float32)
+
+        def loss_ref(a_, b_, m_):
+            y, _ = ref.dora_linear(x, gp, gn, inv, fs, a_, b_, m_, 8)
+            return jnp.mean((y - tgt) ** 2)
+
+        def loss_vjp(a_, b_, m_):
+            y = dk.dora_linear_vjp(x, gp, gn, inv, fs, a_, b_, m_, 8)
+            return jnp.mean((y - tgt) ** 2)
+
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(a, b, m)
+        gk = jax.grad(loss_vjp, argnums=(0, 1, 2))(a, b, m)
+        for u, v in zip(gr, gk):
+            scale = float(jnp.abs(u).max()) + 1e-12
+            np.testing.assert_allclose(np.asarray(v), np.asarray(u),
+                                       atol=1e-5 + 1e-4 * scale)
+
+    def test_merge_identity_at_init(self):
+        """B=0, M=||W_r||_c  =>  DoRA output == plain crossbar output."""
+        x, gp, gn, inv, fs, a, b, m = _rand_case(5, 32, 64, 64, 4)
+        b0 = jnp.zeros_like(b)
+        wr = ref.weights_from_conductance(gp, gn, jnp.reshape(inv, ()))
+        m0 = jnp.sqrt(jnp.sum(wr * wr, axis=0) + ref.NORM_EPS)
+        y, n = ref.dora_linear(x, gp, gn, inv, fs, a, b0, m0, 8)
+        z = ref.crossbar_mvm(x, gp, gn, inv, fs, 8)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(z), atol=1e-4,
+                                   rtol=1e-4)
+
+    def test_lora_is_dora_without_magnitude(self):
+        x, gp, gn, inv, fs, a, b, m = _rand_case(9, 8, 64, 64, 2)
+        lora = ref.lora_linear(x, gp, gn, inv, fs, a, b, 8)
+        ones_meff = jnp.ones((64,), jnp.float32)
+        dora = ref.dora_linear_merged(x, gp, gn, inv, fs, a, b, ones_meff, 8)
+        np.testing.assert_allclose(np.asarray(lora), np.asarray(dora),
+                                   atol=ATOL)
+
+    def test_dora_vmem_accounting(self):
+        assert dk.dora_vmem_bytes(64, 96, 96, 8) < xb.VMEM_BUDGET_BYTES

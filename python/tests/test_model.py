@@ -1,0 +1,292 @@
+"""L2 correctness: model graphs, calibration steps, parameter accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as data_mod
+from compile import model as model_mod
+from compile.kernels import ref
+
+from .conftest import make_programmed
+
+T = data_mod.TOKENS
+
+
+def tiny_spec():
+    return model_mod.ModelSpec("tiny", n_blocks=3, width=16, n_classes=8,
+                               ranks=(1, 2), with_lora=True)
+
+
+def random_net(rng, spec):
+    L, d, c = spec.n_blocks, spec.width, spec.n_classes
+    wb = rng.normal(0, 0.5 / np.sqrt(d * L), size=(L, d, d)).astype(np.float32)
+    wh = rng.normal(0, 1 / np.sqrt(d), size=(d, c)).astype(np.float32)
+    return wb, wh
+
+
+class TestPool:
+    def test_pool_shape_and_value(self):
+        x = np.arange(2 * T * 4, dtype=np.float32).reshape(2 * T, 4)
+        p = np.asarray(model_mod.pool(jnp.asarray(x), 2))
+        assert p.shape == (2, 4)
+        np.testing.assert_allclose(p[0], x[:T].mean(axis=0), rtol=1e-6)
+
+    def test_pool_of_constant_rows(self):
+        x = jnp.ones((3 * T, 5))
+        np.testing.assert_allclose(np.asarray(model_mod.pool(x, 3)), 1.0)
+
+
+class TestStackedForwards:
+    def test_model_fwd_equals_layerwise(self, rng):
+        spec = tiny_spec()
+        wb, wh = random_net(rng, spec)
+        x = rng.normal(size=(4 * T, spec.width)).astype(np.float32)
+        h = jnp.asarray(x)
+        for l in range(spec.n_blocks):
+            h = ref.teacher_block(h, jnp.asarray(wb[l]))
+        want = ref.teacher_head(model_mod.pool(h, 4), jnp.asarray(wh))
+        got = model_mod.model_fwd(jnp.asarray(x), jnp.asarray(wb),
+                                  jnp.asarray(wh), batch=4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+    def test_student_fwd_zero_drift_close_to_teacher(self, rng):
+        spec = tiny_spec()
+        wb, wh = random_net(rng, spec)
+        gps, gns, invs = [], [], []
+        for l in range(spec.n_blocks):
+            _, gp, gn, inv = make_programmed(rng, spec.width, spec.width)
+            # overwrite with the actual teacher weights programmed exactly
+            w = wb[l]
+            ws = 100.0 / (np.abs(w).max() + 1e-9)
+            gps.append((np.maximum(w, 0) * ws).astype(np.float32))
+            gns.append((np.maximum(-w, 0) * ws).astype(np.float32))
+            invs.append(np.float32(1 / ws))
+        w = wh
+        ws = 100.0 / (np.abs(w).max() + 1e-9)
+        gph = (np.maximum(w, 0) * ws).astype(np.float32)
+        gnh = (np.maximum(-w, 0) * ws).astype(np.float32)
+        invh = np.float32(1 / ws)
+
+        x = rng.normal(size=(4 * T, spec.width)).astype(np.float32)
+        teacher = model_mod.model_fwd(jnp.asarray(x), jnp.asarray(wb),
+                                      jnp.asarray(wh), batch=4)
+        fs = jnp.full((spec.n_blocks,), 8.0, jnp.float32)  # lsb ~ 0.06
+        student = model_mod.student_fwd(
+            jnp.asarray(x), jnp.asarray(np.stack(gps)),
+            jnp.asarray(np.stack(gns)), jnp.asarray(np.array(invs)), fs,
+            jnp.asarray(gph), jnp.asarray(gnh), jnp.asarray([invh]),
+            jnp.asarray([8.0]), batch=4)
+        np.testing.assert_allclose(np.asarray(student), np.asarray(teacher),
+                                   atol=0.2)
+
+    def test_dora_model_fwd_identity_adapters(self, rng):
+        """meff=1, B=0  =>  dora_model_fwd == student_fwd."""
+        spec = tiny_spec()
+        L, d, c, r = spec.n_blocks, spec.width, spec.n_classes, 2
+        wb, wh = random_net(rng, spec)
+        gp = rng.uniform(0, 50, size=(L, d, d)).astype(np.float32)
+        gn = rng.uniform(0, 50, size=(L, d, d)).astype(np.float32)
+        inv = np.full((L,), 0.002, np.float32)
+        fs = np.full((L,), 50.0, np.float32)
+        gph = rng.uniform(0, 50, size=(d, c)).astype(np.float32)
+        gnh = rng.uniform(0, 50, size=(d, c)).astype(np.float32)
+        x = rng.normal(size=(4 * T, d)).astype(np.float32)
+        a = rng.normal(0, 0.1, size=(L, d, r)).astype(np.float32)
+        b = np.zeros((L, r, d), np.float32)
+        meff = np.ones((L, d), np.float32)
+        ah = rng.normal(0, 0.1, size=(d, r)).astype(np.float32)
+        bh = np.zeros((r, c), np.float32)
+        meffh = np.ones((c,), np.float32)
+        args = [jnp.asarray(v) for v in
+                (x, gp, gn, inv, fs, a, b, meff, gph, gnh)]
+        got = model_mod.dora_model_fwd(
+            *args, jnp.asarray([0.002]), jnp.asarray([50.0]),
+            jnp.asarray(ah), jnp.asarray(bh), jnp.asarray(meffh), batch=4)
+        want = model_mod.student_fwd(
+            args[0], args[1], args[2], args[3], args[4], args[8], args[9],
+            jnp.asarray([0.002]), jnp.asarray([50.0]), batch=4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+
+
+class TestCalibrationSteps:
+    def _setup(self, rng, r=2, head=False):
+        spec = tiny_spec()
+        d = spec.width
+        k = spec.n_classes if head else d
+        w, gp, gn, inv = make_programmed(rng, d, k)
+        batch = 4
+        x = rng.normal(size=(batch * T, d)).astype(np.float32)
+        # realistic target: the CLEAN layer's output; the student weight is
+        # a drifted version of w (this is what calibration actually faces)
+        drift = (w * (1 + 0.3 * rng.normal(size=w.shape))).astype(np.float32)
+        ws = 100.0 / (np.abs(drift).max() + 1e-9)
+        gp = (np.maximum(drift, 0) * ws).astype(np.float32)
+        gn = (np.maximum(-drift, 0) * ws).astype(np.float32)
+        inv = np.float32(1 / ws)
+        if head:
+            xp = x.reshape(batch, T, d).mean(axis=1)
+            ft = (xp @ w).astype(np.float32)
+            mask = np.ones((batch,), np.float32)
+        else:
+            ft = (np.maximum(x @ w, 0) + x).astype(np.float32)
+            mask = np.ones((batch * T,), np.float32)
+        a = rng.normal(0, 1 / np.sqrt(d), size=(d, r)).astype(np.float32)
+        b = np.zeros((r, k), np.float32)
+        wr = (gp - gn) * inv
+        m = np.sqrt((wr * wr).sum(axis=0) + 1e-8).astype(np.float32)
+        return (spec, batch,
+                [jnp.asarray(v) for v in (x, mask, ft, gp, gn)],
+                jnp.asarray([inv]), jnp.asarray([8.0]),
+                jnp.asarray(a), jnp.asarray(b), jnp.asarray(m))
+
+    def _zeros_state(self, a, b, m):
+        return [jnp.zeros_like(v) for v in (a, a, b, b, m, m)]
+
+    @pytest.mark.parametrize("head", [False, True])
+    def test_loss_decreases(self, rng, head):
+        spec, batch, (x, mask, ft, gp, gn), inv, fs, a, b, m = \
+            self._setup(rng, head=head)
+        hb = batch if head else None
+        st = self._zeros_state(a, b, m)
+        losses = []
+        for t in range(1, 41):
+            out = model_mod.dora_step(
+                x, mask, ft, gp, gn, inv, fs, a, b, m, *st,
+                jnp.asarray([float(t)]), jnp.asarray([0.02]), head_batch=hb)
+            a, b, m, *st, loss, n = out
+            losses.append(float(loss[0]))
+        assert losses[-1] < 0.5 * losses[0]
+
+    def test_mask_excludes_padding(self, rng):
+        """Step result must be invariant to garbage in masked rows."""
+        spec, batch, (x, mask, ft, gp, gn), inv, fs, a, b, m = \
+            self._setup(rng)
+        mask = np.ones((batch * T,), np.float32)
+        mask[2 * T:] = 0.0
+        x2 = np.asarray(x).copy()
+        x2[2 * T:] = 999.0
+        st = self._zeros_state(a, b, m)
+        t1 = model_mod.dora_step(
+            x, jnp.asarray(mask), ft, gp, gn, inv, fs, a, b, m, *st,
+            jnp.asarray([1.0]), jnp.asarray([0.02]), head_batch=None)
+        t2 = model_mod.dora_step(
+            jnp.asarray(x2), jnp.asarray(mask), ft, gp, gn, inv, fs, a, b,
+            m, *st, jnp.asarray([1.0]), jnp.asarray([0.02]), head_batch=None)
+        np.testing.assert_allclose(np.asarray(t1[0]), np.asarray(t2[0]),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(t1[9]), np.asarray(t2[9]),
+                                   atol=1e-6)
+
+    def test_lora_step_loss_decreases(self, rng):
+        spec, batch, (x, mask, ft, gp, gn), inv, fs, a, b, m = \
+            self._setup(rng)
+        st = [jnp.zeros_like(v) for v in (a, a, b, b)]
+        losses = []
+        for t in range(1, 41):
+            out = model_mod.lora_step(
+                x, mask, ft, gp, gn, inv, fs, a, b, *st,
+                jnp.asarray([float(t)]), jnp.asarray([0.02]),
+                head_batch=None)
+            a, b, *st, loss = out
+            losses.append(float(loss[0]))
+        assert losses[-1] < 0.6 * losses[0]
+
+    def test_dora_merge_matches_ref(self, rng):
+        d, k, r = 16, 16, 2
+        w, gp, gn, inv = make_programmed(rng, d, k)
+        a = rng.normal(0, 0.1, size=(d, r)).astype(np.float32)
+        b = rng.normal(0, 0.1, size=(r, k)).astype(np.float32)
+        m = rng.uniform(0.5, 2, size=(k,)).astype(np.float32)
+        meff = model_mod.dora_merge(jnp.asarray(gp), jnp.asarray(gn),
+                                    jnp.asarray([inv]), jnp.asarray(a),
+                                    jnp.asarray(b), jnp.asarray(m))
+        wr = (gp - gn) * inv
+        n = ref.dora_colnorm(jnp.asarray(wr), jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(meff), np.asarray(m / n),
+                                   rtol=1e-5)
+
+    def test_bp_step_loss_decreases(self, rng):
+        spec = tiny_spec()
+        wb, wh = random_net(rng, spec)
+        batch = 8
+        x = rng.normal(size=(batch * T, spec.width)).astype(np.float32)
+        y = rng.integers(0, spec.n_classes, size=batch)
+        onehot = np.eye(spec.n_classes, dtype=np.float32)[y]
+        mask = np.ones((batch,), np.float32)
+        wb, wh = jnp.asarray(wb), jnp.asarray(wh)
+        st = [jnp.zeros_like(wb), jnp.zeros_like(wb),
+              jnp.zeros_like(wh), jnp.zeros_like(wh)]
+        losses = []
+        for t in range(1, 31):
+            out = model_mod.bp_step(
+                jnp.asarray(x), jnp.asarray(mask), jnp.asarray(onehot),
+                wb, wh, *st, jnp.asarray([float(t)]), jnp.asarray([0.01]),
+                batch=batch)
+            wb, wh, *st, loss = out
+            losses.append(float(loss[0]))
+        assert losses[-1] < 0.7 * losses[0]
+
+
+class TestParameterAccounting:
+    """Paper §IV-C: gamma = (d*r + r*k + k) / (d*k), per-network totals."""
+
+    def test_gamma_single_layer_formula(self):
+        # paper example shapes: gamma shrinks as the model grows
+        m20 = model_mod.SPECS["m20"]
+        m50 = model_mod.SPECS["m50"]
+        assert m50.gamma(1) < m20.gamma(1)
+
+    def test_gamma_monotone_in_rank(self):
+        spec = model_mod.SPECS["m20"]
+        gammas = [spec.gamma(r) for r in (1, 2, 4, 8)]
+        assert all(g1 < g2 for g1, g2 in zip(gammas, gammas[1:]))
+
+    def test_headline_ratio_band(self):
+        """Paper headline: 2.34% trainable params (ResNet-50, r=4).
+
+        Our m50 substitution must land in the same band (~1-6%) at the
+        paper's rank so Table I reproduces its shape.
+        """
+        # Our m50 is width-96 (vs ResNet-50's up-to-2048-wide im2col
+        # matrices), so gamma at r=4 lands ~9% rather than the paper's
+        # 2.34%; the *relations* (shrinks with width, grows with r) are
+        # what must hold. The paper's exact numbers are reproduced
+        # analytically from real ResNet dims in rust metrics::params.
+        g = model_mod.SPECS["m50"].gamma(4)
+        assert 0.05 < g < 0.15, g
+
+    def test_dora_params_count_exact(self):
+        spec = tiny_spec()
+        d, c, L, r = spec.width, spec.n_classes, spec.n_blocks, 2
+        want = L * (d * r + r * d + d) + (d * r + r * c + c)
+        assert spec.dora_params(r) == want
+
+
+class TestEntryPointRegistry:
+    def test_all_expected_entries_present(self):
+        spec = model_mod.SPECS["m20"]
+        eps = model_mod.entry_points(spec)
+        for r in spec.ranks:
+            for fam in ("dora_block", "dora_step_block", "dora_step_head",
+                        "dora_model_fwd", "dora_merge_block",
+                        "dora_merge_head", "lora_block", "lora_step_block",
+                        "lora_step_head", "lora_model_fwd"):
+                assert f"{fam}_m20_r{r}" in eps
+        for fam in ("teacher_block", "teacher_head", "student_block",
+                    "model_fwd", "student_fwd", "bp_step"):
+            assert f"{fam}_m20" in eps
+
+    def test_m50_has_no_lora(self):
+        eps = model_mod.entry_points(model_mod.SPECS["m50"])
+        assert not any(k.startswith("lora") for k in eps)
+
+    def test_entry_point_shapes_lower(self):
+        """Every tiny-spec entry point traces and lowers to StableHLO."""
+        spec = tiny_spec()
+        eps = model_mod.entry_points(spec)
+        for name, (fn, args) in eps.items():
+            jax.jit(fn).lower(*args)  # raises on shape bugs

@@ -1,0 +1,72 @@
+//! Crossbar-substrate microbenchmarks: write-and-verify programming
+//! throughput, drift evolution, sense-amp readout — the L3-side costs of
+//! every sweep iteration.
+
+use rimc_dora::device::{DriftModel, ProgramModel};
+use rimc_dora::rram::Crossbar;
+use rimc_dora::util::bench::Harness;
+use rimc_dora::util::rng::Rng;
+use rimc_dora::util::tensor::Tensor;
+
+fn weights(seed: u64, rows: usize, cols: usize) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::new(
+        vec![rows, cols],
+        (0..rows * cols)
+            .map(|_| rng.normal_scaled(0.0, 0.2) as f32)
+            .collect(),
+    )
+    .unwrap()
+}
+
+fn main() {
+    let mut h = Harness::new(2, 15);
+
+    for (rows, cols) in [(64usize, 64usize), (96, 96), (96, 100)] {
+        let w = weights(1, rows, cols);
+        let w_max = w.max_abs() as f64 + 1e-9;
+        let cells = 2 * rows * cols;
+        let mean = h.bench(
+            &format!("program_weights {rows}x{cols} ({cells} devices)"),
+            || {
+                Crossbar::program_weights(
+                    &w,
+                    w_max,
+                    DriftModel::with_rel(0.2),
+                    ProgramModel::default(),
+                    7,
+                )
+                .unwrap();
+            },
+        );
+        println!(
+            "    -> {:.1} Mdevices/s simulated programming throughput",
+            cells as f64 / mean * 1e3
+        );
+    }
+
+    let w = weights(2, 96, 96);
+    let mut xb = Crossbar::program_weights(
+        &w,
+        w.max_abs() as f64 + 1e-9,
+        DriftModel::with_rel(0.2),
+        ProgramModel::default(),
+        8,
+    )
+    .unwrap();
+    h.bench("apply_saturated_drift 96x96", || {
+        xb.apply_saturated_drift();
+    });
+    h.bench("advance_time 96x96", || {
+        xb.advance_time(1.0);
+    });
+    h.bench("read_weights 96x96", || {
+        let _ = xb.read_weights();
+    });
+    h.bench("gp/gn tensor extraction 96x96", || {
+        let _ = xb.gp_tensor();
+        let _ = xb.gn_tensor();
+    });
+
+    h.print_summary("crossbar simulator substrate");
+}

@@ -1,0 +1,42 @@
+//! Fig. 2 reproduction: accuracy vs relative conductance drift, both
+//! models, no calibration. Run: `cargo bench --bench fig2_drift`.
+//! Paper shape: monotone degradation; the deeper net (m50 ~ ResNet-50)
+//! falls faster than the shallow one (m20 ~ ResNet-20).
+
+use std::path::Path;
+use std::time::Instant;
+
+use rimc_dora::coordinator::{fig2_drift_sweep, Engine};
+use rimc_dora::util::bench::print_table;
+
+fn main() {
+    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
+    let drifts = [0.0, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30];
+    for model in ["m20", "m50"] {
+        let t0 = Instant::now();
+        let session = eng.session(model).unwrap();
+        let seeds: &[u64] = if model == "m20" { &[3, 4, 5] } else { &[3, 4] };
+        let rows = fig2_drift_sweep(&session, &drifts, seeds).unwrap();
+        print_table(
+            &format!(
+                "Fig. 2 ({model}) — accuracy vs relative drift \
+                 [paper: ResNet-{} monotone degradation]",
+                if model == "m20" { "20" } else { "50" }
+            ),
+            &["rel drift", "acc mean", "acc min", "acc max", "teacher"],
+            &rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        format!("{:.2}", r.rel_drift),
+                        format!("{:.4}", r.accuracy_mean),
+                        format!("{:.4}", r.accuracy_min),
+                        format!("{:.4}", r.accuracy_max),
+                        format!("{:.4}", r.teacher_acc),
+                    ]
+                })
+                .collect::<Vec<_>>(),
+        );
+        println!("({model} sweep took {:.1}s)", t0.elapsed().as_secs_f64());
+    }
+}

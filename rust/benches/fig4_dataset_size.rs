@@ -1,0 +1,66 @@
+//! Fig. 4 reproduction: accuracy vs calibration-dataset size,
+//! feature-based DoRA vs backpropagation, at 20% relative drift.
+//! Paper shape: feature-DoRA wins at every small n; one sample already
+//! improves over pre-calibration while backprop with one sample lands at
+//! or below it; feature@10 ~ backprop@(much larger n).
+//!
+//! `RIMC_FIG4_FULL=1 cargo bench --bench fig4_dataset_size` adds the
+//! paper's 2000-sample backprop point on m20 (slow).
+
+use std::path::Path;
+use std::time::Instant;
+
+use rimc_dora::calib::{BackpropConfig, CalibConfig};
+use rimc_dora::coordinator::{fig4_dataset_size_sweep, Engine};
+use rimc_dora::util::bench::print_table;
+
+fn main() {
+    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
+    let full = std::env::var("RIMC_FIG4_FULL").is_ok();
+
+    // m20 at r=2 (paper: CIFAR-100, r=2); m50 at r=4 (paper: ImageNet, r=4)
+    let plans: &[(&str, usize, Vec<usize>)] = &[
+        ("m20", 2, {
+            let mut v = vec![1, 2, 5, 10, 20, 50, 100];
+            if full {
+                v.push(2000);
+            }
+            v
+        }),
+        ("m50", 4, vec![1, 10, 50, 125]),
+    ];
+
+    for (model, rank, sizes) in plans {
+        let t0 = Instant::now();
+        let session = eng.session(model).unwrap();
+        let rows = fig4_dataset_size_sweep(
+            &session,
+            0.2,
+            *rank,
+            sizes,
+            &CalibConfig::default(),
+            &BackpropConfig::default(),
+            3,
+        )
+        .unwrap();
+        print_table(
+            &format!(
+                "Fig. 4 ({model}, r={rank}) — accuracy vs calibration-set \
+                 size at 20% drift"
+            ),
+            &["n", "feature-DoRA", "backprop", "pre-calib"],
+            &rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.n_samples.to_string(),
+                        format!("{:.4}", r.feature_dora_acc),
+                        format!("{:.4}", r.backprop_acc),
+                        format!("{:.4}", r.pre_calib_acc),
+                    ]
+                })
+                .collect::<Vec<_>>(),
+        );
+        println!("({model} sweep took {:.1}s)", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,140 @@
+//! Minibatch assembly for the fixed-shape step artifacts.
+//!
+//! The AOT step executables are lowered at a static batch of
+//! `step_batch` samples (`step_batch * tokens` rows); real calibration
+//! sets of any size are chunked and the tail chunk zero-padded, with row
+//! and sample masks zeroing padding out of the loss (ref.masked_mse).
+
+use anyhow::{bail, Result};
+
+use crate::util::tensor::Tensor;
+
+/// One padded minibatch of calibration samples.
+#[derive(Debug, Clone)]
+pub struct CalibBatch {
+    /// [step_batch * tokens, d] token rows (padding rows are zero)
+    pub x_rows: Tensor,
+    /// [step_batch * tokens] row mask
+    pub row_mask: Tensor,
+    /// [step_batch] sample mask
+    pub sample_mask: Tensor,
+    /// [step_batch, n_classes] one-hot labels (padding rows zero)
+    pub y_onehot: Tensor,
+    /// real (unpadded) samples in this batch
+    pub n_real: usize,
+}
+
+/// Chunk `[N, T, d]` samples into padded `CalibBatch`es.
+pub fn make_batches(
+    x: &Tensor,
+    y: &[usize],
+    step_batch: usize,
+    n_classes: usize,
+) -> Result<Vec<CalibBatch>> {
+    let s = x.shape().to_vec();
+    if s.len() != 3 {
+        bail!("make_batches wants [N,T,d], got {s:?}");
+    }
+    let (n, t, d) = (s[0], s[1], s[2]);
+    if y.len() != n {
+        bail!("labels {} != samples {n}", y.len());
+    }
+    let rows_per_batch = step_batch * t;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let n_real = (n - i).min(step_batch);
+        let mut x_rows = vec![0.0f32; rows_per_batch * d];
+        let mut row_mask = vec![0.0f32; rows_per_batch];
+        let mut sample_mask = vec![0.0f32; step_batch];
+        let mut y_onehot = vec![0.0f32; step_batch * n_classes];
+        for j in 0..n_real {
+            let sample = x.subtensor(i + j); // [T, d]
+            let dst = j * t * d;
+            x_rows[dst..dst + t * d].copy_from_slice(sample.data());
+            for r in 0..t {
+                row_mask[j * t + r] = 1.0;
+            }
+            sample_mask[j] = 1.0;
+            let label = y[i + j];
+            if label >= n_classes {
+                bail!("label {label} >= n_classes {n_classes}");
+            }
+            y_onehot[j * n_classes + label] = 1.0;
+        }
+        out.push(CalibBatch {
+            x_rows: Tensor::new(vec![rows_per_batch, d], x_rows)?,
+            row_mask: Tensor::new(vec![rows_per_batch], row_mask)?,
+            sample_mask: Tensor::new(vec![step_batch], sample_mask)?,
+            y_onehot: Tensor::new(vec![step_batch, n_classes], y_onehot)?,
+            n_real,
+        });
+        i += n_real;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples(n: usize, t: usize, d: usize) -> (Tensor, Vec<usize>) {
+        let x = Tensor::new(
+            vec![n, t, d],
+            (0..n * t * d).map(|i| i as f32 + 1.0).collect(),
+        )
+        .unwrap();
+        let y = (0..n).map(|i| i % 3).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn single_underfull_batch() {
+        let (x, y) = samples(5, 2, 3);
+        let bs = make_batches(&x, &y, 8, 3).unwrap();
+        assert_eq!(bs.len(), 1);
+        let b = &bs[0];
+        assert_eq!(b.n_real, 5);
+        assert_eq!(b.x_rows.shape(), &[16, 3]);
+        // rows 0..10 real, 10..16 padding
+        assert_eq!(b.row_mask.data()[9], 1.0);
+        assert_eq!(b.row_mask.data()[10], 0.0);
+        assert!(b.x_rows.data()[10 * 3..].iter().all(|&v| v == 0.0));
+        assert_eq!(b.sample_mask.data()[4], 1.0);
+        assert_eq!(b.sample_mask.data()[5], 0.0);
+    }
+
+    #[test]
+    fn multiple_batches_cover_everything() {
+        let (x, y) = samples(20, 2, 3);
+        let bs = make_batches(&x, &y, 8, 3).unwrap();
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs.iter().map(|b| b.n_real).sum::<usize>(), 20);
+        assert_eq!(bs[2].n_real, 4);
+    }
+
+    #[test]
+    fn onehot_is_correct() {
+        let (x, y) = samples(3, 1, 2);
+        let bs = make_batches(&x, &y, 4, 3).unwrap();
+        let oh = &bs[0].y_onehot;
+        assert_eq!(oh.at2(0, 0), 1.0);
+        assert_eq!(oh.at2(1, 1), 1.0);
+        assert_eq!(oh.at2(2, 2), 1.0);
+        assert_eq!(oh.at2(3, 0), 0.0); // padding sample all-zero
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let (x, _) = samples(2, 1, 2);
+        assert!(make_batches(&x, &[0, 99], 4, 3).is_err());
+    }
+
+    #[test]
+    fn rows_preserve_sample_data() {
+        let (x, y) = samples(2, 2, 3);
+        let bs = make_batches(&x, &y, 4, 3).unwrap();
+        let s0 = x.subtensor(0);
+        assert_eq!(&bs[0].x_rows.data()[..6], s0.data());
+    }
+}

@@ -1,0 +1,76 @@
+//! Calibration algorithms (paper §III + baselines).
+//!
+//! * `FeatureCalibrator` — Algorithm 1 + 2: layer-wise feature-based KD
+//!   updating DoRA (or LoRA, Fig. 6) adapters in SRAM. No RRAM writes.
+//! * `BackpropCalibrator` — the §II-B baseline: end-to-end cross-entropy
+//!   retraining of every weight, each update charged as RRAM writes.
+//!
+//! Both report a `metrics::CalibrationCost` measured from the actual
+//! counters, which is what the Table-I bench prints.
+
+mod backprop;
+mod batches;
+mod feature;
+
+pub use backprop::BackpropCalibrator;
+pub use batches::{CalibBatch, make_batches};
+pub use feature::FeatureCalibrator;
+
+use crate::model::AdapterKind;
+
+/// Which activations feed the student layer during calibration.
+///
+/// `Sequential` (default, what makes the paper's 10-sample setting work
+/// end-to-end): layer `l` sees the *calibrated student's* own activation
+/// chain, so earlier corrections propagate.
+/// `TeacherInput` (ablation): every layer sees the teacher's activation,
+/// layers calibrate fully independently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputMode {
+    Sequential,
+    TeacherInput,
+}
+
+/// Feature-calibration hyper-parameters (Algorithm 1 line 10's threshold
+/// and epoch cap, plus optimizer settings).
+#[derive(Debug, Clone)]
+pub struct CalibConfig {
+    pub kind: AdapterKind,
+    pub rank: usize,
+    pub lr: f64,
+    /// Adam steps per layer ("N" in Algorithm 1; one step == one
+    /// minibatch pass, so with <=32 samples one step is one epoch)
+    pub max_steps_per_layer: usize,
+    /// early-exit threshold on the layer MSE (Algorithm 1 line 10)
+    pub loss_threshold: f64,
+    pub input_mode: InputMode,
+    pub seed: u64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            kind: AdapterKind::Dora,
+            rank: 2,
+            lr: 1e-2,
+            max_steps_per_layer: 150,
+            loss_threshold: 1e-4,
+            input_mode: InputMode::Sequential,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Backprop-baseline hyper-parameters (paper §IV-A: 20 epochs).
+#[derive(Debug, Clone)]
+pub struct BackpropConfig {
+    pub lr: f64,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for BackpropConfig {
+    fn default() -> Self {
+        BackpropConfig { lr: 2e-4, epochs: 20, seed: 0x5eed }
+    }
+}

@@ -1,0 +1,92 @@
+//! Engine: artifact store + per-model sessions (spec, teacher, dataset).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::calib::{
+    BackpropCalibrator, BackpropConfig, CalibConfig, FeatureCalibrator,
+};
+use crate::dataset::Dataset;
+use crate::device::{DriftModel, ProgramModel};
+use crate::model::{ModelSpec, StudentModel, TeacherModel};
+use crate::runtime::ArtifactStore;
+use crate::util::tensorfile::read_bundle;
+
+/// Process-wide entry point: open the artifacts once, then open one
+/// `Session` per model.
+pub struct Engine {
+    pub store: ArtifactStore,
+}
+
+impl Engine {
+    pub fn open(artifact_dir: &Path) -> Result<Engine> {
+        Ok(Engine { store: ArtifactStore::open(artifact_dir)? })
+    }
+
+    pub fn session(&self, model: &str) -> Result<Session<'_>> {
+        let spec = ModelSpec::from_manifest(&self.store.manifest, model)?;
+        let teacher = TeacherModel::load(self.store.dir(), &spec)?;
+        let bundle = read_bundle(&self.store.dir().join(&spec.bundle_file))?;
+        let dataset = Dataset::from_bundle(&bundle, spec.n_classes)?;
+        Ok(Session { store: &self.store, spec, teacher, dataset })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.store
+            .manifest
+            .req("models")
+            .as_obj()
+            .unwrap()
+            .keys()
+            .cloned()
+            .collect()
+    }
+}
+
+/// Everything needed to run experiments on one model.
+pub struct Session<'a> {
+    pub store: &'a ArtifactStore,
+    pub spec: ModelSpec,
+    pub teacher: TeacherModel,
+    pub dataset: Dataset,
+}
+
+impl<'a> Session<'a> {
+    /// Program a fresh student at the given relative drift (not yet
+    /// drifted — call `apply_saturated_drift` or `advance_time`).
+    pub fn program_student(
+        &self,
+        drift: DriftModel,
+        seed: u64,
+    ) -> Result<StudentModel> {
+        StudentModel::program(
+            &self.spec,
+            &self.teacher,
+            drift,
+            ProgramModel::default(),
+            seed,
+        )
+    }
+
+    /// Program + saturate drift in one call (the Fig. 2/4/5/6 setting).
+    pub fn drifted_student(&self, rel: f64, seed: u64) -> Result<StudentModel> {
+        let mut s = self.program_student(DriftModel::with_rel(rel), seed)?;
+        s.apply_saturated_drift();
+        Ok(s)
+    }
+
+    pub fn feature_calibrator(
+        &self,
+        cfg: CalibConfig,
+    ) -> Result<FeatureCalibrator<'_>> {
+        FeatureCalibrator::new(self.store, &self.spec, cfg)
+    }
+
+    pub fn backprop_calibrator(
+        &self,
+        cfg: BackpropConfig,
+    ) -> BackpropCalibrator<'_> {
+        BackpropCalibrator::new(self.store, &self.spec, cfg)
+    }
+}

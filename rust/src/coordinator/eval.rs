@@ -1,0 +1,151 @@
+//! Accuracy evaluator: batched top-1 accuracy on the eval split through
+//! the stacked full-model executables (single PJRT dispatch per batch).
+
+use anyhow::Result;
+
+use crate::dataset::Dataset;
+use crate::model::{AdapterKind, AdapterSet, ModelSpec, StudentModel, TeacherModel};
+use crate::runtime::ArtifactStore;
+use crate::util::tensor::Tensor;
+
+pub struct Evaluator<'a> {
+    store: &'a ArtifactStore,
+    spec: &'a ModelSpec,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(store: &'a ArtifactStore, spec: &'a ModelSpec) -> Self {
+        Evaluator { store, spec }
+    }
+
+    fn accuracy_from_logits(logits: &Tensor, labels: &[usize]) -> usize {
+        logits
+            .argmax_rows()
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| *p == *l)
+            .count()
+    }
+
+    /// Teacher (digital) accuracy via `model_fwd`.
+    pub fn teacher(&self, teacher: &TeacherModel, ds: &Dataset) -> Result<f64> {
+        let exe = self.store.executable(&self.spec.art("model_fwd"))?;
+        let mut correct = 0;
+        let mut total = 0;
+        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
+            let rows = Dataset::rows(&x)?;
+            let logits = exe.execute(&[&rows, &teacher.wb, &teacher.wh])?
+                .remove(0);
+            correct += Self::accuracy_from_logits(&logits, y);
+            total += y.len();
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Arbitrary digital weights (backprop-calibrated snapshot).
+    pub fn digital(
+        &self,
+        wb: &Tensor,
+        wh: &Tensor,
+        ds: &Dataset,
+    ) -> Result<f64> {
+        let exe = self.store.executable(&self.spec.art("model_fwd"))?;
+        let mut correct = 0;
+        let mut total = 0;
+        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
+            let rows = Dataset::rows(&x)?;
+            let logits = exe.execute(&[&rows, wb, wh])?.remove(0);
+            correct += Self::accuracy_from_logits(&logits, y);
+            total += y.len();
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Uncalibrated drifted student via `student_fwd` (Fig. 2 subject).
+    pub fn student(
+        &self,
+        student: &mut StudentModel,
+        ds: &Dataset,
+    ) -> Result<f64> {
+        let exe = self.store.executable(&self.spec.art("student_fwd"))?;
+        let gp = student.gp_stack()?;
+        let gn = student.gn_stack()?;
+        let inv = student.inv_scale_stack();
+        let gph = student.head.gp_tensor();
+        let gnh = student.head.gn_tensor();
+        let invh = Tensor::scalar1(student.head.inv_w_scale());
+        let fsh = Tensor::scalar1(student.adc_fs_head.data()[0]);
+        let mut correct = 0;
+        let mut total = 0;
+        let mut n_batches = 0u64;
+        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
+            let rows = Dataset::rows(&x)?;
+            let logits = exe
+                .execute(&[
+                    &rows, &gp, &gn, &inv, &student.adc_fs, &gph, &gnh,
+                    &invh, &fsh,
+                ])?
+                .remove(0);
+            correct += Self::accuracy_from_logits(&logits, y);
+            total += y.len();
+            n_batches += 1;
+        }
+        student.count_forward_reads(n_batches);
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Calibrated student (DoRA or LoRA adapters) via the stacked
+    /// `*_model_fwd` executable.
+    pub fn calibrated(
+        &self,
+        student: &mut StudentModel,
+        adapters: &AdapterSet,
+        ds: &Dataset,
+    ) -> Result<f64> {
+        let name = match adapters.kind {
+            AdapterKind::Dora => {
+                self.spec.art_r("dora_model_fwd", adapters.rank)
+            }
+            AdapterKind::Lora => {
+                self.spec.art_r("lora_model_fwd", adapters.rank)
+            }
+        };
+        let exe = self.store.executable(&name)?;
+        let gp = student.gp_stack()?;
+        let gn = student.gn_stack()?;
+        let inv = student.inv_scale_stack();
+        let gph = student.head.gp_tensor();
+        let gnh = student.head.gn_tensor();
+        let invh = Tensor::scalar1(student.head.inv_w_scale());
+        let fsh = Tensor::scalar1(student.adc_fs_head.data()[0]);
+        let (a, b, meff) = adapters.stacked()?;
+        let ah = adapters.head.a.tensor().clone();
+        let bh = adapters.head.b.tensor().clone();
+        let meffh = adapters.head.merged_meff()?;
+        let mut correct = 0;
+        let mut total = 0;
+        let mut n_batches = 0u64;
+        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
+            let rows = Dataset::rows(&x)?;
+            let logits = match adapters.kind {
+                AdapterKind::Dora => exe
+                    .execute(&[
+                        &rows, &gp, &gn, &inv, &student.adc_fs, &a, &b, &meff,
+                        &gph, &gnh, &invh, &fsh, &ah, &bh, &meffh,
+                    ])?
+                    .remove(0),
+                AdapterKind::Lora => exe
+                    .execute(&[
+                        &rows, &gp, &gn, &inv, &student.adc_fs, &a, &b,
+                        &gph, &gnh, &invh, &fsh, &ah, &bh,
+                    ])?
+                    .remove(0),
+            };
+            correct += Self::accuracy_from_logits(&logits, y);
+            total += y.len();
+            n_batches += 1;
+        }
+        student.count_forward_reads(n_batches);
+        Ok(correct as f64 / total as f64)
+    }
+}

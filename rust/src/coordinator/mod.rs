@@ -1,0 +1,18 @@
+//! L3 coordinator: owns the program -> drift -> calibrate -> evaluate
+//! lifecycle, the accuracy evaluator, the periodic-recalibration
+//! scheduler (Fig. 1c) and the experiment harness behind every
+//! figure/table bench.
+
+mod engine;
+mod eval;
+mod experiments;
+mod scheduler;
+
+pub use engine::{Engine, Session};
+pub use eval::Evaluator;
+pub use experiments::{
+    fig2_drift_sweep, fig4_dataset_size_sweep, fig5_rank_sweep,
+    fig6_lora_vs_dora, table1_rows, Fig2Row, Fig4Row, Fig5Row, Fig6Row,
+    Table1Row,
+};
+pub use scheduler::{RecalibrationScheduler, SchedulerEvent, SchedulerPolicy};

@@ -1,0 +1,110 @@
+//! Periodic-recalibration scheduler (paper Fig. 1(a)/(c)): drives a
+//! deployed student through wall-clock drift, recalibrating whenever the
+//! policy fires, and records the accuracy timeline. This is the
+//! "silicon lifecycle management" loop the conclusion motivates, and the
+//! substrate of `examples/edge_deployment.rs`.
+
+use anyhow::Result;
+
+use super::engine::Session;
+use super::eval::Evaluator;
+use crate::calib::CalibConfig;
+use crate::model::StudentModel;
+
+/// When to recalibrate.
+#[derive(Debug, Clone, Copy)]
+pub enum SchedulerPolicy {
+    /// every `interval_hours` of device time
+    Periodic { interval_hours: f64 },
+    /// whenever measured accuracy drops below the floor (needs a probe
+    /// set; we use the eval split as a stand-in for a field probe)
+    AccuracyFloor { floor: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerEvent {
+    pub hours: f64,
+    pub accuracy_before: f64,
+    pub accuracy_after: Option<f64>,
+    pub recalibrated: bool,
+    pub sram_writes: u64,
+    pub rram_writes: u64,
+}
+
+pub struct RecalibrationScheduler<'a, 's> {
+    session: &'s Session<'a>,
+    policy: SchedulerPolicy,
+    calib_cfg: CalibConfig,
+    n_calib_samples: usize,
+}
+
+impl<'a, 's> RecalibrationScheduler<'a, 's> {
+    pub fn new(
+        session: &'s Session<'a>,
+        policy: SchedulerPolicy,
+        calib_cfg: CalibConfig,
+        n_calib_samples: usize,
+    ) -> Self {
+        RecalibrationScheduler { session, policy, calib_cfg, n_calib_samples }
+    }
+
+    /// Simulate `checkpoints` steps of `step_hours` each; returns the
+    /// event log. The student's RRAM is never written (the adapters
+    /// absorb all drift), which the caller can verify via counters.
+    pub fn run(
+        &self,
+        student: &mut StudentModel,
+        step_hours: f64,
+        checkpoints: usize,
+    ) -> Result<Vec<SchedulerEvent>> {
+        let ev = Evaluator::new(self.session.store, &self.session.spec);
+        let (x, y) =
+            self.session.dataset.calib_subset(self.n_calib_samples)?;
+        let mut events = Vec::new();
+        let mut hours = 0.0;
+        let mut since_last = 0.0;
+        for _ in 0..checkpoints {
+            student.advance_time(step_hours);
+            hours += step_hours;
+            since_last += step_hours;
+            let before = ev.student(student, &self.session.dataset)?;
+            let fire = match self.policy {
+                SchedulerPolicy::Periodic { interval_hours } => {
+                    since_last >= interval_hours
+                }
+                SchedulerPolicy::AccuracyFloor { floor } => before < floor,
+            };
+            let writes_before = student.total_counters().write_attempts;
+            let mut after = None;
+            let mut sram_writes = 0;
+            if fire {
+                since_last = 0.0;
+                let calibrator =
+                    self.session.feature_calibrator(self.calib_cfg.clone())?;
+                let outcome = calibrator.calibrate(
+                    student,
+                    &self.session.teacher,
+                    &x,
+                    &y,
+                )?;
+                sram_writes = outcome.cost.sram_writes;
+                after = Some(ev.calibrated(
+                    student,
+                    &outcome.adapters,
+                    &self.session.dataset,
+                )?);
+            }
+            let rram_writes =
+                student.total_counters().write_attempts - writes_before;
+            events.push(SchedulerEvent {
+                hours,
+                accuracy_before: before,
+                accuracy_after: after,
+                recalibrated: fire,
+                sram_writes,
+                rram_writes,
+            });
+        }
+        Ok(events)
+    }
+}

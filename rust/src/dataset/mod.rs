@@ -1,0 +1,198 @@
+//! Dataset access: the synthetic calibration/eval splits generated at
+//! build time (python/compile/data.py) and shipped in the artifact
+//! bundle. Samples are `[TOKENS, d]` patch-token grids (see data.py for
+//! why — it preserves the conv-layer weight-reuse that makes 10-sample
+//! calibration generalize).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+use crate::util::tensorfile::Bundle;
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// [N, T, d]
+    pub calib_x: Tensor,
+    pub calib_y: Vec<usize>,
+    pub eval_x: Tensor,
+    pub eval_y: Vec<usize>,
+    pub tokens: usize,
+    pub dim: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn from_bundle(bundle: &Bundle, n_classes: usize) -> Result<Dataset> {
+        let get = |k: &str| -> Result<&Tensor> {
+            Ok(&bundle.get(k).with_context(|| format!("bundle key {k}"))?.tensor)
+        };
+        let calib_x = get("calib_x")?.clone();
+        let eval_x = get("eval_x")?.clone();
+        if calib_x.shape().len() != 3 {
+            bail!("calib_x must be [N, T, d], got {:?}", calib_x.shape());
+        }
+        let tokens = calib_x.shape()[1];
+        let dim = calib_x.shape()[2];
+        let to_labels = |t: &Tensor| -> Vec<usize> {
+            t.data().iter().map(|&v| v as usize).collect()
+        };
+        Ok(Dataset {
+            calib_y: to_labels(get("calib_y")?),
+            eval_y: to_labels(get("eval_y")?),
+            calib_x,
+            eval_x,
+            tokens,
+            dim,
+            n_classes,
+        })
+    }
+
+    pub fn n_calib(&self) -> usize {
+        self.calib_x.shape()[0]
+    }
+
+    pub fn n_eval(&self) -> usize {
+        self.eval_x.shape()[0]
+    }
+
+    /// First-n calibration subset (paper: "10 calibration samples").
+    pub fn calib_subset(&self, n: usize) -> Result<(Tensor, Vec<usize>)> {
+        self.subset(&self.calib_x, &self.calib_y, n)
+    }
+
+    /// Random calibration subset for seed-replicated sweeps.
+    pub fn calib_subset_seeded(
+        &self,
+        n: usize,
+        seed: u64,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        if n > self.n_calib() {
+            bail!("requested {n} calib samples, pool has {}", self.n_calib());
+        }
+        let mut rng = Rng::new(seed);
+        let idx = rng.sample_indices(self.n_calib(), n);
+        let mut parts = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for &i in &idx {
+            parts.push(self.calib_x.subtensor(i));
+            ys.push(self.calib_y[i]);
+        }
+        Ok((Tensor::stack(&parts)?, ys))
+    }
+
+    fn subset(
+        &self,
+        x: &Tensor,
+        y: &[usize],
+        n: usize,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        if n > x.shape()[0] {
+            bail!("requested {n} samples, split has {}", x.shape()[0]);
+        }
+        let mut parts = Vec::with_capacity(n);
+        for i in 0..n {
+            parts.push(x.subtensor(i));
+        }
+        Ok((Tensor::stack(&parts)?, y[..n].to_vec()))
+    }
+
+    /// Iterate the eval split in fixed `batch`-sample chunks (the AOT
+    /// eval artifacts are lowered at a static batch; the tail partial
+    /// batch is dropped, identically to the python-side accuracy()).
+    pub fn eval_batches(
+        &self,
+        batch: usize,
+    ) -> impl Iterator<Item = (Tensor, &[usize])> + '_ {
+        let n_full = self.n_eval() / batch;
+        (0..n_full).map(move |b| {
+            let mut parts = Vec::with_capacity(batch);
+            for i in b * batch..(b + 1) * batch {
+                parts.push(self.eval_x.subtensor(i));
+            }
+            (
+                Tensor::stack(&parts).expect("uniform shapes"),
+                &self.eval_y[b * batch..(b + 1) * batch],
+            )
+        })
+    }
+
+    /// Flatten `[N, T, d]` samples into `[N*T, d]` rows (block inputs).
+    pub fn rows(x: &Tensor) -> Result<Tensor> {
+        let s = x.shape().to_vec();
+        if s.len() != 3 {
+            bail!("rows() wants [N,T,d], got {s:?}");
+        }
+        x.clone().reshaped(vec![s[0] * s[1], s[2]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorfile::Entry;
+
+    fn fake_bundle(n: usize, t: usize, d: usize) -> Bundle {
+        let mut b = Bundle::new();
+        let mk = |shape: Vec<usize>| {
+            let len = shape.iter().product();
+            Tensor::new(shape, (0..len).map(|i| i as f32).collect()).unwrap()
+        };
+        b.insert("calib_x".into(),
+                 Entry { tensor: mk(vec![n, t, d]), was_i32: false });
+        b.insert("calib_y".into(),
+                 Entry { tensor: mk(vec![n]), was_i32: true });
+        b.insert("eval_x".into(),
+                 Entry { tensor: mk(vec![2 * n, t, d]), was_i32: false });
+        b.insert("eval_y".into(),
+                 Entry { tensor: mk(vec![2 * n]), was_i32: true });
+        b
+    }
+
+    #[test]
+    fn from_bundle_shapes() {
+        let ds = Dataset::from_bundle(&fake_bundle(8, 4, 6), 10).unwrap();
+        assert_eq!(ds.tokens, 4);
+        assert_eq!(ds.dim, 6);
+        assert_eq!(ds.n_calib(), 8);
+        assert_eq!(ds.n_eval(), 16);
+        assert_eq!(ds.calib_y[3], 3);
+    }
+
+    #[test]
+    fn calib_subset_first_n() {
+        let ds = Dataset::from_bundle(&fake_bundle(8, 2, 3), 10).unwrap();
+        let (x, y) = ds.calib_subset(3).unwrap();
+        assert_eq!(x.shape(), &[3, 2, 3]);
+        assert_eq!(y, vec![0, 1, 2]);
+        assert!(ds.calib_subset(100).is_err());
+    }
+
+    #[test]
+    fn seeded_subset_is_deterministic_and_distinct() {
+        let ds = Dataset::from_bundle(&fake_bundle(32, 2, 3), 10).unwrap();
+        let (a1, y1) = ds.calib_subset_seeded(5, 7).unwrap();
+        let (a2, y2) = ds.calib_subset_seeded(5, 7).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(y1, y2);
+        let (_, y3) = ds.calib_subset_seeded(5, 8).unwrap();
+        assert_ne!(y1, y3);
+    }
+
+    #[test]
+    fn eval_batches_drop_tail() {
+        let ds = Dataset::from_bundle(&fake_bundle(8, 2, 3), 10).unwrap();
+        // 16 eval samples, batch 5 -> 3 full batches
+        let batches: Vec<_> = ds.eval_batches(5).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].0.shape(), &[5, 2, 3]);
+        assert_eq!(batches[2].1.len(), 5);
+    }
+
+    #[test]
+    fn rows_flattens() {
+        let ds = Dataset::from_bundle(&fake_bundle(4, 2, 3), 10).unwrap();
+        let r = Dataset::rows(&ds.calib_x).unwrap();
+        assert_eq!(r.shape(), &[8, 3]);
+    }
+}

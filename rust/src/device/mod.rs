@@ -1,0 +1,240 @@
+//! Compact RRAM device model (paper §II-A, Eq. 1-2 and refs [4][14][15]).
+//!
+//! Three non-idealities are modeled, each parameterized and seeded:
+//!
+//! * **program noise** — one write-and-verify *attempt* lands within
+//!   `program_sigma * g_max` of the target; the write-verify loop in
+//!   `rram::Crossbar` iterates attempts until the tolerance is met.
+//! * **conductance relaxation (drift)** — after programming, each cell's
+//!   conductance drifts by `G_drift ~ N(0, sigma^2)` with
+//!   `sigma = rel * max(G_t, hrs_floor * g_max)`. `rel` is the paper's
+//!   "relative drift" (sigma / G_t); the floor models the documented
+//!   relaxation of HRS/unprogrammed cells toward mid-range states
+//!   (refs [4][15]) and is what makes zero-target cells drift too.
+//! * **log-time accumulation** — relaxation is fast initially and
+//!   saturates (paper §II-A: "drift is large initially but stabilizes").
+//!   We scale the asymptotic `rel` by `log1p(t/tau) / log1p(T_sat/tau)`,
+//!   clamped to 1, so `advance_time` produces the paper's Fig.-1(a)
+//!   trajectory and periodic recalibration (Fig. 1c) is meaningful.
+
+pub mod constants;
+
+use crate::util::rng::Rng;
+
+/// Differential-pair weight coding (paper Eq. 2):
+/// `W = (G+ - G-) * W_max / G_max`, with one device per sign.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightCoding {
+    pub g_max: f64,
+    pub w_max: f64,
+}
+
+impl WeightCoding {
+    pub fn new(g_max: f64, w_max: f64) -> Self {
+        assert!(g_max > 0.0 && w_max > 0.0);
+        WeightCoding { g_max, w_max }
+    }
+
+    /// conductance per unit weight
+    pub fn w_scale(&self) -> f64 {
+        self.g_max / self.w_max
+    }
+
+    /// weight -> (G+, G-) targets. One side is always 0 (single-device-
+    /// per-sign coding, the scheme in the paper's Fig. 1b).
+    pub fn encode(&self, w: f64) -> (f64, f64) {
+        let g = (w.abs() * self.w_scale()).min(self.g_max);
+        if w >= 0.0 {
+            (g, 0.0)
+        } else {
+            (0.0, g)
+        }
+    }
+
+    /// (G+, G-) -> weight seen by the array readout.
+    pub fn decode(&self, gp: f64, gn: f64) -> f64 {
+        (gp - gn) / self.w_scale()
+    }
+}
+
+/// Drift / relaxation model parameters.
+///
+/// The paper's compact model is `G_drift ~ N(mu, sigma^2)` — note the
+/// mean: relaxation is *systematic*, programmed cells decay toward their
+/// pre-programming state (paper Fig. 1(a) shows conductance curves
+/// drifting consistently downward; refs [4][5]). We model
+/// `mu = -decay_frac * rel * G_t`, i.e. a deterministic fractional decay
+/// alongside the random component. This matters for Fig. 6: the decay is
+/// a per-column *magnitude* error, which DoRA's M vector corrects with
+/// k parameters while LoRA needs full rank — the structural reason DoRA
+/// dominates LoRA for calibration.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftModel {
+    /// asymptotic relative drift sigma/G_t (paper sweeps 0..0.3)
+    pub rel: f64,
+    /// systematic decay: mu = -decay_frac * rel * G_t (refs [4][5])
+    pub decay_frac: f64,
+    /// HRS relaxation floor as a fraction of g_max (refs [4][15])
+    pub hrs_floor: f64,
+    /// relaxation time constant (hours) for the log-time schedule
+    pub tau_hours: f64,
+    /// time at which drift is considered saturated (hours)
+    pub sat_hours: f64,
+}
+
+impl Default for DriftModel {
+    fn default() -> Self {
+        DriftModel {
+            rel: 0.2,
+            decay_frac: constants::DRIFT_DECAY_FRAC,
+            hrs_floor: constants::HRS_DRIFT_FLOOR,
+            tau_hours: 1.0,
+            sat_hours: 1000.0,
+        }
+    }
+}
+
+impl DriftModel {
+    pub fn with_rel(rel: f64) -> Self {
+        DriftModel { rel, ..Default::default() }
+    }
+
+    /// Fraction of the asymptotic drift accumulated after `hours`.
+    pub fn time_factor(&self, hours: f64) -> f64 {
+        if hours <= 0.0 {
+            return 0.0;
+        }
+        let f = (1.0 + hours / self.tau_hours).ln()
+            / (1.0 + self.sat_hours / self.tau_hours).ln();
+        f.min(1.0)
+    }
+
+    /// Drift sigma for a cell with target conductance `g_t`, after the
+    /// time factor `tf` (pass 1.0 for saturated drift).
+    pub fn sigma(&self, g_t: f64, g_max: f64, tf: f64) -> f64 {
+        self.rel * tf * g_t.max(self.hrs_floor * g_max)
+    }
+
+    /// Systematic decay component mu(t) (negative: toward HRS).
+    pub fn mu(&self, g_t: f64, tf: f64) -> f64 {
+        -self.decay_frac * self.rel * tf * g_t
+    }
+
+    /// Sample a drifted conductance, clamped to the physical range.
+    pub fn apply(&self, g_t: f64, g_max: f64, tf: f64, rng: &mut Rng) -> f64 {
+        let sigma = self.sigma(g_t, g_max, tf);
+        (g_t + self.mu(g_t, tf) + rng.normal_scaled(0.0, sigma))
+            .clamp(0.0, g_max)
+    }
+}
+
+/// Programming (write-and-verify) parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgramModel {
+    /// per-attempt placement noise, as a fraction of g_max
+    pub program_sigma: f64,
+    /// verify tolerance, as a fraction of g_max
+    pub verify_tol: f64,
+    /// give up after this many attempts (keeps worst cells bounded)
+    pub max_attempts: u32,
+}
+
+impl Default for ProgramModel {
+    fn default() -> Self {
+        ProgramModel {
+            program_sigma: constants::PROGRAM_SIGMA,
+            verify_tol: constants::VERIFY_TOL,
+            max_attempts: 16,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let c = WeightCoding::new(100.0, 0.5);
+        for w in [-0.5, -0.1, 0.0, 0.3, 0.5] {
+            let (gp, gn) = c.encode(w);
+            assert!((c.decode(gp, gn) - w).abs() < 1e-12, "w={w}");
+            assert!(gp >= 0.0 && gn >= 0.0);
+            assert!(gp == 0.0 || gn == 0.0, "one-sided coding");
+        }
+    }
+
+    #[test]
+    fn encode_clamps_overrange() {
+        let c = WeightCoding::new(100.0, 0.5);
+        let (gp, _) = c.encode(0.7);
+        assert_eq!(gp, 100.0);
+    }
+
+    #[test]
+    fn time_factor_monotone_saturating() {
+        let d = DriftModel::default();
+        assert_eq!(d.time_factor(0.0), 0.0);
+        let f1 = d.time_factor(1.0);
+        let f10 = d.time_factor(10.0);
+        let fsat = d.time_factor(1e6);
+        assert!(f1 > 0.0 && f10 > f1 && fsat <= 1.0 + 1e-12);
+        assert!((d.time_factor(2e6) - fsat).abs() < 1e-9, "saturated");
+    }
+
+    #[test]
+    fn sigma_scales_with_target_and_has_floor() {
+        let d = DriftModel::with_rel(0.2);
+        let g_max = 100.0;
+        // programmed cell: sigma = rel * g_t
+        assert!((d.sigma(50.0, g_max, 1.0) - 10.0).abs() < 1e-12);
+        // HRS cell: sigma = rel * floor * g_max
+        let hrs = d.sigma(0.0, g_max, 1.0);
+        assert!((hrs - 0.2 * d.hrs_floor * g_max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_stays_in_range_and_mean_matches_mu() {
+        let d = DriftModel::with_rel(0.3);
+        let mut rng = Rng::new(9);
+        let mut sum = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            let g = d.apply(50.0, 100.0, 1.0, &mut rng);
+            assert!((0.0..=100.0).contains(&g));
+            sum += g;
+        }
+        let mean = sum / n as f64;
+        let want = 50.0 + d.mu(50.0, 1.0);
+        assert!((mean - want).abs() < 0.5, "mean {mean} want {want}");
+    }
+
+    #[test]
+    fn decay_is_systematic_and_scales_with_target() {
+        let d = DriftModel::with_rel(0.2);
+        // mu = -0.6 * 0.2 * g_t
+        assert!((d.mu(50.0, 1.0) + 6.0).abs() < 1e-12);
+        assert!((d.mu(100.0, 1.0) + 12.0).abs() < 1e-12);
+        assert_eq!(d.mu(50.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn drift_statistics_match_requested_rel() {
+        let d = DriftModel::with_rel(0.15);
+        let mut rng = Rng::new(10);
+        let g_t = 60.0;
+        let n = 50_000;
+        let mut var = 0.0;
+        let center = g_t + d.mu(g_t, 1.0);
+        for _ in 0..n {
+            let g = d.apply(g_t, 100.0, 1.0, &mut rng);
+            var += (g - center) * (g - center);
+        }
+        let sigma = (var / n as f64).sqrt();
+        let expect = 0.15 * g_t;
+        assert!(
+            (sigma - expect).abs() / expect < 0.05,
+            "sigma {sigma} vs {expect}"
+        );
+    }
+}

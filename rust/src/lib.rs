@@ -1,0 +1,32 @@
+//! # rimc-dora
+//!
+//! Full-system reproduction of *"Efficient Calibration for RRAM-based
+//! In-Memory Computing using DoRA"* (CS.AR 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: RRAM crossbar simulator,
+//!   SRAM adapter store, drift lifecycle, the layer-wise feature
+//!   calibration engine (Algorithms 1-2), the backprop/LoRA baselines,
+//!   metrics (Table I) and the experiment harness for every figure.
+//! * **L2 (python/compile, build-time only)** — the MicroNet compute
+//!   graphs in JAX, AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the crossbar
+//!   MVM readout and the fused DoRA forward, with a hand-derived VJP.
+//!
+//! Python never runs at request time: `runtime::ArtifactStore` loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) and all experiment
+//! logic is rust.
+//!
+//! See DESIGN.md for the substitution map (what the paper had vs what we
+//! simulate) and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod calib;
+pub mod coordinator;
+pub mod dataset;
+pub mod device;
+pub mod metrics;
+pub mod model;
+pub mod rram;
+pub mod runtime;
+pub mod sram;
+pub mod util;

@@ -1,0 +1,382 @@
+//! `rimc` — CLI for the RIMC-DoRA calibration system.
+//!
+//! Subcommands:
+//!   info                         artifact + model inventory
+//!   evaluate                     teacher / drifted-student accuracy
+//!   calibrate                    run one calibration round (dora|lora|backprop)
+//!   sweep drift                  Fig. 2 rows
+//!   sweep dataset-size           Fig. 4 rows
+//!   sweep rank                   Fig. 5 rows
+//!   sweep lora                   Fig. 6 rows
+//!   report table1                Table I from measured counters
+//!   lifecycle                    periodic-recalibration timeline (Fig. 1c)
+//!
+//! All subcommands take `--artifacts DIR` (default: ./artifacts).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Result};
+
+use rimc_dora::calib::{BackpropConfig, CalibConfig, InputMode};
+use rimc_dora::coordinator::{
+    fig2_drift_sweep, fig4_dataset_size_sweep, fig5_rank_sweep,
+    fig6_lora_vs_dora, table1_rows, Engine, Evaluator,
+    RecalibrationScheduler, SchedulerPolicy,
+};
+use rimc_dora::model::AdapterKind;
+use rimc_dora::util::bench::print_table;
+use rimc_dora::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = Args::parse(std::env::args().skip(1));
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn engine(args: &Args) -> Result<Engine> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    Engine::open(&dir)
+}
+
+fn calib_cfg(args: &Args) -> Result<CalibConfig> {
+    Ok(CalibConfig {
+        kind: match args.str_or("method", "dora").as_str() {
+            "dora" => AdapterKind::Dora,
+            "lora" => AdapterKind::Lora,
+            m => bail!("--method {m}: expected dora|lora"),
+        },
+        rank: args.usize_or("rank", 2)?,
+        lr: args.f64_or("lr", 1e-2)?,
+        max_steps_per_layer: args.usize_or("steps", 150)?,
+        loss_threshold: args.f64_or("threshold", 1e-4)?,
+        input_mode: match args.str_or("input-mode", "sequential").as_str() {
+            "sequential" => InputMode::Sequential,
+            "teacher" => InputMode::TeacherInput,
+            m => bail!("--input-mode {m}: expected sequential|teacher"),
+        },
+        seed: args.u64_or("seed", 0x5eed)?,
+    })
+}
+
+fn bp_cfg(args: &Args) -> Result<BackpropConfig> {
+    Ok(BackpropConfig {
+        lr: args.f64_or("bp-lr", 2e-4)?,
+        epochs: args.usize_or("bp-epochs", 20)?,
+        seed: args.u64_or("seed", 0x5eed)?,
+    })
+}
+
+fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(args),
+        "evaluate" => cmd_evaluate(args),
+        "calibrate" => cmd_calibrate(args),
+        "sweep" => cmd_sweep(args),
+        "report" => cmd_report(args),
+        "lifecycle" => cmd_lifecycle(args),
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}`\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+rimc — RRAM in-memory-computing calibration with DoRA (paper repro)
+
+USAGE: rimc <SUBCOMMAND> [--artifacts DIR] [--model m20|m50] [flags]
+
+SUBCOMMANDS
+  info                      artifact + model inventory
+  evaluate  [--drift R]     teacher & drifted-student accuracy
+  calibrate [--method dora|lora|backprop] [--drift R] [--samples N]
+            [--rank R] [--steps N] [--lr F] [--input-mode sequential|teacher]
+  sweep drift         [--drifts 0,0.05,...] [--seeds N]        (Fig. 2)
+  sweep dataset-size  [--sizes 1,2,5,...] [--drift R] [--rank R] (Fig. 4)
+  sweep rank          [--drift R] [--samples N]                 (Fig. 5)
+  sweep lora          [--drifts 0.2,0.15] [--samples N]         (Fig. 6)
+  report table1       [--drift R] [--samples N] [--bp-samples N] (Table I)
+  lifecycle [--policy periodic|floor] [--interval-hours H]
+            [--step-hours H] [--checkpoints N]                  (Fig. 1c)";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    println!("artifact dir: {}", eng.store.dir().display());
+    for name in eng.model_names() {
+        let s = eng.session(&name)?;
+        println!(
+            "model {name}: {} blocks x width {}, {} classes, ranks {:?}, \
+             lora={}, teacher_acc={:.4}",
+            s.spec.n_blocks,
+            s.spec.width,
+            s.spec.n_classes,
+            s.spec.ranks,
+            s.spec.with_lora,
+            s.spec.teacher_acc
+        );
+        println!(
+            "  params {}, gamma(r=2) {}, calib pool {}, eval {}",
+            s.spec.n_params(),
+            pct(s.spec.gamma(2)),
+            s.dataset.n_calib(),
+            s.dataset.n_eval()
+        );
+    }
+    let n = eng.store.names().count();
+    println!("{n} artifacts available");
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let session = eng.session(&args.str_or("model", "m20"))?;
+    let ev = Evaluator::new(session.store, &session.spec);
+    let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
+    println!("teacher accuracy: {}", pct(teacher_acc));
+    let rel = args.f64_or("drift", 0.2)?;
+    let mut student =
+        session.drifted_student(rel, args.u64_or("seed", 3)?)?;
+    let acc = ev.student(&mut student, &session.dataset)?;
+    println!("student accuracy at {:.0}% drift: {}", rel * 100.0, pct(acc));
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let session = eng.session(&args.str_or("model", "m20"))?;
+    let ev = Evaluator::new(session.store, &session.spec);
+    let rel = args.f64_or("drift", 0.2)?;
+    let n = args.usize_or("samples", 10)?;
+    let seed = args.u64_or("seed", 3)?;
+    let (x, y) = session.dataset.calib_subset(n)?;
+    let mut student = session.drifted_student(rel, seed)?;
+    let pre = ev.student(&mut student, &session.dataset)?;
+    println!("pre-calibration accuracy: {}", pct(pre));
+
+    if args.str_or("method", "dora") == "backprop" {
+        let bp = session.backprop_calibrator(bp_cfg(args)?);
+        let out = bp.calibrate(&mut student, &session.teacher, &x, &y)?;
+        let acc = ev.student(&mut student, &session.dataset)?;
+        println!("backprop-calibrated accuracy: {}", pct(acc));
+        println!(
+            "cost: {} RRAM write pulses, update time {:.3} s, energy {:.1} µJ",
+            out.cost.rram_writes,
+            out.cost.update_time_ns / 1e9,
+            out.cost.update_energy_pj / 1e6,
+        );
+        return Ok(());
+    }
+
+    let cfg = calib_cfg(args)?;
+    let calibrator = session.feature_calibrator(cfg)?;
+    let outcome =
+        calibrator.calibrate(&mut student, &session.teacher, &x, &y)?;
+    let acc = ev.calibrated(&mut student, &outcome.adapters, &session.dataset)?;
+    println!("calibrated accuracy: {}", pct(acc));
+    println!(
+        "trainable params: {} ({} of model), SRAM writes {}, RRAM writes {}",
+        outcome.adapters.n_params(),
+        pct(outcome.cost.trainable_fraction),
+        outcome.cost.sram_writes,
+        outcome.cost.rram_writes,
+    );
+    println!(
+        "update time {:.3} ms, energy {:.1} nJ",
+        outcome.cost.update_time_ns / 1e6,
+        outcome.cost.update_energy_pj / 1e3,
+    );
+    if args.bool_or("traces", false)? {
+        for t in &outcome.traces {
+            println!(
+                "  {}: {} steps, loss {:.5} -> {:.5}",
+                t.layer, t.steps, t.first_loss, t.last_loss
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let eng = engine(args)?;
+    let session = eng.session(&args.str_or("model", "m20"))?;
+    match what {
+        "drift" => {
+            let drifts = args.f64_list_or(
+                "drifts",
+                &[0.0, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30],
+            )?;
+            let n_seeds = args.usize_or("seeds", 3)?;
+            let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| 3 + i).collect();
+            let rows = fig2_drift_sweep(&session, &drifts, &seeds)?;
+            print_table(
+                &format!("Fig. 2 — accuracy vs relative drift ({})",
+                         session.spec.name),
+                &["rel drift", "acc mean", "acc min", "acc max", "teacher"],
+                &rows.iter().map(|r| vec![
+                    format!("{:.2}", r.rel_drift),
+                    pct(r.accuracy_mean),
+                    pct(r.accuracy_min),
+                    pct(r.accuracy_max),
+                    pct(r.teacher_acc),
+                ]).collect::<Vec<_>>(),
+            );
+        }
+        "dataset-size" => {
+            let sizes = args.usize_list_or(
+                "sizes",
+                &[1, 2, 5, 10, 20, 50, 100],
+            )?;
+            let rows = fig4_dataset_size_sweep(
+                &session,
+                args.f64_or("drift", 0.2)?,
+                args.usize_or("rank", 2)?,
+                &sizes,
+                &calib_cfg(args)?,
+                &bp_cfg(args)?,
+                args.u64_or("seed", 3)?,
+            )?;
+            print_table(
+                &format!("Fig. 4 — accuracy vs calibration-set size ({})",
+                         session.spec.name),
+                &["n", "feature-DoRA", "backprop", "pre-calib"],
+                &rows.iter().map(|r| vec![
+                    r.n_samples.to_string(),
+                    pct(r.feature_dora_acc),
+                    pct(r.backprop_acc),
+                    pct(r.pre_calib_acc),
+                ]).collect::<Vec<_>>(),
+            );
+        }
+        "rank" => {
+            let rows = fig5_rank_sweep(
+                &session,
+                args.f64_or("drift", 0.2)?,
+                args.usize_or("samples", 10)?,
+                &calib_cfg(args)?,
+                args.u64_or("seed", 3)?,
+            )?;
+            print_table(
+                &format!("Fig. 5 — accuracy vs rank ({})", session.spec.name),
+                &["rank", "accuracy", "gamma", "pre-calib"],
+                &rows.iter().map(|r| vec![
+                    r.rank.to_string(),
+                    pct(r.accuracy),
+                    pct(r.gamma),
+                    pct(r.pre_calib_acc),
+                ]).collect::<Vec<_>>(),
+            );
+        }
+        "lora" => {
+            let drifts = args.f64_list_or("drifts", &[0.2, 0.15])?;
+            let rows = fig6_lora_vs_dora(
+                &session,
+                &drifts,
+                args.usize_or("samples", 10)?,
+                &calib_cfg(args)?,
+                args.u64_or("seed", 3)?,
+            )?;
+            print_table(
+                &format!("Fig. 6 — LoRA vs DoRA ({})", session.spec.name),
+                &["drift", "rank", "DoRA", "LoRA"],
+                &rows.iter().map(|r| vec![
+                    format!("{:.2}", r.rel_drift),
+                    r.rank.to_string(),
+                    pct(r.dora_acc),
+                    pct(r.lora_acc),
+                ]).collect::<Vec<_>>(),
+            );
+        }
+        other => bail!("unknown sweep `{other}` (drift|dataset-size|rank|lora)"),
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("table1");
+    if what != "table1" {
+        bail!("unknown report `{what}`");
+    }
+    let eng = engine(args)?;
+    let session = eng.session(&args.str_or("model", "m20"))?;
+    let rows = table1_rows(
+        &session,
+        args.f64_or("drift", 0.2)?,
+        args.usize_or("samples", 10)?,
+        args.usize_or("bp-samples", 125)?,
+        args.usize_or("rank", 2)?,
+        &calib_cfg(args)?,
+        &bp_cfg(args)?,
+        args.u64_or("seed", 3)?,
+    )?;
+    print_table(
+        &format!("Table I — method comparison ({})", session.spec.name),
+        &["method", "dataset", "trainable", "update time",
+          "speedup", "lifespan (calibrations)", "accuracy"],
+        &rows.iter().map(|r| vec![
+            r.method.clone(),
+            r.dataset_size.to_string(),
+            format!("{:.2}%", r.trainable_pct),
+            format!("{:.3} ms", r.update_time_ns / 1e6),
+            format!("{:.0}x", r.speedup),
+            format!("{:.3e}", r.lifespan_calibrations),
+            pct(r.accuracy),
+        ]).collect::<Vec<_>>(),
+    );
+    Ok(())
+}
+
+fn cmd_lifecycle(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let session = eng.session(&args.str_or("model", "m20"))?;
+    let policy = match args.str_or("policy", "periodic").as_str() {
+        "periodic" => SchedulerPolicy::Periodic {
+            interval_hours: args.f64_or("interval-hours", 200.0)?,
+        },
+        "floor" => SchedulerPolicy::AccuracyFloor {
+            floor: args.f64_or("floor", 0.8)?,
+        },
+        p => bail!("--policy {p}: expected periodic|floor"),
+    };
+    let mut student = session.program_student(
+        rimc_dora::device::DriftModel::with_rel(args.f64_or("drift", 0.2)?),
+        args.u64_or("seed", 3)?,
+    )?;
+    let scheduler = RecalibrationScheduler::new(
+        &session,
+        policy,
+        calib_cfg(args)?,
+        args.usize_or("samples", 10)?,
+    );
+    let events = scheduler.run(
+        &mut student,
+        args.f64_or("step-hours", 100.0)?,
+        args.usize_or("checkpoints", 8)?,
+    )?;
+    print_table(
+        "Fig. 1(c) — periodic calibration timeline",
+        &["hours", "acc before", "recalibrated", "acc after",
+          "SRAM writes", "RRAM writes"],
+        &events.iter().map(|e| vec![
+            format!("{:.0}", e.hours),
+            pct(e.accuracy_before),
+            e.recalibrated.to_string(),
+            e.accuracy_after.map(pct).unwrap_or_else(|| "-".into()),
+            e.sram_writes.to_string(),
+            e.rram_writes.to_string(),
+        ]).collect::<Vec<_>>(),
+    );
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Accounting layer: everything Table I and §IV-C/D/E report is computed
+//! here from measured counters + the cited constants in
+//! `device::constants`.
+
+pub mod params;
+
+use crate::device::constants;
+
+/// Calibration-cost summary for one full calibration round, measured by
+/// the coordinator. This is the row-generator for Table I.
+#[derive(Debug, Clone, Default)]
+pub struct CalibrationCost {
+    pub method: String,
+    pub dataset_size: usize,
+    /// trainable / total parameters
+    pub trainable_fraction: f64,
+    /// RRAM write pulses issued during the round
+    pub rram_writes: u64,
+    /// SRAM word writes issued during the round
+    pub sram_writes: u64,
+    /// weight-update wall time implied by the memory technology
+    pub update_time_ns: f64,
+    pub update_energy_pj: f64,
+    /// accuracy after the round (for the experiment tables)
+    pub accuracy: f64,
+}
+
+impl CalibrationCost {
+    /// Paper §IV-D: how many calibration rounds the limiting memory
+    /// technology survives.
+    pub fn lifespan_calibrations(&self) -> f64 {
+        // The wear per round is per-cell; our counters are totals. The
+        // paper divides endurance by *updates per cell per calibration*:
+        // every round rewrites each touched cell the same number of times,
+        // so rounds_survivable = endurance / (writes_per_round / cells).
+        // We conservatively use the max-wear assumption that each round's
+        // writes concentrate on the same cells it always touches:
+        // writes_per_cell_per_round = round_writes / touched_cells; our
+        // callers set `touched_cells`; to keep the struct flat we expose
+        // the two-argument form below.
+        f64::NAN // use lifespan_with_cells
+    }
+
+    pub fn lifespan_with_cells(&self, touched_cells: u64) -> f64 {
+        if touched_cells == 0 {
+            return f64::INFINITY;
+        }
+        if self.rram_writes > 0 {
+            let per_cell = self.rram_writes as f64 / touched_cells as f64;
+            constants::RRAM_ENDURANCE / per_cell
+        } else if self.sram_writes > 0 {
+            let per_cell = self.sram_writes as f64 / touched_cells as f64;
+            constants::SRAM_ENDURANCE / per_cell
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// §IV-E: speedup of this round vs a reference round, judged on
+    /// weight-update time (the paper's metric; compute time is similar
+    /// for both methods).
+    pub fn speedup_vs(&self, baseline: &CalibrationCost) -> f64 {
+        if self.update_time_ns <= 0.0 {
+            return f64::INFINITY;
+        }
+        baseline.update_time_ns / self.update_time_ns
+    }
+}
+
+/// Energy/latency for a stream of writes on each technology — used by the
+/// examples and the lifespan planner.
+pub fn rram_write_cost(writes: u64) -> (f64, f64) {
+    (
+        writes as f64 * constants::RRAM_WRITE_NS,
+        writes as f64 * constants::RRAM_WRITE_PJ,
+    )
+}
+
+pub fn sram_write_cost(writes: u64) -> (f64, f64) {
+    (
+        writes as f64 * constants::SRAM_WRITE_NS,
+        writes as f64 * constants::SRAM_WRITE_PJ,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_lifespan_numbers_reproduce() {
+        // §IV-D backprop: 20 epochs x 120 samples, batch 1 -> 2400 full
+        // rewrites of every RRAM cell per calibration -> 41 667 rounds.
+        let bp = CalibrationCost {
+            method: "backprop".into(),
+            rram_writes: 2400 * 1_000, // 1000 cells, 2400 rewrites each
+            ..Default::default()
+        };
+        let rounds = bp.lifespan_with_cells(1_000);
+        assert!((rounds - 41_666.7).abs() < 1.0, "{rounds}");
+
+        // §IV-D ours: 200 SRAM updates per cell per calibration -> 5e13.
+        let ours = CalibrationCost {
+            method: "dora".into(),
+            sram_writes: 200 * 1_000,
+            ..Default::default()
+        };
+        let rounds = ours.lifespan_with_cells(1_000);
+        assert!((rounds - 5e13).abs() / 5e13 < 1e-9, "{rounds}");
+    }
+
+    #[test]
+    fn speedup_reflects_technology_ratio() {
+        let bp = CalibrationCost {
+            update_time_ns: 1e9,
+            ..Default::default()
+        };
+        let ours = CalibrationCost {
+            update_time_ns: 8e5,
+            ..Default::default()
+        };
+        assert!((ours.speedup_vs(&bp) - 1250.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn write_cost_helpers() {
+        let (t, e) = rram_write_cost(10);
+        assert_eq!(t, 1000.0);
+        assert_eq!(e, 100.0);
+        let (t, e) = sram_write_cost(100);
+        assert_eq!(t, 100.0);
+        assert_eq!(e, 5.0);
+    }
+
+    #[test]
+    fn zero_write_round_is_immortal() {
+        let c = CalibrationCost::default();
+        assert!(c.lifespan_with_cells(100).is_infinite());
+    }
+}

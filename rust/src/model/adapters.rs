@@ -1,0 +1,274 @@
+//! SRAM-resident adapter state: DoRA (A, B, M) or LoRA (A, B) per layer,
+//! plus the Adam moment tensors the step artifacts thread through.
+//!
+//! Initialization follows Algorithm 2 line 2: A ~ N(0, 1/sqrt(d)),
+//! B = 0, M = ||W_r||_2 column norm of the *read-out drifted* weight —
+//! which makes the initial adapter an exact identity (DoRA output ==
+//! plain crossbar output), a property the integration tests pin down.
+
+use anyhow::Result;
+
+use crate::sram::SramBuffer;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdapterKind {
+    Dora,
+    Lora,
+}
+
+/// Adapters + optimizer state for one layer (block or head).
+pub struct LayerAdapter {
+    pub kind: AdapterKind,
+    pub a: SramBuffer,
+    pub b: SramBuffer,
+    /// magnitude vector; zero-length for LoRA
+    pub m: SramBuffer,
+    // Adam state lives in SRAM too, but the paper's lifespan accounting
+    // counts only parameter writes; we track state words separately so
+    // the ablation (`--count-optimizer-writes`) can include them.
+    pub ma: Tensor,
+    pub va: Tensor,
+    pub mb: Tensor,
+    pub vb: Tensor,
+    pub mm: Tensor,
+    pub vm: Tensor,
+    /// Adam timestep
+    pub t: f64,
+    /// column norm from the most recent step (for the merge)
+    pub last_n: Option<Tensor>,
+}
+
+impl LayerAdapter {
+    /// `wr` is the sense-amp readout of the drifted weights [d, k].
+    pub fn init(
+        kind: AdapterKind,
+        layer_name: &str,
+        wr: &Tensor,
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Result<LayerAdapter> {
+        let (d, k) = (wr.shape()[0], wr.shape()[1]);
+        let std = 1.0 / (d as f64).sqrt();
+        let a = Tensor::new(
+            vec![d, rank],
+            (0..d * rank)
+                .map(|_| rng.normal_scaled(0.0, std) as f32)
+                .collect(),
+        )?;
+        let b = Tensor::zeros(vec![rank, k]);
+        // M init = per-column L2 norm of W_r (Algorithm 2 line 2)
+        let m = match kind {
+            AdapterKind::Dora => {
+                let mut norms = vec![0.0f32; k];
+                for i in 0..d {
+                    for (j, n) in norms.iter_mut().enumerate() {
+                        let w = wr.at2(i, j);
+                        *n += w * w;
+                    }
+                }
+                for n in &mut norms {
+                    *n = (*n + 1e-8).sqrt();
+                }
+                Tensor::from_vec(norms)
+            }
+            AdapterKind::Lora => Tensor::zeros(vec![0]),
+        };
+        Ok(LayerAdapter {
+            kind,
+            ma: Tensor::zeros(a.shape().to_vec()),
+            va: Tensor::zeros(a.shape().to_vec()),
+            mb: Tensor::zeros(b.shape().to_vec()),
+            vb: Tensor::zeros(b.shape().to_vec()),
+            mm: Tensor::zeros(m.shape().to_vec()),
+            vm: Tensor::zeros(m.shape().to_vec()),
+            a: SramBuffer::new(&format!("{layer_name}.A"), a),
+            b: SramBuffer::new(&format!("{layer_name}.B"), b),
+            m: SramBuffer::new(&format!("{layer_name}.M"), m),
+            t: 0.0,
+            last_n: None,
+        })
+    }
+
+    /// Trainable parameter words in this adapter.
+    pub fn n_params(&self) -> usize {
+        self.a.len() + self.b.len() + self.m.len()
+    }
+
+    /// Total SRAM word-writes so far (parameters only).
+    pub fn sram_writes(&self) -> u64 {
+        self.a.word_writes + self.b.word_writes + self.m.word_writes
+    }
+
+    /// Algorithm 2 line 12: merged magnitude for deployment,
+    /// M_eff = M / n with the final column norm.
+    pub fn merged_meff(&self) -> Result<Tensor> {
+        match self.kind {
+            AdapterKind::Lora => Ok(Tensor::zeros(vec![0])),
+            AdapterKind::Dora => {
+                let n = self
+                    .last_n
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("no step has run yet"))?;
+                let m = self.m.tensor();
+                let data: Vec<f32> = m
+                    .data()
+                    .iter()
+                    .zip(n.data())
+                    .map(|(&m, &n)| m / n)
+                    .collect();
+                Ok(Tensor::from_vec(data))
+            }
+        }
+    }
+}
+
+/// Full adapter state: one `LayerAdapter` per block + one for the head.
+pub struct AdapterSet {
+    pub kind: AdapterKind,
+    pub rank: usize,
+    pub layers: Vec<LayerAdapter>,
+    pub head: LayerAdapter,
+}
+
+impl AdapterSet {
+    /// `wr_blocks`: per-block drifted readouts; `wr_head`: head readout.
+    pub fn init(
+        kind: AdapterKind,
+        rank: usize,
+        wr_blocks: &[Tensor],
+        wr_head: &Tensor,
+        seed: u64,
+    ) -> Result<AdapterSet> {
+        let mut rng = Rng::new(seed);
+        let layers = wr_blocks
+            .iter()
+            .enumerate()
+            .map(|(l, wr)| {
+                LayerAdapter::init(kind, &format!("block{l}"), wr, rank, &mut rng)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let head = LayerAdapter::init(kind, "head", wr_head, rank, &mut rng)?;
+        Ok(AdapterSet { kind, rank, layers, head })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum::<usize>()
+            + self.head.n_params()
+    }
+
+    pub fn sram_writes(&self) -> u64 {
+        self.layers.iter().map(|l| l.sram_writes()).sum::<u64>()
+            + self.head.sram_writes()
+    }
+
+    /// Stacked [L, d, r] / [L, r, d] / [L, d] tensors for the full-model
+    /// eval executables (requires every layer to have stepped at least
+    /// once for DoRA's meff; identity-initialized adapters use
+    /// `stacked_identity` instead).
+    pub fn stacked(&self) -> Result<(Tensor, Tensor, Tensor)> {
+        let a = Tensor::stack(
+            &self.layers.iter().map(|l| l.a.tensor().clone()).collect::<Vec<_>>(),
+        )?;
+        let b = Tensor::stack(
+            &self.layers.iter().map(|l| l.b.tensor().clone()).collect::<Vec<_>>(),
+        )?;
+        let meff = match self.kind {
+            AdapterKind::Lora => Tensor::zeros(vec![0]),
+            AdapterKind::Dora => Tensor::stack(
+                &self
+                    .layers
+                    .iter()
+                    .map(|l| l.merged_meff())
+                    .collect::<Result<Vec<_>>>()?,
+            )?,
+        };
+        Ok((a, b, meff))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wr(d: usize, k: usize) -> Tensor {
+        Tensor::new(
+            vec![d, k],
+            (0..d * k).map(|i| (i as f32 * 0.1).sin() * 0.3).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_shapes_and_identity_m() {
+        let mut rng = Rng::new(3);
+        let w = wr(6, 4);
+        let la =
+            LayerAdapter::init(AdapterKind::Dora, "b0", &w, 2, &mut rng).unwrap();
+        assert_eq!(la.a.tensor().shape(), &[6, 2]);
+        assert_eq!(la.b.tensor().shape(), &[2, 4]);
+        assert_eq!(la.m.tensor().shape(), &[4]);
+        // B = 0
+        assert!(la.b.tensor().data().iter().all(|&v| v == 0.0));
+        // M = column norms of wr
+        for j in 0..4 {
+            let norm: f32 =
+                (0..6).map(|i| w.at2(i, j).powi(2)).sum::<f32>().sqrt();
+            assert!((la.m.tensor().data()[j] - norm).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lora_has_no_magnitude() {
+        let mut rng = Rng::new(4);
+        let la = LayerAdapter::init(AdapterKind::Lora, "b0", &wr(6, 4), 2,
+                                    &mut rng)
+        .unwrap();
+        assert_eq!(la.m.tensor().len(), 0);
+        assert_eq!(la.n_params(), 6 * 2 + 2 * 4);
+    }
+
+    #[test]
+    fn adapter_set_param_count_matches_spec_formula() {
+        let blocks: Vec<Tensor> = (0..3).map(|_| wr(8, 8)).collect();
+        let head = wr(8, 5);
+        let set =
+            AdapterSet::init(AdapterKind::Dora, 2, &blocks, &head, 9).unwrap();
+        // blocks: 3 * (8*2 + 2*8 + 8); head: 8*2 + 2*5 + 5
+        assert_eq!(set.n_params(), 3 * 40 + 31);
+    }
+
+    #[test]
+    fn merge_requires_a_step() {
+        let mut rng = Rng::new(5);
+        let la = LayerAdapter::init(AdapterKind::Dora, "b0", &wr(4, 4), 1,
+                                    &mut rng)
+        .unwrap();
+        assert!(la.merged_meff().is_err());
+    }
+
+    #[test]
+    fn merge_divides_by_norm() {
+        let mut rng = Rng::new(6);
+        let mut la = LayerAdapter::init(AdapterKind::Dora, "b0", &wr(4, 4), 1,
+                                        &mut rng)
+        .unwrap();
+        la.last_n = Some(Tensor::from_vec(vec![2.0, 2.0, 2.0, 2.0]));
+        let meff = la.merged_meff().unwrap();
+        for (e, m) in meff.data().iter().zip(la.m.tensor().data()) {
+            assert!((e - m / 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn init_is_seeded() {
+        let blocks: Vec<Tensor> = (0..2).map(|_| wr(4, 4)).collect();
+        let h = wr(4, 3);
+        let s1 = AdapterSet::init(AdapterKind::Dora, 1, &blocks, &h, 42).unwrap();
+        let s2 = AdapterSet::init(AdapterKind::Dora, 1, &blocks, &h, 42).unwrap();
+        assert_eq!(s1.layers[0].a.tensor(), s2.layers[0].a.tensor());
+        let s3 = AdapterSet::init(AdapterKind::Dora, 1, &blocks, &h, 43).unwrap();
+        assert_ne!(s1.layers[0].a.tensor(), s3.layers[0].a.tensor());
+    }
+}

@@ -1,0 +1,13 @@
+//! Host-side model state: the teacher snapshot (digital weights + ADC
+//! scales from the bundle), the student (one RRAM crossbar per layer),
+//! and the SRAM-resident adapter sets (DoRA / LoRA + Adam state).
+
+mod adapters;
+mod spec;
+mod student;
+mod teacher;
+
+pub use adapters::{AdapterKind, AdapterSet, LayerAdapter};
+pub use spec::ModelSpec;
+pub use student::StudentModel;
+pub use teacher::TeacherModel;

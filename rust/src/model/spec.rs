@@ -1,0 +1,129 @@
+//! Model shape description, parsed from the artifact manifest (mirrors
+//! python/compile/model.py::ModelSpec).
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_blocks: usize,
+    pub width: usize,
+    pub n_classes: usize,
+    pub ranks: Vec<usize>,
+    pub with_lora: bool,
+    pub teacher_acc: f64,
+    pub bundle_file: String,
+    pub tokens: usize,
+    pub step_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelSpec {
+    pub fn from_manifest(manifest: &Json, name: &str) -> Result<ModelSpec> {
+        let m = manifest
+            .req("models")
+            .get(name)
+            .with_context(|| format!("model `{name}` not in manifest"))?;
+        let c = manifest.req("constants");
+        Ok(ModelSpec {
+            name: name.to_string(),
+            n_blocks: m.req("n_blocks").as_usize().unwrap(),
+            width: m.req("width").as_usize().unwrap(),
+            n_classes: m.req("n_classes").as_usize().unwrap(),
+            ranks: m
+                .req("ranks")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|r| r.as_usize().unwrap())
+                .collect(),
+            with_lora: m.req("with_lora").as_bool().unwrap(),
+            teacher_acc: m.req("teacher_acc").as_f64().unwrap(),
+            bundle_file: m.req("bundle").as_str().unwrap().to_string(),
+            tokens: c.req("tokens").as_usize().unwrap(),
+            step_batch: c.req("step_batch").as_usize().unwrap(),
+            eval_batch: c.req("eval_batch").as_usize().unwrap(),
+        })
+    }
+
+    pub fn step_rows(&self) -> usize {
+        self.step_batch * self.tokens
+    }
+
+    pub fn eval_rows(&self) -> usize {
+        self.eval_batch * self.tokens
+    }
+
+    /// total parameters (blocks + head)
+    pub fn n_params(&self) -> usize {
+        self.n_blocks * self.width * self.width + self.width * self.n_classes
+    }
+
+    /// DoRA adapter parameters at rank `r` (paper Eq. 7 numerator,
+    /// summed over layers)
+    pub fn dora_params(&self, r: usize) -> usize {
+        let (d, c) = (self.width, self.n_classes);
+        self.n_blocks * (d * r + r * d + d) + (d * r + r * c + c)
+    }
+
+    pub fn gamma(&self, r: usize) -> f64 {
+        self.dora_params(r) as f64 / self.n_params() as f64
+    }
+
+    /// artifact name helpers
+    pub fn art(&self, family: &str) -> String {
+        format!("{family}_{}", self.name)
+    }
+
+    pub fn art_r(&self, family: &str, r: usize) -> String {
+        format!("{family}_{}_r{r}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Json {
+        Json::parse(
+            r#"{
+              "constants": {"tokens": 16, "step_batch": 32, "eval_batch": 64},
+              "models": {"mX": {
+                "n_blocks": 4, "width": 8, "n_classes": 5,
+                "ranks": [1, 2], "with_lora": true, "teacher_acc": 0.9,
+                "bundle": "bundle_mX.bin", "n_calib": 10, "n_eval": 10,
+                "artifacts": {}
+              }}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_spec() {
+        let s = ModelSpec::from_manifest(&fake_manifest(), "mX").unwrap();
+        assert_eq!(s.n_blocks, 4);
+        assert_eq!(s.width, 8);
+        assert_eq!(s.ranks, vec![1, 2]);
+        assert_eq!(s.step_rows(), 512);
+        assert_eq!(s.art("teacher_block"), "teacher_block_mX");
+        assert_eq!(s.art_r("dora_step_block", 2), "dora_step_block_mX_r2");
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(ModelSpec::from_manifest(&fake_manifest(), "nope").is_err());
+    }
+
+    #[test]
+    fn param_accounting_matches_formula() {
+        let s = ModelSpec::from_manifest(&fake_manifest(), "mX").unwrap();
+        // blocks: 4 * 8*8 = 256; head: 8*5 = 40
+        assert_eq!(s.n_params(), 296);
+        // dora r=1: blocks 4*(8+8+8)=96, head 8+5+5=18
+        assert_eq!(s.dora_params(1), 114);
+        assert!((s.gamma(1) - 114.0 / 296.0).abs() < 1e-12);
+    }
+}

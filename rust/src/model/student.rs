@@ -1,0 +1,124 @@
+//! Student model: the teacher's weights *programmed into RRAM crossbars*
+//! (one per block + one for the head). Owns the drift lifecycle and
+//! produces the stacked conductance tensors the AOT executables consume.
+
+use anyhow::Result;
+
+use super::spec::ModelSpec;
+use super::teacher::TeacherModel;
+use crate::device::{DriftModel, ProgramModel};
+use crate::rram::{ArrayCounters, Crossbar};
+use crate::util::tensor::Tensor;
+
+pub struct StudentModel {
+    pub blocks: Vec<Crossbar>,
+    pub head: Crossbar,
+    /// ADC scales copied from the teacher (deployment calibration data)
+    pub adc_fs: Tensor,
+    pub adc_fs_head: Tensor,
+}
+
+impl StudentModel {
+    /// Program the teacher into fresh crossbars (write-and-verify).
+    pub fn program(
+        spec: &ModelSpec,
+        teacher: &TeacherModel,
+        drift: DriftModel,
+        program: ProgramModel,
+        seed: u64,
+    ) -> Result<StudentModel> {
+        let mut blocks = Vec::with_capacity(spec.n_blocks);
+        for l in 0..spec.n_blocks {
+            let w = teacher.block_weights(l);
+            let w_max = w.max_abs() as f64 + 1e-9;
+            blocks.push(Crossbar::program_weights(
+                &w,
+                w_max,
+                drift,
+                program,
+                seed.wrapping_add(l as u64 + 1),
+            )?);
+        }
+        let w_max = teacher.wh.max_abs() as f64 + 1e-9;
+        let head = Crossbar::program_weights(
+            &teacher.wh,
+            w_max,
+            drift,
+            program,
+            seed.wrapping_add(10_000),
+        )?;
+        Ok(StudentModel {
+            blocks,
+            head,
+            adc_fs: teacher.adc_fs.clone(),
+            adc_fs_head: teacher.adc_fs_head.clone(),
+        })
+    }
+
+    /// Jump straight to saturated drift (the Fig. 2/4/5/6 setting).
+    pub fn apply_saturated_drift(&mut self) {
+        for b in &mut self.blocks {
+            b.apply_saturated_drift();
+        }
+        self.head.apply_saturated_drift();
+    }
+
+    /// Advance the relaxation clock on every array.
+    pub fn advance_time(&mut self, hours: f64) {
+        for b in &mut self.blocks {
+            b.advance_time(hours);
+        }
+        self.head.advance_time(hours);
+    }
+
+    /// Reprogram every array from digital weights (the backprop baseline's
+    /// in-field write path; wears RRAM).
+    pub fn reprogram(&mut self, wb: &Tensor, wh: &Tensor) -> Result<()> {
+        for (l, b) in self.blocks.iter_mut().enumerate() {
+            b.reprogram(&wb.subtensor(l))?;
+        }
+        self.head.reprogram(wh)
+    }
+
+    // ---- stacked executable inputs ----------------------------------
+
+    /// [L, d, d] stacked current conductances.
+    pub fn gp_stack(&self) -> Result<Tensor> {
+        Tensor::stack(&self.blocks.iter().map(|b| b.gp_tensor()).collect::<Vec<_>>())
+    }
+
+    pub fn gn_stack(&self) -> Result<Tensor> {
+        Tensor::stack(&self.blocks.iter().map(|b| b.gn_tensor()).collect::<Vec<_>>())
+    }
+
+    /// [L] per-block 1/w_scale.
+    pub fn inv_scale_stack(&self) -> Tensor {
+        Tensor::from_vec(self.blocks.iter().map(|b| b.inv_w_scale()).collect())
+    }
+
+    /// Charge one MVM readout per array (one forward pass through the
+    /// chip) `n` times.
+    pub fn count_forward_reads(&mut self, n: u64) {
+        for b in &mut self.blocks {
+            b.count_read(n);
+        }
+        self.head.count_read(n);
+    }
+
+    /// Total RRAM counters across all arrays.
+    pub fn total_counters(&self) -> ArrayCounters {
+        let mut total = ArrayCounters::default();
+        for b in &self.blocks {
+            total.merge(&b.counters);
+        }
+        total.merge(&self.head.counters);
+        total
+    }
+
+    /// Total RRAM cells (both devices of every differential pair).
+    pub fn total_devices(&self) -> u64 {
+        let block_cells: usize =
+            self.blocks.iter().map(|b| 2 * b.rows() * b.cols()).sum();
+        (block_cells + 2 * self.head.rows() * self.head.cols()) as u64
+    }
+}

@@ -1,0 +1,116 @@
+//! Teacher snapshot: the GPU-trained (here: build-time JAX-trained)
+//! digital weights + the per-layer ADC full-scale calibration constants,
+//! loaded from the artifact bundle.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::spec::ModelSpec;
+use crate::util::tensor::Tensor;
+use crate::util::tensorfile::read_bundle;
+
+#[derive(Debug, Clone)]
+pub struct TeacherModel {
+    /// stacked block weights [L, d, d]
+    pub wb: Tensor,
+    /// head weights [d, C]
+    pub wh: Tensor,
+    /// per-block ADC full-scale [L]
+    pub adc_fs: Tensor,
+    /// head ADC full-scale [1]
+    pub adc_fs_head: Tensor,
+}
+
+impl TeacherModel {
+    pub fn load(dir: &Path, spec: &ModelSpec) -> Result<TeacherModel> {
+        let bundle = read_bundle(&dir.join(&spec.bundle_file))?;
+        let get = |k: &str| -> Result<Tensor> {
+            Ok(bundle
+                .get(k)
+                .with_context(|| format!("bundle key {k}"))?
+                .tensor
+                .clone())
+        };
+        let t = TeacherModel {
+            wb: get("wb")?,
+            wh: get("wh")?,
+            adc_fs: get("adc_fs")?,
+            adc_fs_head: get("adc_fs_head")?,
+        };
+        t.validate(spec)?;
+        Ok(t)
+    }
+
+    pub fn validate(&self, spec: &ModelSpec) -> Result<()> {
+        let (l, d, c) = (spec.n_blocks, spec.width, spec.n_classes);
+        if self.wb.shape() != [l, d, d] {
+            bail!("wb shape {:?} != [{l},{d},{d}]", self.wb.shape());
+        }
+        if self.wh.shape() != [d, c] {
+            bail!("wh shape {:?} != [{d},{c}]", self.wh.shape());
+        }
+        if self.adc_fs.shape() != [l] || self.adc_fs_head.shape() != [1] {
+            bail!("adc_fs shapes wrong");
+        }
+        Ok(())
+    }
+
+    /// Block-`l` weight matrix [d, d].
+    pub fn block_weights(&self, l: usize) -> Tensor {
+        self.wb.subtensor(l)
+    }
+
+    pub fn adc_fs_block(&self, l: usize) -> f32 {
+        self.adc_fs.data()[l]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            n_blocks: 2,
+            width: 4,
+            n_classes: 3,
+            ranks: vec![1],
+            with_lora: false,
+            teacher_acc: 0.0,
+            bundle_file: String::new(),
+            tokens: 2,
+            step_batch: 2,
+            eval_batch: 2,
+        }
+    }
+
+    fn fake_teacher() -> TeacherModel {
+        TeacherModel {
+            wb: Tensor::zeros(vec![2, 4, 4]),
+            wh: Tensor::zeros(vec![4, 3]),
+            adc_fs: Tensor::from_vec(vec![1.0, 2.0]),
+            adc_fs_head: Tensor::from_vec(vec![3.0]),
+        }
+    }
+
+    #[test]
+    fn validate_accepts_consistent() {
+        assert!(fake_teacher().validate(&fake_spec()).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let mut t = fake_teacher();
+        t.wh = Tensor::zeros(vec![4, 4]);
+        assert!(t.validate(&fake_spec()).is_err());
+    }
+
+    #[test]
+    fn block_accessors() {
+        let t = fake_teacher();
+        assert_eq!(t.block_weights(1).shape(), &[4, 4]);
+        assert_eq!(t.adc_fs_block(1), 2.0);
+    }
+}

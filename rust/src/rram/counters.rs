@@ -1,0 +1,91 @@
+//! Per-array operation counters — the raw data behind Table I, §IV-D
+//! (lifespan) and §IV-E (speed).
+
+/// All counters are cumulative since array construction.
+#[derive(Debug, Clone, Default)]
+pub struct ArrayCounters {
+    /// individual write pulses (every write-verify attempt counts)
+    pub write_attempts: u64,
+    /// writes that passed verification
+    pub verified_writes: u64,
+    /// writes swallowed by stuck (worn-out) cells
+    pub stuck_writes: u64,
+    /// cells that crossed the endurance limit
+    pub endurance_failures: u64,
+    /// MVM readouts through the array
+    pub reads: u64,
+    /// drift re-sampling events (advance_time / apply_saturated_drift)
+    pub drift_events: u64,
+    pub write_time_ns: f64,
+    pub write_energy_pj: f64,
+    pub read_energy_pj: f64,
+    /// attempts histogram: [1, 2, 3, 4, >=5]
+    pub attempts_hist: [u64; 5],
+}
+
+impl ArrayCounters {
+    pub fn attempts_histogram_add(&mut self, attempt: u32) {
+        let bucket = (attempt as usize - 1).min(4);
+        self.attempts_hist[bucket] += 1;
+    }
+
+    pub fn merge(&mut self, other: &ArrayCounters) {
+        self.write_attempts += other.write_attempts;
+        self.verified_writes += other.verified_writes;
+        self.stuck_writes += other.stuck_writes;
+        self.endurance_failures += other.endurance_failures;
+        self.reads += other.reads;
+        self.drift_events += other.drift_events;
+        self.write_time_ns += other.write_time_ns;
+        self.write_energy_pj += other.write_energy_pj;
+        self.read_energy_pj += other.read_energy_pj;
+        for i in 0..5 {
+            self.attempts_hist[i] += other.attempts_hist[i];
+        }
+    }
+
+    /// Mean write-verify attempts per verified cell write.
+    pub fn mean_attempts(&self) -> f64 {
+        if self.verified_writes == 0 {
+            return 0.0;
+        }
+        self.write_attempts as f64 / self.verified_writes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = ArrayCounters {
+            write_attempts: 10,
+            verified_writes: 5,
+            reads: 3,
+            write_time_ns: 1000.0,
+            ..Default::default()
+        };
+        let b = ArrayCounters {
+            write_attempts: 7,
+            verified_writes: 5,
+            reads: 4,
+            write_time_ns: 700.0,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.write_attempts, 17);
+        assert_eq!(a.reads, 7);
+        assert!((a.write_time_ns - 1700.0).abs() < 1e-9);
+        assert!((a.mean_attempts() - 1.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut c = ArrayCounters::default();
+        for attempt in [1, 2, 3, 4, 5, 9] {
+            c.attempts_histogram_add(attempt);
+        }
+        assert_eq!(c.attempts_hist, [1, 1, 1, 1, 2]);
+    }
+}

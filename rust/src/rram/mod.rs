@@ -1,0 +1,484 @@
+//! RRAM crossbar array simulator — the hardware substrate the paper
+//! evaluates on (via its compact model), built out in full:
+//!
+//! * differential-pair storage of a `rows x cols` weight matrix,
+//! * iterative **write-and-verify** programming with per-attempt noise
+//!   (every attempt is counted: endurance, latency, energy),
+//! * **conductance relaxation** via `device::DriftModel`, evolved in
+//!   wall-clock time by `advance_time` (log-time accumulation, per-cell
+//!   frozen offsets so repeated reads are consistent),
+//! * endurance bookkeeping and failure injection: a cell whose write
+//!   count exceeds endurance becomes *stuck* and ignores further writes,
+//! * read (MVM) energy/latency accounting for the metrics layer.
+//!
+//! The actual MVM arithmetic of the deployed model runs inside the AOT
+//! HLO artifacts (the Pallas crossbar kernel); this module owns the
+//! *state* — conductances and counters — and hands `gp()/gn()` tensors to
+//! the runtime as executable inputs. `read_weights()` is the slow
+//! sense-amp readout path used once per calibration round to obtain
+//! `W_r` for the DoRA column norm (reads do not wear the device).
+
+mod counters;
+
+pub use counters::ArrayCounters;
+
+use crate::device::{constants, DriftModel, ProgramModel, WeightCoding};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use anyhow::{bail, Result};
+
+/// One differential crossbar array holding a `rows x cols` weight matrix.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    rows: usize,
+    cols: usize,
+    coding: WeightCoding,
+    drift: DriftModel,
+    program: ProgramModel,
+    /// programmed targets (what write-verify converged to)
+    gp_t: Vec<f64>,
+    gn_t: Vec<f64>,
+    /// current (drifted) conductances
+    gp: Vec<f64>,
+    gn: Vec<f64>,
+    /// per-cell write counts (gp then gn, 2*rows*cols entries)
+    writes: Vec<u32>,
+    /// cells past endurance are stuck at their last value
+    stuck: Vec<bool>,
+    /// hours since last programming (drift clock)
+    age_hours: f64,
+    /// drift noise is frozen per (cell, epoch) so reads are consistent;
+    /// re-sampled when `advance_time` moves the clock
+    rng: Rng,
+    pub counters: ArrayCounters,
+}
+
+impl Crossbar {
+    /// Allocate an array for a weight matrix with range `w_max`, and
+    /// program `weights` into it (write-and-verify per cell).
+    pub fn program_weights(
+        weights: &Tensor,
+        w_max: f64,
+        drift: DriftModel,
+        program: ProgramModel,
+        seed: u64,
+    ) -> Result<Crossbar> {
+        if weights.shape().len() != 2 {
+            bail!("crossbar wants a 2-D weight matrix, got {:?}", weights.shape());
+        }
+        let (rows, cols) = (weights.shape()[0], weights.shape()[1]);
+        let n = rows * cols;
+        let mut xb = Crossbar {
+            rows,
+            cols,
+            coding: WeightCoding::new(constants::G_MAX, w_max),
+            drift,
+            program,
+            gp_t: vec![0.0; n],
+            gn_t: vec![0.0; n],
+            gp: vec![0.0; n],
+            gn: vec![0.0; n],
+            writes: vec![0; 2 * n],
+            stuck: vec![false; 2 * n],
+            age_hours: 0.0,
+            rng: Rng::new(seed),
+            counters: ArrayCounters::default(),
+        };
+        xb.reprogram(weights)?;
+        Ok(xb)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn coding(&self) -> WeightCoding {
+        self.coding
+    }
+
+    pub fn age_hours(&self) -> f64 {
+        self.age_hours
+    }
+
+    pub fn set_drift_model(&mut self, drift: DriftModel) {
+        self.drift = drift;
+    }
+
+    /// Write-and-verify the full matrix (in-field reprogramming: this is
+    /// exactly what the backprop baseline must pay for every update).
+    /// Resets the drift clock.
+    pub fn reprogram(&mut self, weights: &Tensor) -> Result<()> {
+        if weights.shape() != [self.rows, self.cols] {
+            bail!(
+                "reprogram shape {:?} != array {}x{}",
+                weights.shape(),
+                self.rows,
+                self.cols
+            );
+        }
+        for (i, &w) in weights.data().iter().enumerate() {
+            let (tp, tn) = self.coding.encode(w as f64);
+            self.program_cell(i, true, tp);
+            self.program_cell(i, false, tn);
+        }
+        self.age_hours = 0.0;
+        // post-programming state: conductances at their programmed values
+        self.gp.copy_from_slice(&self.gp_t);
+        self.gn.copy_from_slice(&self.gn_t);
+        Ok(())
+    }
+
+    /// Iterative write-and-verify of one device. Each attempt costs
+    /// `RRAM_WRITE_NS` and one endurance cycle (ref [6]).
+    fn program_cell(&mut self, idx: usize, positive: bool, target: f64) {
+        let widx = if positive { idx } else { self.rows * self.cols + idx };
+        if self.stuck[widx] {
+            self.counters.stuck_writes += 1;
+            return;
+        }
+        let g_max = self.coding.g_max;
+        let tol = self.program.verify_tol * g_max;
+        let sigma = self.program.program_sigma * g_max;
+        let mut value = f64::NAN;
+        for attempt in 1..=self.program.max_attempts {
+            self.writes[widx] += 1;
+            self.counters.write_attempts += 1;
+            self.counters.write_time_ns += constants::RRAM_WRITE_NS;
+            self.counters.write_energy_pj += constants::RRAM_WRITE_PJ;
+            if f64::from(self.writes[widx]) > constants::RRAM_ENDURANCE {
+                self.stuck[widx] = true;
+                self.counters.endurance_failures += 1;
+                break;
+            }
+            value = (target + self.rng.normal_scaled(0.0, sigma))
+                .clamp(0.0, g_max);
+            if (value - target).abs() <= tol {
+                self.counters.verified_writes += 1;
+                self.counters.attempts_histogram_add(attempt);
+                break;
+            }
+        }
+        let slot = if positive { &mut self.gp_t } else { &mut self.gn_t };
+        slot[idx] = if value.is_nan() { target } else { value };
+    }
+
+    /// Advance the drift clock and re-sample relaxed conductances.
+    ///
+    /// Drift is sampled fresh from the *programmed targets* with the
+    /// accumulated time factor (not compounded on previous samples), which
+    /// matches the compact model: G_r(t) = G_t + N(0, sigma(t)^2).
+    pub fn advance_time(&mut self, hours: f64) {
+        assert!(hours >= 0.0);
+        self.age_hours += hours;
+        let tf = self.drift.time_factor(self.age_hours);
+        let g_max = self.coding.g_max;
+        for i in 0..self.gp.len() {
+            self.gp[i] = self.drift.apply(self.gp_t[i], g_max, tf, &mut self.rng);
+            self.gn[i] = self.drift.apply(self.gn_t[i], g_max, tf, &mut self.rng);
+        }
+        self.counters.drift_events += 1;
+    }
+
+    /// Apply saturated drift immediately (the Fig. 2/4/5/6 setting:
+    /// "relative drift = X%" with no explicit timeline).
+    pub fn apply_saturated_drift(&mut self) {
+        self.age_hours = self.drift.sat_hours;
+        let g_max = self.coding.g_max;
+        for i in 0..self.gp.len() {
+            self.gp[i] = self.drift.apply(self.gp_t[i], g_max, 1.0, &mut self.rng);
+            self.gn[i] = self.drift.apply(self.gn_t[i], g_max, 1.0, &mut self.rng);
+        }
+        self.counters.drift_events += 1;
+    }
+
+    /// Current conductance planes as f32 tensors (executable inputs).
+    pub fn gp_tensor(&self) -> Tensor {
+        Tensor::new(
+            vec![self.rows, self.cols],
+            self.gp.iter().map(|&g| g as f32).collect(),
+        )
+        .expect("shape consistent")
+    }
+
+    pub fn gn_tensor(&self) -> Tensor {
+        Tensor::new(
+            vec![self.rows, self.cols],
+            self.gn.iter().map(|&g| g as f32).collect(),
+        )
+        .expect("shape consistent")
+    }
+
+    /// `1 / w_scale` input expected by the HLO artifacts.
+    pub fn inv_w_scale(&self) -> f32 {
+        (1.0 / self.coding.w_scale()) as f32
+    }
+
+    /// Slow sense-amp readout of the effective (drifted) weights — used
+    /// once per calibration round for the DoRA column norm. Counted as a
+    /// read, never as a write.
+    pub fn read_weights(&mut self) -> Tensor {
+        self.count_read(1);
+        Tensor::new(
+            vec![self.rows, self.cols],
+            self.gp
+                .iter()
+                .zip(&self.gn)
+                .map(|(&p, &n)| self.coding.decode(p, n) as f32)
+                .collect(),
+        )
+        .expect("shape consistent")
+    }
+
+    /// Account for `n` MVM readouts through this array.
+    pub fn count_read(&mut self, n: u64) {
+        self.counters.reads += n;
+        self.counters.read_energy_pj += n as f64
+            * self.rows as f64
+            * self.cols as f64
+            * constants::RRAM_READ_PJ_PER_CELL;
+    }
+
+    /// RMS programming error |G_programmed - G_ideal| in weight units —
+    /// used by tests and the drift_explorer example.
+    pub fn programming_rms_error(&self, ideal: &Tensor) -> f64 {
+        let ws = self.coding.w_scale();
+        let mut sq = 0.0;
+        for (i, &w) in ideal.data().iter().enumerate() {
+            let (tp, tn) = self.coding.encode(w as f64);
+            let ep = self.gp_t[i] - tp;
+            let en = self.gn_t[i] - tn;
+            sq += ((ep - en) / ws).powi(2);
+        }
+        (sq / ideal.len() as f64).sqrt()
+    }
+
+    /// Max per-cell write count (endurance pressure indicator).
+    pub fn max_cell_writes(&self) -> u32 {
+        self.writes.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn stuck_cells(&self) -> usize {
+        self.stuck.iter().filter(|&&s| s).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DriftModel;
+
+    fn small_weights(seed: u64, rows: usize, cols: usize) -> (Tensor, f64) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.normal_scaled(0.0, 0.2) as f32)
+            .collect();
+        let t = Tensor::new(vec![rows, cols], data).unwrap();
+        let w_max = t.max_abs() as f64 + 1e-9;
+        (t, w_max)
+    }
+
+    #[test]
+    fn programming_hits_verify_tolerance() {
+        let (w, w_max) = small_weights(1, 16, 16);
+        let xb = Crossbar::program_weights(
+            &w,
+            w_max,
+            DriftModel::with_rel(0.0),
+            ProgramModel::default(),
+            7,
+        )
+        .unwrap();
+        // every programmed weight within ~2 * tol of ideal (pair of devices)
+        let tol_w = 2.0 * ProgramModel::default().verify_tol * constants::G_MAX
+            / xb.coding.w_scale();
+        let rms = xb.programming_rms_error(&w);
+        assert!(rms <= tol_w, "rms {rms} > {tol_w}");
+    }
+
+    #[test]
+    fn write_verify_costs_multiple_attempts() {
+        let (w, w_max) = small_weights(2, 16, 16);
+        let xb = Crossbar::program_weights(
+            &w,
+            w_max,
+            DriftModel::with_rel(0.0),
+            ProgramModel::default(),
+            8,
+        )
+        .unwrap();
+        // with sigma=2% and tol=1%, acceptance per attempt is ~38%, so the
+        // average attempts/cell must be well above 1
+        let per_cell =
+            xb.counters.write_attempts as f64 / (2.0 * 16.0 * 16.0);
+        assert!(per_cell > 1.5, "attempts/cell {per_cell}");
+        assert!(xb.counters.write_time_ns > 0.0);
+        assert!(xb.counters.write_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn zero_drift_readout_matches_programmed() {
+        let (w, w_max) = small_weights(3, 8, 8);
+        let mut xb = Crossbar::program_weights(
+            &w,
+            w_max,
+            DriftModel::with_rel(0.0),
+            ProgramModel::default(),
+            9,
+        )
+        .unwrap();
+        xb.apply_saturated_drift();
+        let back = xb.read_weights();
+        for (a, b) in back.data().iter().zip(w.data()) {
+            assert!((a - b).abs() < 0.02, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn drift_grows_with_rel() {
+        let (w, w_max) = small_weights(4, 16, 16);
+        let mut err = Vec::new();
+        for rel in [0.05, 0.2] {
+            let mut xb = Crossbar::program_weights(
+                &w,
+                w_max,
+                DriftModel::with_rel(rel),
+                ProgramModel::default(),
+                10,
+            )
+            .unwrap();
+            xb.apply_saturated_drift();
+            let back = xb.read_weights();
+            let mse: f32 = back
+                .data()
+                .iter()
+                .zip(w.data())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / w.len() as f32;
+            err.push(mse);
+        }
+        assert!(err[1] > 2.0 * err[0], "{err:?}");
+    }
+
+    #[test]
+    fn advance_time_accumulates_log_style() {
+        let (w, w_max) = small_weights(5, 16, 16);
+        let mk = || {
+            Crossbar::program_weights(
+                &w,
+                w_max,
+                DriftModel::with_rel(0.2),
+                ProgramModel::default(),
+                11,
+            )
+            .unwrap()
+        };
+        let mse_of = |xb: &mut Crossbar| {
+            let back = xb.read_weights();
+            back.data()
+                .iter()
+                .zip(w.data())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / w.len() as f32
+        };
+        let mut early = mk();
+        early.advance_time(0.5);
+        let mut late = mk();
+        late.advance_time(2000.0);
+        let (e, l) = (mse_of(&mut early), mse_of(&mut late));
+        assert!(l > e, "late {l} <= early {e}");
+        // saturation: another epoch adds little
+        let mut very_late = mk();
+        very_late.advance_time(20_000.0);
+        let vl = mse_of(&mut very_late);
+        assert!(vl < 2.0 * l, "saturation violated: {vl} vs {l}");
+    }
+
+    #[test]
+    fn reprogram_resets_drift_clock_and_restores_accuracy() {
+        let (w, w_max) = small_weights(6, 8, 8);
+        let mut xb = Crossbar::program_weights(
+            &w,
+            w_max,
+            DriftModel::with_rel(0.25),
+            ProgramModel::default(),
+            12,
+        )
+        .unwrap();
+        xb.apply_saturated_drift();
+        let drifted_err = xb.programming_rms_error(&w); // targets unchanged
+        assert!(xb.age_hours() > 0.0);
+        xb.reprogram(&w).unwrap();
+        assert_eq!(xb.age_hours(), 0.0);
+        let back = xb.read_weights();
+        for (a, b) in back.data().iter().zip(w.data()) {
+            assert!((a - b).abs() < 0.02);
+        }
+        let _ = drifted_err;
+    }
+
+    #[test]
+    fn endurance_failure_injection() {
+        let (w, w_max) = small_weights(7, 4, 4);
+        let mut pm = ProgramModel::default();
+        pm.max_attempts = 4;
+        let mut xb =
+            Crossbar::program_weights(&w, w_max, DriftModel::with_rel(0.0), pm, 13)
+                .unwrap();
+        // brute-force the endurance counter on one cell
+        xb.writes[0] = (constants::RRAM_ENDURANCE as u32).saturating_sub(1);
+        for _ in 0..8 {
+            xb.reprogram(&w).unwrap();
+        }
+        assert!(xb.stuck_cells() >= 1);
+        assert!(xb.counters.endurance_failures >= 1);
+        // stuck cell ignores later writes without counting attempts
+        let before = xb.counters.stuck_writes;
+        xb.reprogram(&w).unwrap();
+        assert!(xb.counters.stuck_writes > before);
+    }
+
+    #[test]
+    fn read_accounting() {
+        let (w, w_max) = small_weights(8, 8, 8);
+        let mut xb = Crossbar::program_weights(
+            &w,
+            w_max,
+            DriftModel::with_rel(0.1),
+            ProgramModel::default(),
+            14,
+        )
+        .unwrap();
+        xb.count_read(100);
+        assert_eq!(xb.counters.reads, 100);
+        assert!(xb.counters.read_energy_pj > 0.0);
+        // reads never touch write counters
+        let writes_before = xb.counters.write_attempts;
+        xb.count_read(50);
+        assert_eq!(xb.counters.write_attempts, writes_before);
+    }
+
+    #[test]
+    fn gp_gn_tensors_have_expected_shape_and_range() {
+        let (w, w_max) = small_weights(9, 8, 12);
+        let xb = Crossbar::program_weights(
+            &w,
+            w_max,
+            DriftModel::with_rel(0.2),
+            ProgramModel::default(),
+            15,
+        )
+        .unwrap();
+        let gp = xb.gp_tensor();
+        assert_eq!(gp.shape(), &[8, 12]);
+        assert!(gp.data().iter().all(|&g| (0.0..=100.0).contains(&g)));
+        assert_eq!(xb.gn_tensor().shape(), &[8, 12]);
+        assert!(xb.inv_w_scale() > 0.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Tensor <-> xla::Literal conversion.
+
+use anyhow::{bail, Result};
+
+use crate::util::tensor::Tensor;
+
+/// Host tensor -> f32 literal with the same dims.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, 4 * t.len())
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("literal from shape {:?}: {e:?}", t.shape()))
+}
+
+/// f32 literal -> host tensor (shape preserved).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+    if data.len() != dims.iter().product::<usize>() {
+        bail!("literal element count mismatch: {:?} vs {}", dims, data.len());
+    }
+    Tensor::new(dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_various_shapes() {
+        for shape in [vec![1], vec![4], vec![2, 3], vec![2, 2, 2]] {
+            let n: usize = shape.iter().product();
+            let t = Tensor::new(
+                shape.clone(),
+                (0..n).map(|i| i as f32 * 0.5 - 1.0).collect(),
+            )
+            .unwrap();
+            let lit = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&lit).unwrap();
+            assert_eq!(back, t, "shape {shape:?}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! SRAM model for the DoRA adapter parameters (paper Fig. 1d / §IV-D).
+//!
+//! The paper's core architectural claim is that calibration writes go to
+//! SRAM (fast, ~1e16 endurance) instead of RRAM (slow, ~1e8). This module
+//! owns the adapter parameter storage and counts every word write so
+//! Table I's lifespan/speed columns come from measured counters, not
+//! assumptions.
+
+use crate::device::constants;
+use crate::util::tensor::Tensor;
+
+use anyhow::{bail, Result};
+
+/// A named SRAM-resident f32 buffer with write accounting.
+#[derive(Debug, Clone)]
+pub struct SramBuffer {
+    name: String,
+    tensor: Tensor,
+    /// cumulative word writes (one per changed f32)
+    pub word_writes: u64,
+    pub write_time_ns: f64,
+    pub write_energy_pj: f64,
+}
+
+impl SramBuffer {
+    pub fn new(name: &str, tensor: Tensor) -> Self {
+        let n = tensor.len() as u64;
+        SramBuffer {
+            name: name.to_string(),
+            tensor,
+            // initial fill counts as writes
+            word_writes: n,
+            write_time_ns: n as f64 * constants::SRAM_WRITE_NS,
+            write_energy_pj: n as f64 * constants::SRAM_WRITE_PJ,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn tensor(&self) -> &Tensor {
+        &self.tensor
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensor.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensor.is_empty()
+    }
+
+    /// Charge `steps` full-buffer rewrites without materializing host
+    /// copies — used by the device-resident calibration hot loop, where
+    /// parameters stay in PJRT buffers between steps but each optimizer
+    /// step still physically rewrites the SRAM words.
+    pub fn charge_step_writes(&mut self, steps: u64) {
+        let n = self.tensor.len() as u64 * steps;
+        self.word_writes += n;
+        self.write_time_ns += n as f64 * constants::SRAM_WRITE_NS;
+        self.write_energy_pj += n as f64 * constants::SRAM_WRITE_PJ;
+    }
+
+    /// Overwrite the buffer contents (one calibration step's update).
+    /// Every word is charged as an SRAM write.
+    pub fn store(&mut self, new: Tensor) -> Result<()> {
+        if new.shape() != self.tensor.shape() {
+            bail!(
+                "sram store shape mismatch for {}: {:?} vs {:?}",
+                self.name,
+                new.shape(),
+                self.tensor.shape()
+            );
+        }
+        let n = new.len() as u64;
+        self.word_writes += n;
+        self.write_time_ns += n as f64 * constants::SRAM_WRITE_NS;
+        self.write_energy_pj += n as f64 * constants::SRAM_WRITE_PJ;
+        self.tensor = new;
+        Ok(())
+    }
+
+    /// Remaining calibrations before SRAM endurance is exhausted, given
+    /// `writes_per_calibration` word writes per round.
+    pub fn calibrations_left(&self, writes_per_calibration: u64) -> f64 {
+        if writes_per_calibration == 0 {
+            return f64::INFINITY;
+        }
+        constants::SRAM_ENDURANCE / writes_per_calibration as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_fill_is_counted() {
+        let b = SramBuffer::new("a", Tensor::zeros(vec![4, 4]));
+        assert_eq!(b.word_writes, 16);
+        assert!((b.write_time_ns - 16.0 * constants::SRAM_WRITE_NS).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_accumulates() {
+        let mut b = SramBuffer::new("a", Tensor::zeros(vec![8]));
+        b.store(Tensor::from_vec(vec![1.0; 8])).unwrap();
+        b.store(Tensor::from_vec(vec![2.0; 8])).unwrap();
+        assert_eq!(b.word_writes, 24);
+        assert_eq!(b.tensor().data()[0], 2.0);
+    }
+
+    #[test]
+    fn store_rejects_shape_change() {
+        let mut b = SramBuffer::new("a", Tensor::zeros(vec![8]));
+        assert!(b.store(Tensor::zeros(vec![4])).is_err());
+    }
+
+    #[test]
+    fn lifespan_is_many_orders_beyond_rram() {
+        let b = SramBuffer::new("a", Tensor::zeros(vec![200]));
+        // paper §IV-D: 200 SRAM updates per calibration -> 5e13 calibrations
+        let calib = b.calibrations_left(200);
+        assert!((calib - 5e13).abs() / 5e13 < 1e-9, "{calib}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Mini benchmark harness (no criterion in the offline build env).
+//!
+//! `cargo bench` targets use `Harness` to time closures with warmup,
+//! report mean/p50/p95 and ops/s, and to print the paper-table rows the
+//! fig*/table* benches regenerate. Output is plain markdown so bench logs
+//! drop straight into EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Harness {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness { warmup_iters: 3, measure_iters: 10, results: Vec::new() }
+    }
+}
+
+impl Harness {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Harness { warmup_iters: warmup, measure_iters: iters, results: Vec::new() }
+    }
+
+    /// Time `f` and record stats under `name`. Returns the mean in ns.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            mean_ns: mean,
+            p50_ns: samples[samples.len() / 2],
+            p95_ns: samples[((samples.len() as f64 * 0.95) as usize)
+                .min(samples.len() - 1)],
+            min_ns: samples[0],
+        };
+        println!(
+            "  {:40} mean {:>10}  p50 {:>10}  p95 {:>10}  ({} iters)",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        self.results.push(stats);
+        mean
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    pub fn print_summary(&self, title: &str) {
+        println!("\n## {title}\n");
+        println!("| benchmark | mean | p50 | p95 | ops/s |");
+        println!("|---|---|---|---|---|");
+        for s in &self.results {
+            println!(
+                "| {} | {} | {} | {} | {:.1} |",
+                s.name,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+                s.ops_per_sec()
+            );
+        }
+    }
+}
+
+/// Print a markdown table (used by the paper-figure benches).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", vec!["---"; header.len()].join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_stats() {
+        let mut h = Harness::new(1, 5);
+        let mean = h.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(mean > 0.0);
+        assert_eq!(h.results().len(), 1);
+        assert!(h.results()[0].p50_ns <= h.results()[0].p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

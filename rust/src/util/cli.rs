@@ -1,0 +1,172 @@
+//! Tiny CLI argument parser (no clap in the offline build env).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! typed getters with defaults; collects unknown flags for error
+//! reporting. Subcommand dispatch lives in `main.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.seen.push(k.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                    out.seen.push(name.to_string());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                    out.seen.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key}={v}: expected a boolean"),
+        }
+    }
+
+    /// Comma-separated f64 list, e.g. `--drifts 0.1,0.2,0.3`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("--{key}={v}")))
+                .collect(),
+        }
+    }
+
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("--{key}={v}")))
+                .collect(),
+        }
+    }
+
+    /// Error if any provided flag is not in `known` (catches typos).
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in &self.seen {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known: {}",
+                      known.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(" "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = argv("calibrate --model m20 --rank=4 --verbose");
+        assert_eq!(a.positional, vec!["calibrate"]);
+        assert_eq!(a.get("model"), Some("m20"));
+        assert_eq!(a.usize_or("rank", 1).unwrap(), 4);
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = argv("x");
+        assert_eq!(a.usize_or("epochs", 20).unwrap(), 20);
+        assert_eq!(a.f64_or("lr", 0.01).unwrap(), 0.01);
+        assert_eq!(a.str_or("model", "m20"), "m20");
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = argv("x --drifts 0.1,0.2,0.3 --sizes 1,10,100");
+        assert_eq!(a.f64_list_or("drifts", &[]).unwrap(), vec![0.1, 0.2, 0.3]);
+        assert_eq!(a.usize_list_or("sizes", &[]).unwrap(), vec![1, 10, 100]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = argv("x --rank abc");
+        assert!(a.usize_or("rank", 1).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let a = argv("x --modle m20");
+        assert!(a.reject_unknown(&["model"]).is_err());
+        let b = argv("x --model m20");
+        assert!(b.reject_unknown(&["model"]).is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = argv("x --bias=-0.5");
+        assert_eq!(a.f64_or("bias", 0.0).unwrap(), -0.5);
+    }
+}

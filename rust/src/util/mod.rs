@@ -1,0 +1,12 @@
+//! Self-contained substrates the offline build environment forces us to
+//! own: JSON, a seedable PRNG with normal sampling, a tensor container,
+//! the artifact-bundle binary format, a mini property-testing harness and
+//! a mini bench harness (no serde / rand / proptest / criterion available).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod tensor;
+pub mod tensorfile;

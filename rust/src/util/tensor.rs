@@ -1,0 +1,210 @@
+//! Host-side tensor: a flat f32 buffer + shape. This is the lingua franca
+//! between the substrates (crossbars, adapters, datasets) and the PJRT
+//! runtime (which converts to/from `xla::Literal`).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elems, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar1(v: f32) -> Tensor {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {shape:?} mismatch", self.shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row-major 2-D accessor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Slice of the `i`-th leading-axis sub-tensor (e.g. layer `i` of
+    /// a stacked `[L, d, d]` tensor).
+    pub fn subtensor(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let stride: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * stride..(i + 1) * stride].to_vec(),
+        }
+    }
+
+    /// Stack equal-shape tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        let inner = parts[0].shape.clone();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            if p.shape != inner {
+                bail!("stack shape mismatch: {:?} vs {inner:?}", p.shape);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&inner);
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Mean squared difference against another tensor of the same shape.
+    pub fn mse(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("mse shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        let n = self.data.len().max(1);
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n as f32)
+    }
+
+    /// argmax over the last axis for a 2-D tensor -> one index per row.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2);
+        let (n, c) = (self.shape[0], self.shape[1]);
+        (0..n)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn subtensor_slices_leading_axis() {
+        let t = Tensor::new(vec![2, 2, 2], (0..8).map(|i| i as f32).collect())
+            .unwrap();
+        let s = t.subtensor(1);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn stack_roundtrips_subtensor() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![3.0, 4.0]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.subtensor(0), a.reshaped(vec![2]).unwrap());
+        assert_eq!(s.subtensor(1), b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![3.0]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0])
+            .unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn mse_and_stats() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(vec![1.0, 2.0, 5.0]);
+        assert!((a.mse(&b).unwrap() - 4.0 / 3.0).abs() < 1e-6);
+        assert_eq!(a.max_abs(), 3.0);
+        assert!((a.mean() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::from_vec(vec![0.0; 6]);
+        assert!(t.clone().reshaped(vec![2, 3]).is_ok());
+        assert!(t.reshaped(vec![4, 2]).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Reader for the RIMC tensor-bundle format written by
+//! `python/compile/tensorfile.py` (see that file for the layout), plus a
+//! writer so rust-side state (calibrated adapters, experiment outputs)
+//! can be checkpointed in the same format.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"RIMCTNSR";
+const VERSION: u32 = 1;
+
+/// A named tensor with its on-disk dtype. i32 tensors (labels) are widened
+/// to f32 in `Tensor` but kept exact (labels are small integers).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub tensor: Tensor,
+    pub was_i32: bool,
+}
+
+pub type Bundle = BTreeMap<String, Entry>;
+
+pub fn read_bundle(path: &Path) -> Result<Bundle> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_bundle(&buf).with_context(|| format!("parse {}", path.display()))
+}
+
+fn parse_bundle(buf: &[u8]) -> Result<Bundle> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > buf.len() {
+            bail!("truncated bundle at byte {pos:?}+{n}");
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32at = |pos: &mut usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+    };
+
+    if take(&mut pos, 8)? != MAGIC {
+        bail!("bad magic");
+    }
+    let version = u32at(&mut pos)?;
+    if version != VERSION {
+        bail!("unsupported bundle version {version}");
+    }
+    let count = u32at(&mut pos)? as usize;
+    let mut out = Bundle::new();
+    for _ in 0..count {
+        let name_len = u32at(&mut pos)? as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+        let dtype = take(&mut pos, 1)?[0];
+        let ndim = take(&mut pos, 1)?[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32at(&mut pos)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let raw = take(&mut pos, 4 * n)?;
+        let data: Vec<f32> = match dtype {
+            0 => raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            1 => raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect(),
+            d => bail!("unknown dtype id {d}"),
+        };
+        out.insert(
+            name,
+            Entry { tensor: Tensor::new(shape, data)?, was_i32: dtype == 1 },
+        );
+    }
+    Ok(out)
+}
+
+pub fn write_bundle(path: &Path, tensors: &[(&str, &Tensor)]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&[0u8, t.shape().len() as u8])?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("rimc_tf_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .unwrap();
+        let b = Tensor::scalar1(7.5);
+        write_bundle(&p, &[("a", &a), ("b", &b)]).unwrap();
+        let back = read_bundle(&p).unwrap();
+        assert_eq!(back["a"].tensor, a);
+        assert_eq!(back["b"].tensor, b);
+        assert!(!back["a"].was_i32);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_bundle(b"NOTMAGIC\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join("rimc_tf_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let a = Tensor::from_vec(vec![1.0; 100]);
+        write_bundle(&p, &[("a", &a)]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(parse_bundle(&bytes[..bytes.len() - 10]).is_err());
+    }
+}

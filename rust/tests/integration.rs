@@ -1,0 +1,320 @@
+//! Integration tests over the full stack: artifacts -> PJRT runtime ->
+//! substrates -> calibration engine. Requires `make artifacts` to have
+//! run (the repo ships with the stamp; CI runs it first).
+
+use std::path::Path;
+
+use rimc_dora::calib::{BackpropConfig, CalibConfig, InputMode};
+use rimc_dora::coordinator::{Engine, Evaluator};
+use rimc_dora::dataset::Dataset;
+use rimc_dora::model::{AdapterKind, AdapterSet};
+use rimc_dora::util::tensor::Tensor;
+
+fn engine() -> Engine {
+    Engine::open(Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+fn quick_cfg() -> CalibConfig {
+    CalibConfig {
+        kind: AdapterKind::Dora,
+        rank: 2,
+        lr: 1e-2,
+        max_steps_per_layer: 60,
+        loss_threshold: 1e-4,
+        input_mode: InputMode::Sequential,
+        seed: 7,
+    }
+}
+
+// ---------------------------------------------------------------------
+// runtime
+// ---------------------------------------------------------------------
+
+#[test]
+fn manifest_lists_both_models_and_all_artifact_families() {
+    let eng = engine();
+    let names = eng.model_names();
+    assert!(names.contains(&"m20".to_string()));
+    assert!(names.contains(&"m50".to_string()));
+    for family in [
+        "teacher_block_m20",
+        "teacher_head_m20",
+        "student_block_m20",
+        "model_fwd_m20",
+        "student_fwd_m20",
+        "bp_step_m20",
+        "dora_block_m20_r2",
+        "dora_step_block_m20_r2",
+        "dora_step_head_m20_r2",
+        "dora_model_fwd_m20_r2",
+        "lora_step_block_m20_r2",
+        "lora_model_fwd_m20_r2",
+        "dora_model_fwd_m50_r4",
+    ] {
+        assert!(eng.store.info(family).is_some(), "missing {family}");
+    }
+}
+
+#[test]
+fn teacher_block_matches_host_math() {
+    // relu(X W) + X computed by the artifact == host-side reference
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let exe = eng.store.executable("teacher_block_m20").unwrap();
+    let rows = session.spec.step_rows();
+    let d = session.spec.width;
+    let x = Tensor::new(
+        vec![rows, d],
+        (0..rows * d).map(|i| ((i % 97) as f32 - 48.0) * 0.02).collect(),
+    )
+    .unwrap();
+    let w = session.teacher.block_weights(0);
+    let out = exe.execute(&[&x, &w]).unwrap().remove(0);
+    assert_eq!(out.shape(), &[rows, d]);
+    // spot-check a handful of entries against host math
+    for &(i, j) in &[(0usize, 0usize), (3, 5), (100, 63), (511, 31)] {
+        let mut acc = 0f32;
+        for k in 0..d {
+            acc += x.at2(i, k) * w.at2(k, j);
+        }
+        let want = acc.max(0.0) + x.at2(i, j);
+        let got = out.at2(i, j);
+        assert!((got - want).abs() < 1e-3, "({i},{j}): {got} vs {want}");
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let eng = engine();
+    let a = eng.store.executable("teacher_block_m20").unwrap();
+    let before = eng.store.stats().compiles;
+    let b = eng.store.executable("teacher_block_m20").unwrap();
+    assert_eq!(eng.store.stats().compiles, before);
+    assert_eq!(a.name(), b.name());
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let eng = engine();
+    assert!(eng.store.executable("nope").is_err());
+}
+
+// ---------------------------------------------------------------------
+// adapter identity property
+// ---------------------------------------------------------------------
+
+#[test]
+fn fresh_dora_adapter_is_identity() {
+    // B=0, M=||W_r||_c  =>  dora_block output == student_block output
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let mut student = session.drifted_student(0.2, 11).unwrap();
+    let wr: Vec<Tensor> =
+        student.blocks.iter_mut().map(|b| b.read_weights()).collect();
+    let wr_head = student.head.read_weights();
+    let adapters =
+        AdapterSet::init(AdapterKind::Dora, 2, &wr, &wr_head, 5).unwrap();
+
+    let rows = session.spec.step_rows();
+    let d = session.spec.width;
+    let x = Tensor::new(
+        vec![rows, d],
+        (0..rows * d).map(|i| ((i * 31 % 101) as f32 - 50.0) * 0.02).collect(),
+    )
+    .unwrap();
+    let gp = student.blocks[0].gp_tensor();
+    let gn = student.blocks[0].gn_tensor();
+    let inv = Tensor::scalar1(student.blocks[0].inv_w_scale());
+    let fs = Tensor::scalar1(student.adc_fs.data()[0]);
+
+    let plain = eng
+        .store
+        .executable("student_block_m20")
+        .unwrap()
+        .execute(&[&x, &gp, &gn, &inv, &fs])
+        .unwrap()
+        .remove(0);
+
+    // identity meff = M / ||W_r||_c = 1 (no step has run, compute directly)
+    let la = &adapters.layers[0];
+    let meff = Tensor::from_vec(vec![1.0f32; d]);
+    let dora = eng
+        .store
+        .executable("dora_block_m20_r2")
+        .unwrap()
+        .execute(&[&x, &gp, &gn, &inv, &fs, la.a.tensor(), la.b.tensor(),
+                   &meff])
+        .unwrap()
+        .remove(0);
+    let mse = plain.mse(&dora).unwrap();
+    assert!(mse < 1e-6, "identity violated: mse {mse}");
+}
+
+// ---------------------------------------------------------------------
+// end-to-end calibration
+// ---------------------------------------------------------------------
+
+#[test]
+fn calibration_restores_accuracy_without_rram_writes() {
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let ev = Evaluator::new(session.store, &session.spec);
+    let mut student = session.drifted_student(0.2, 3).unwrap();
+    let pre = ev.student(&mut student, &session.dataset).unwrap();
+
+    let writes_before = student.total_counters().write_attempts;
+    let (x, y) = session.dataset.calib_subset(10).unwrap();
+    let calibrator = session.feature_calibrator(quick_cfg()).unwrap();
+    let outcome = calibrator
+        .calibrate(&mut student, &session.teacher, &x, &y)
+        .unwrap();
+    let post = ev
+        .calibrated(&mut student, &outcome.adapters, &session.dataset)
+        .unwrap();
+
+    // headline claims, in order:
+    assert!(post > pre + 0.10, "restoration too weak: {pre} -> {post}");
+    assert_eq!(
+        student.total_counters().write_attempts,
+        writes_before,
+        "calibration wrote RRAM!"
+    );
+    assert_eq!(outcome.cost.rram_writes, 0);
+    assert!(outcome.cost.sram_writes > 0);
+    assert!(outcome.cost.trainable_fraction < 0.10);
+    // layer losses must improve
+    for t in &outcome.traces {
+        assert!(
+            t.last_loss <= t.first_loss,
+            "{}: {} -> {}",
+            t.layer,
+            t.first_loss,
+            t.last_loss
+        );
+    }
+}
+
+#[test]
+fn lora_calibration_runs_but_underperforms_dora() {
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let ev = Evaluator::new(session.store, &session.spec);
+    let (x, y) = session.dataset.calib_subset(10).unwrap();
+
+    let mut acc = [0.0f64; 2];
+    for (i, kind) in [AdapterKind::Dora, AdapterKind::Lora].iter().enumerate()
+    {
+        let mut student = session.drifted_student(0.2, 3).unwrap();
+        // paper budget (20 epochs) at rank 1 — where DoRA's magnitude
+        // vector gives its clearest, seed-robust advantage (Fig. 6);
+        // at long budgets/high ranks the gap is noise-level on our
+        // width-64 substitute (EXPERIMENTS.md §Deviations)
+        let cfg = CalibConfig {
+            kind: *kind,
+            rank: 1,
+            max_steps_per_layer: 20,
+            ..quick_cfg()
+        };
+        let calibrator = session.feature_calibrator(cfg).unwrap();
+        let outcome = calibrator
+            .calibrate(&mut student, &session.teacher, &x, &y)
+            .unwrap();
+        acc[i] = ev
+            .calibrated(&mut student, &outcome.adapters, &session.dataset)
+            .unwrap();
+    }
+    assert!(acc[0] > acc[1], "dora {} <= lora {}", acc[0], acc[1]);
+}
+
+#[test]
+fn backprop_baseline_wears_rram() {
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let ev = Evaluator::new(session.store, &session.spec);
+    let mut student = session.drifted_student(0.2, 3).unwrap();
+    let (x, y) = session.dataset.calib_subset(32).unwrap();
+    let writes_before = student.total_counters().write_attempts;
+    let bp = session.backprop_calibrator(BackpropConfig {
+        epochs: 5,
+        ..Default::default()
+    });
+    let out = bp.calibrate(&mut student, &session.teacher, &x, &y).unwrap();
+    assert!(out.cost.rram_writes > 0);
+    assert!(
+        student.total_counters().write_attempts > writes_before,
+        "deployment reprogram must hit the arrays"
+    );
+    assert!(out.losses.last().unwrap() < out.losses.first().unwrap());
+    let _ = ev;
+}
+
+#[test]
+fn teacher_eval_matches_buildtime_accuracy() {
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let ev = Evaluator::new(session.store, &session.spec);
+    let acc = ev.teacher(&session.teacher, &session.dataset).unwrap();
+    // build-time accuracy was computed on the same split with the same
+    // batching; the PJRT path must agree closely
+    assert!(
+        (acc - session.spec.teacher_acc).abs() < 0.01,
+        "eval {acc} vs manifest {}",
+        session.spec.teacher_acc
+    );
+}
+
+#[test]
+fn input_mode_ablation_both_restore() {
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let ev = Evaluator::new(session.store, &session.spec);
+    let (x, y) = session.dataset.calib_subset(10).unwrap();
+    let mut accs = Vec::new();
+    for mode in [InputMode::Sequential, InputMode::TeacherInput] {
+        let mut student = session.drifted_student(0.2, 3).unwrap();
+        let pre = ev.student(&mut student, &session.dataset).unwrap();
+        let cfg = CalibConfig { input_mode: mode, ..quick_cfg() };
+        let calibrator = session.feature_calibrator(cfg).unwrap();
+        let outcome = calibrator
+            .calibrate(&mut student, &session.teacher, &x, &y)
+            .unwrap();
+        let post = ev
+            .calibrated(&mut student, &outcome.adapters, &session.dataset)
+            .unwrap();
+        assert!(post > pre, "{mode:?}: {pre} -> {post}");
+        accs.push(post);
+    }
+}
+
+#[test]
+fn rank_not_lowered_is_rejected() {
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let cfg = CalibConfig { rank: 3, ..quick_cfg() };
+    assert!(session.feature_calibrator(cfg).is_err());
+}
+
+#[test]
+fn lora_on_m50_is_rejected() {
+    let eng = engine();
+    let session = eng.session("m50").unwrap();
+    let cfg = CalibConfig { kind: AdapterKind::Lora, rank: 2, ..quick_cfg() };
+    assert!(session.feature_calibrator(cfg).is_err());
+}
+
+// ---------------------------------------------------------------------
+// dataset wiring
+// ---------------------------------------------------------------------
+
+#[test]
+fn dataset_loads_with_expected_shapes() {
+    let eng = engine();
+    let session = eng.session("m20").unwrap();
+    let ds: &Dataset = &session.dataset;
+    assert_eq!(ds.dim, session.spec.width);
+    assert_eq!(ds.tokens, session.spec.tokens);
+    assert!(ds.n_calib() >= 2000, "fig-4 needs a 2000-sample pool");
+    assert!(ds.n_eval() >= 1000);
+    // labels within range
+    assert!(ds.eval_y.iter().all(|&y| y < session.spec.n_classes));
+}

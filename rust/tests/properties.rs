@@ -1,0 +1,232 @@
+//! Property-based tests over the hardware substrates (mini-quickcheck
+//! harness; see util::quickcheck). These pin down the coordinator
+//! invariants: routing of writes to the right memory, drift statistics,
+//! endurance monotonicity, batching coverage.
+
+use rimc_dora::calib::make_batches;
+use rimc_dora::device::{constants, DriftModel, ProgramModel, WeightCoding};
+use rimc_dora::prop_assert;
+use rimc_dora::rram::Crossbar;
+use rimc_dora::sram::SramBuffer;
+use rimc_dora::util::quickcheck::forall;
+use rimc_dora::util::rng::Rng;
+use rimc_dora::util::tensor::Tensor;
+
+fn rand_weights(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    Tensor::new(
+        vec![rows, cols],
+        (0..rows * cols)
+            .map(|_| rng.normal_scaled(0.0, 0.3) as f32)
+            .collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_weight_coding_roundtrips_within_range() {
+    forall(
+        1,
+        500,
+        |r| (r.uniform_in(0.05, 2.0), r.uniform_in(-1.0, 1.0)),
+        |&(w_max, frac)| {
+            let coding = WeightCoding::new(constants::G_MAX, w_max);
+            let w = w_max * frac;
+            let (gp, gn) = coding.encode(w);
+            prop_assert!(gp >= 0.0 && gn >= 0.0, "negative conductance");
+            prop_assert!(
+                gp <= constants::G_MAX && gn <= constants::G_MAX,
+                "conductance over range"
+            );
+            let back = coding.decode(gp, gn);
+            prop_assert!(
+                (back - w).abs() < 1e-9,
+                "roundtrip {w} -> {back}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_programming_error_bounded_by_verify_tolerance() {
+    forall(
+        2,
+        20,
+        |r| (4 + r.below(12), 4 + r.below(12), r.next_u64()),
+        |&(rows, cols, seed)| {
+            let mut rng = Rng::new(seed);
+            let w = rand_weights(&mut rng, rows, cols);
+            let w_max = w.max_abs() as f64 + 1e-9;
+            let xb = Crossbar::program_weights(
+                &w,
+                w_max,
+                DriftModel::with_rel(0.0),
+                ProgramModel::default(),
+                seed,
+            )
+            .map_err(|e| e.to_string())?;
+            let tol_w = 2.0 * ProgramModel::default().verify_tol
+                * constants::G_MAX
+                / (constants::G_MAX / w_max);
+            let rms = xb.programming_rms_error(&w);
+            prop_assert!(
+                rms <= tol_w * 1.5,
+                "{rows}x{cols}: rms {rms} > {tol_w}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_drift_error_scales_with_rel() {
+    forall(
+        3,
+        10,
+        |r| (r.next_u64(), r.uniform_in(0.05, 0.15)),
+        |&(seed, rel)| {
+            let mut rng = Rng::new(seed);
+            let w = rand_weights(&mut rng, 24, 24);
+            let w_max = w.max_abs() as f64 + 1e-9;
+            let mse_at = |rel: f64, seed: u64| -> Result<f32, String> {
+                let mut xb = Crossbar::program_weights(
+                    &w,
+                    w_max,
+                    DriftModel::with_rel(rel),
+                    ProgramModel::default(),
+                    seed,
+                )
+                .map_err(|e| e.to_string())?;
+                xb.apply_saturated_drift();
+                let back = xb.read_weights();
+                Ok(back
+                    .data()
+                    .iter()
+                    .zip(w.data())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+                    / w.len() as f32)
+            };
+            let lo = mse_at(rel, seed)?;
+            let hi = mse_at(rel * 2.5, seed)?;
+            prop_assert!(hi > lo, "mse({rel})={lo} vs mse({})={hi}", rel * 2.5);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reads_never_wear_cells() {
+    forall(
+        4,
+        50,
+        |r| (r.next_u64(), 1 + r.below(1000)),
+        |&(seed, n_reads)| {
+            let mut rng = Rng::new(seed);
+            let w = rand_weights(&mut rng, 8, 8);
+            let mut xb = Crossbar::program_weights(
+                &w,
+                w.max_abs() as f64 + 1e-9,
+                DriftModel::with_rel(0.1),
+                ProgramModel::default(),
+                seed,
+            )
+            .map_err(|e| e.to_string())?;
+            let writes = xb.counters.write_attempts;
+            let wear = xb.max_cell_writes();
+            for _ in 0..n_reads {
+                xb.count_read(1);
+            }
+            let _ = xb.read_weights();
+            prop_assert!(
+                xb.counters.write_attempts == writes
+                    && xb.max_cell_writes() == wear,
+                "reads changed write counters"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sram_write_accounting_is_linear() {
+    forall(
+        5,
+        100,
+        |r| (1 + r.below(64), 1 + r.below(20)),
+        |&(len, stores)| {
+            let mut buf = SramBuffer::new("t", Tensor::zeros(vec![len]));
+            for i in 0..stores {
+                buf.store(Tensor::filled(vec![len], i as f32))
+                    .map_err(|e| e.to_string())?;
+            }
+            let want = (len * (stores + 1)) as u64;
+            prop_assert!(
+                buf.word_writes == want,
+                "writes {} != {want}",
+                buf.word_writes
+            );
+            let want_ns = want as f64 * constants::SRAM_WRITE_NS;
+            prop_assert!(
+                (buf.write_time_ns - want_ns).abs() < 1e-6,
+                "time accounting"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batches_cover_all_samples_exactly_once() {
+    forall(
+        6,
+        100,
+        |r| (1 + r.below(70), 1 + r.below(4), 1 + r.below(8)),
+        |&(n, t, d)| {
+            let x = Tensor::new(
+                vec![n, t, d],
+                (0..n * t * d).map(|i| i as f32).collect(),
+            )
+            .map_err(|e| e.to_string())?;
+            let y: Vec<usize> = (0..n).map(|i| i % 3).collect();
+            let batches =
+                make_batches(&x, &y, 16, 3).map_err(|e| e.to_string())?;
+            let total: usize = batches.iter().map(|b| b.n_real).sum();
+            prop_assert!(total == n, "covered {total} of {n}");
+            // mask words equal real rows
+            let mask_rows: f32 = batches
+                .iter()
+                .map(|b| b.row_mask.data().iter().sum::<f32>())
+                .sum();
+            prop_assert!(
+                mask_rows as usize == n * t,
+                "row masks {mask_rows} != {}",
+                n * t
+            );
+            // first real row of batch 0 is sample 0's first token
+            let b0 = &batches[0];
+            prop_assert!(
+                b0.x_rows.data()[0] == 0.0 && b0.x_rows.data()[d - 1] == (d - 1) as f32,
+                "sample order broken"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_time_factor_monotone_in_time() {
+    forall(
+        7,
+        200,
+        |r| (r.uniform_in(0.0, 500.0), r.uniform_in(0.1, 500.0)),
+        |&(t0, dt)| {
+            let d = DriftModel::with_rel(0.2);
+            let f0 = d.time_factor(t0);
+            let f1 = d.time_factor(t0 + dt);
+            prop_assert!(f1 >= f0, "time factor decreased: {f0} -> {f1}");
+            prop_assert!((0.0..=1.0).contains(&f1), "out of range {f1}");
+            Ok(())
+        },
+    );
+}
