@@ -1,0 +1,39 @@
+# rimc-dora build entry points.
+#
+# The default (native) build is hermetic: no Python, no XLA libraries, no
+# artifacts directory required. `make artifacts` regenerates the optional
+# AOT HLO artifacts for the PJRT backend and needs the JAX toolchain.
+
+CARGO_DIR := rust
+
+.PHONY: build test fmt clippy check artifacts clean
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt --check
+
+clippy:
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
+check: build test fmt clippy
+
+# AOT HLO artifacts for the optional PJRT backend (`--features pjrt`).
+# Requires python3 + jax; errors out with instructions when absent.
+artifacts:
+	@python3 -c "import jax" 2>/dev/null || { \
+	  echo "error: 'make artifacts' needs the JAX toolchain (python3 + jax)"; \
+	  echo "       to lower the compute graphs in python/compile to HLO."; \
+	  echo "       Install jax (pip install jax) and re-run, or skip this"; \
+	  echo "       target entirely: the default NATIVE backend needs no"; \
+	  echo "       artifacts (see DESIGN.md \"Backends\")."; \
+	  exit 1; }
+	cd python && python3 -m compile.aot --outdir ../artifacts
+
+clean:
+	cd $(CARGO_DIR) && cargo clean
+	rm -rf artifacts

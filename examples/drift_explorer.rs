@@ -10,7 +10,7 @@ use rimc_dora::rram::Crossbar;
 use rimc_dora::util::rng::Rng;
 use rimc_dora::util::tensor::Tensor;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rimc_dora::anyhow::Result<()> {
     let mut rng = Rng::new(1);
     let w = Tensor::new(
         vec![64, 64],

@@ -5,17 +5,15 @@
 //!
 //!     cargo run --release --example edge_deployment
 
-use std::path::Path;
-
 use rimc_dora::calib::CalibConfig;
 use rimc_dora::coordinator::{
     Engine, RecalibrationScheduler, SchedulerPolicy,
 };
 use rimc_dora::device::DriftModel;
 
-fn main() -> anyhow::Result<()> {
-    let eng = Engine::open(Path::new("artifacts"))?;
-    let session = eng.session("m20")?;
+fn main() -> rimc_dora::anyhow::Result<()> {
+    let eng = Engine::native();
+    let session = eng.session("nano")?;
 
     // a fresh device with 20%-asymptotic drift physics
     let mut student =

@@ -13,7 +13,7 @@ use rimc_dora::metrics::params::{
 };
 use rimc_dora::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rimc_dora::anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(2)); // skip bin + `--`
     let years = args.f64_or("years", 10.0)?;
     let interval_h = args.f64_or("interval-hours", 24.0)?;

@@ -1,28 +1,27 @@
 //! Quickstart — the end-to-end driver (DESIGN.md §validation):
-//! load artifacts -> program the teacher into simulated RRAM crossbars
-//! (write-and-verify) -> let conductances relax 20% -> calibrate with
-//! 10 samples of DoRA feature-KD -> evaluate, proving all three layers
-//! (rust coordinator, JAX graphs, Pallas kernels) compose.
+//! synthesize the task + train a teacher natively -> program it into
+//! simulated RRAM crossbars (write-and-verify) -> let conductances
+//! relax 20% -> calibrate with 10 samples of DoRA feature-KD ->
+//! evaluate. Hermetic: no artifacts, Python, or XLA needed.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use std::path::Path;
 use std::time::Instant;
 
 use rimc_dora::calib::CalibConfig;
-use rimc_dora::coordinator::{Engine, Evaluator};
+use rimc_dora::coordinator::Engine;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rimc_dora::anyhow::Result<()> {
     let t0 = Instant::now();
     println!("== rimc-dora quickstart ==\n");
 
-    // 1. open the AOT artifact store (compiled lazily via PJRT)
-    let eng = Engine::open(Path::new("artifacts"))?;
-    let session = eng.session("m20")?;
+    // 1. native engine: synthesize the dataset + train the teacher
+    let eng = Engine::native();
+    let session = eng.session("nano")?;
     println!(
-        "model m20: {} residual blocks x width {}, {} classes \
+        "model nano: {} residual blocks x width {}, {} classes \
          ({} weights on RRAM)",
         session.spec.n_blocks,
         session.spec.width,
@@ -31,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 2. teacher accuracy (digital reference)
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
     println!("teacher (digital) accuracy:        {:.2}%", 100.0 * teacher_acc);
 

@@ -5,17 +5,16 @@
 //! (fully parallelizable across layers, but deployment-mismatched).
 //! Algorithm 1 is ambiguous between the two — this bench quantifies it.
 
-use std::path::Path;
 use std::time::Instant;
 
 use rimc_dora::calib::{CalibConfig, InputMode};
-use rimc_dora::coordinator::{Engine, Evaluator};
+use rimc_dora::coordinator::Engine;
 use rimc_dora::util::bench::print_table;
 
 fn main() {
-    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
-    let session = eng.session("m20").unwrap();
-    let ev = Evaluator::new(session.store, &session.spec);
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let ev = session.evaluator();
     let t0 = Instant::now();
 
     let mut rows = Vec::new();
@@ -45,7 +44,7 @@ fn main() {
         }
     }
     print_table(
-        "Ablation — calibration input mode (m20, n=10, r=2)",
+        "Ablation — calibration input mode (nano, n=10, r=2)",
         &["drift", "mode", "pre-calib", "post-calib", "delta"],
         &rows,
     );

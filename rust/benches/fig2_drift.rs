@@ -3,25 +3,24 @@
 //! Paper shape: monotone degradation; the deeper net (m50 ~ ResNet-50)
 //! falls faster than the shallow one (m20 ~ ResNet-20).
 
-use std::path::Path;
 use std::time::Instant;
 
 use rimc_dora::coordinator::{fig2_drift_sweep, Engine};
 use rimc_dora::util::bench::print_table;
 
 fn main() {
-    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
+    let eng = Engine::native();
     let drifts = [0.0, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30];
-    for model in ["m20", "m50"] {
+    for model in ["nano", "micro"] {
         let t0 = Instant::now();
         let session = eng.session(model).unwrap();
-        let seeds: &[u64] = if model == "m20" { &[3, 4, 5] } else { &[3, 4] };
+        let seeds: &[u64] = if model == "nano" { &[3, 4, 5] } else { &[3, 4] };
         let rows = fig2_drift_sweep(&session, &drifts, seeds).unwrap();
         print_table(
             &format!(
                 "Fig. 2 ({model}) — accuracy vs relative drift \
                  [paper: ResNet-{} monotone degradation]",
-                if model == "m20" { "20" } else { "50" }
+                if model == "nano" { "20" } else { "50" }
             ),
             &["rel drift", "acc mean", "acc min", "acc max", "teacher"],
             &rows

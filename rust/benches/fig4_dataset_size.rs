@@ -5,9 +5,8 @@
 //! or below it; feature@10 ~ backprop@(much larger n).
 //!
 //! `RIMC_FIG4_FULL=1 cargo bench --bench fig4_dataset_size` adds the
-//! paper's 2000-sample backprop point on m20 (slow).
+//! largest backprop point the nano calibration pool holds (256).
 
-use std::path::Path;
 use std::time::Instant;
 
 use rimc_dora::calib::{BackpropConfig, CalibConfig};
@@ -15,19 +14,19 @@ use rimc_dora::coordinator::{fig4_dataset_size_sweep, Engine};
 use rimc_dora::util::bench::print_table;
 
 fn main() {
-    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
+    let eng = Engine::native();
     let full = std::env::var("RIMC_FIG4_FULL").is_ok();
 
-    // m20 at r=2 (paper: CIFAR-100, r=2); m50 at r=4 (paper: ImageNet, r=4)
+    // nano at r=2 (paper: CIFAR-100, r=2); micro at r=4 (paper: ImageNet, r=4)
     let plans: &[(&str, usize, Vec<usize>)] = &[
-        ("m20", 2, {
+        ("nano", 2, {
             let mut v = vec![1, 2, 5, 10, 20, 50, 100];
             if full {
-                v.push(2000);
+                v.push(256);
             }
             v
         }),
-        ("m50", 4, vec![1, 10, 50, 125]),
+        ("micro", 4, vec![1, 10, 50, 125]),
     ];
 
     for (model, rank, sizes) in plans {

@@ -3,7 +3,6 @@
 //! grows with r (diminishing returns) while the Eq.-7 parameter overhead
 //! grows linearly — the lightweight-vs-quality trade-off of §IV-C.
 
-use std::path::Path;
 use std::time::Instant;
 
 use rimc_dora::calib::CalibConfig;
@@ -11,8 +10,8 @@ use rimc_dora::coordinator::{fig5_rank_sweep, Engine};
 use rimc_dora::util::bench::print_table;
 
 fn main() {
-    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
-    for model in ["m20", "m50"] {
+    let eng = Engine::native();
+    for model in ["nano", "micro"] {
         let t0 = Instant::now();
         let session = eng.session(model).unwrap();
         let rows =

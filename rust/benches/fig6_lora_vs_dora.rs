@@ -1,8 +1,7 @@
 //! Fig. 6 reproduction: LoRA- vs DoRA-enhanced feature calibration on
-//! m20 at 20% and 15% relative drift, ranks 1..8. Paper's sharpest
+//! the nano model at 20% and 15% relative drift, ranks 1..8. Paper's sharpest
 //! claim: worst DoRA (r=1) still beats best LoRA (r=8).
 
-use std::path::Path;
 use std::time::Instant;
 
 use rimc_dora::calib::CalibConfig;
@@ -10,8 +9,8 @@ use rimc_dora::coordinator::{fig6_lora_vs_dora, Engine};
 use rimc_dora::util::bench::print_table;
 
 fn main() {
-    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
-    let session = eng.session("m20").unwrap();
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
     let t0 = Instant::now();
     // paper budget: 20 epochs over the 10-sample set == 20 Adam steps.
     // DoRA's magnitude/direction decoupling is an *optimization-speed*
@@ -25,7 +24,7 @@ fn main() {
     let rows = fig6_lora_vs_dora(&session, &[0.20, 0.15], 10, &cfg, 3)
         .unwrap();
     print_table(
-        "Fig. 6 (m20) — LoRA vs DoRA feature calibration (n=10)",
+        "Fig. 6 (nano) — LoRA vs DoRA feature calibration (n=10)",
         &["drift", "rank", "DoRA acc", "LoRA acc", "DoRA-LoRA gap"],
         &rows
             .iter()

@@ -1,20 +1,26 @@
-//! L3 hot-path microbenchmarks: PJRT dispatch latency for every
-//! executable class on the request path, plus the literal-upload vs
-//! device-resident-buffer comparison that motivates
-//! `Executable::execute_buffers` (EXPERIMENTS.md §Perf).
+//! Backend hot-path microbenchmarks: per-dispatch latency of every
+//! kernel class on the request path — single-layer forwards (the
+//! in-field inference path), the DoRA Adam step (the calibration inner
+//! loop), the backprop baseline step, and the stacked full-model eval
+//! forward. Runs on the native backend, hermetically; rebuild with
+//! `--features pjrt` and use the CLI to compare against the artifact
+//! path.
 
-use std::path::Path;
-
+use rimc_dora::calib::CalibConfig;
 use rimc_dora::coordinator::Engine;
 use rimc_dora::model::{AdapterKind, AdapterSet};
+use rimc_dora::runtime::{
+    AdapterIo, Backend, BpState, LayerRole, NativeBackend, StepIo,
+};
 use rimc_dora::util::bench::Harness;
 use rimc_dora::util::tensor::Tensor;
 
 fn main() {
-    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
-    let session = eng.session("m20").unwrap();
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
     let spec = &session.spec;
     let mut student = session.drifted_student(0.2, 3).unwrap();
+    let backend = NativeBackend::new();
 
     let rows = spec.step_rows();
     let d = spec.width;
@@ -24,22 +30,16 @@ fn main() {
     )
     .unwrap();
     let w = session.teacher.block_weights(0);
-    let gp = student.blocks[0].gp_tensor();
-    let gn = student.blocks[0].gn_tensor();
-    let inv = Tensor::scalar1(student.blocks[0].inv_w_scale());
-    let fs = Tensor::scalar1(student.adc_fs.data()[0]);
+    let arr = student.block_io(0);
 
     let mut h = Harness::new(5, 30);
 
     // -- per-layer forwards (the in-field inference path)
-    let teacher_block = eng.store.executable("teacher_block_m20").unwrap();
-    h.bench("teacher_block execute (literals)", || {
-        teacher_block.execute(&[&x, &w]).unwrap();
+    h.bench("teacher_block forward", || {
+        backend.teacher_block(spec, &x, &w).unwrap();
     });
-
-    let student_block = eng.store.executable("student_block_m20").unwrap();
-    h.bench("student_block (crossbar kernel)", || {
-        student_block.execute(&[&x, &gp, &gn, &inv, &fs]).unwrap();
+    h.bench("student_block (crossbar MVM + ADC)", || {
+        backend.student_block(spec, &x, &arr).unwrap();
     });
 
     let wr: Vec<Tensor> =
@@ -49,42 +49,63 @@ fn main() {
         AdapterSet::init(AdapterKind::Dora, 2, &wr, &wrh, 5).unwrap();
     let la = &adapters.layers[0];
     let meff = Tensor::from_vec(vec![1.0f32; d]);
-    let dora_block = eng.store.executable("dora_block_m20_r2").unwrap();
-    h.bench("dora_block (fused DoRA kernel)", || {
-        dora_block
-            .execute(&[&x, &gp, &gn, &inv, &fs, la.a.tensor(), la.b.tensor(),
-                       &meff])
+    h.bench("dora_block (merged, fused path)", || {
+        backend
+            .dora_block(
+                spec,
+                &x,
+                &arr,
+                AdapterIo { a: la.a.tensor(), b: la.b.tensor(), meff: &meff },
+            )
             .unwrap();
     });
 
-    // -- calibration step (the calibration hot loop)
-    let step = eng.store.executable("dora_step_block_m20_r2").unwrap();
+    // -- calibration step (the Algorithm-1 hot loop)
+    let cfg = CalibConfig::default();
     let mask = Tensor::filled(vec![rows], 1.0);
-    let ft = x.clone();
-    let zeros_a = Tensor::zeros(vec![d, 2]);
-    let zeros_b = Tensor::zeros(vec![2, d]);
-    let zeros_m = Tensor::zeros(vec![d]);
-    let t1 = Tensor::scalar1(1.0);
-    let lr = Tensor::scalar1(0.01);
-    h.bench("dora_step_block (fwd+bwd+adam)", || {
-        step.execute(&[
-            &x, &mask, &ft, &gp, &gn, &inv, &fs, la.a.tensor(),
-            la.b.tensor(), la.m.tensor(), &zeros_a, &zeros_a, &zeros_b,
-            &zeros_b, &zeros_m, &zeros_m, &t1, &lr,
-        ])
-        .unwrap();
+    let target = backend.teacher_block(spec, &x, &w).unwrap();
+    let mut st = la.step_state();
+    let mut t = 0.0f64;
+    h.bench("dora_step (fwd + hand-VJP + Adam)", || {
+        t += 1.0;
+        backend
+            .dora_step(
+                spec,
+                LayerRole::Block,
+                StepIo { x: &x, mask: &mask, target: &target },
+                &arr,
+                &mut st,
+                t,
+                cfg.lr,
+            )
+            .unwrap();
     });
 
-    // -- literal vs device-resident buffers on the same computation
-    h.bench("teacher_block via execute_buffers (x,w resident)", || {
-        let xb = teacher_block.upload(&x).unwrap();
-        let wb = teacher_block.upload(&w).unwrap();
-        teacher_block.execute_buffers(&[&xb, &wb]).unwrap();
-    });
-    let xb = teacher_block.upload(&x).unwrap();
-    let wb = teacher_block.upload(&w).unwrap();
-    h.bench("teacher_block execute_buffers (pre-uploaded)", || {
-        teacher_block.execute_buffers(&[&xb, &wb]).unwrap();
+    // -- backprop baseline step (whole network)
+    let mut bp = BpState::new(
+        session.teacher.wb.clone(),
+        session.teacher.wh.clone(),
+    );
+    let sample_mask = Tensor::filled(vec![spec.step_batch], 1.0);
+    let y_onehot = {
+        let mut data = vec![0.0f32; spec.step_batch * spec.n_classes];
+        for s in 0..spec.step_batch {
+            data[s * spec.n_classes + s % spec.n_classes] = 1.0;
+        }
+        Tensor::new(vec![spec.step_batch, spec.n_classes], data).unwrap()
+    };
+    let mut tb = 0.0f64;
+    h.bench("bp_step (end-to-end backprop + Adam)", || {
+        tb += 1.0;
+        backend
+            .bp_step(
+                spec,
+                StepIo { x: &x, mask: &sample_mask, target: &y_onehot },
+                &mut bp,
+                tb,
+                2e-4,
+            )
+            .unwrap();
     });
 
     // -- full-model eval (the sweep inner loop)
@@ -94,36 +115,16 @@ fn main() {
         (0..eval_rows * d).map(|i| ((i % 83) as f32 - 41.0) * 0.02).collect(),
     )
     .unwrap();
-    let model_fwd = eng.store.executable("model_fwd_m20").unwrap();
-    h.bench("model_fwd (20-block stacked eval)", || {
-        model_fwd
-            .execute(&[&xe, &session.teacher.wb, &session.teacher.wh])
+    h.bench("model_fwd (stacked digital eval)", || {
+        backend
+            .model_fwd(spec, &xe, &session.teacher.wb, &session.teacher.wh)
             .unwrap();
     });
-
-    let gp_s = student.gp_stack().unwrap();
-    let gn_s = student.gn_stack().unwrap();
-    let inv_s = student.inv_scale_stack();
-    let gph = student.head.gp_tensor();
-    let gnh = student.head.gn_tensor();
-    let invh = Tensor::scalar1(student.head.inv_w_scale());
-    let fsh = Tensor::scalar1(student.adc_fs_head.data()[0]);
-    let student_fwd = eng.store.executable("student_fwd_m20").unwrap();
+    let blocks = student.stacked_arrays().unwrap();
+    let head = student.head_io();
     h.bench("student_fwd (stacked crossbar eval)", || {
-        student_fwd
-            .execute(&[&xe, &gp_s, &gn_s, &inv_s, &student.adc_fs, &gph,
-                       &gnh, &invh, &fsh])
-            .unwrap();
+        backend.student_fwd(spec, &xe, &blocks, &head).unwrap();
     });
 
-    h.print_summary("runtime hot paths (m20)");
-    let stats = eng.store.stats();
-    println!(
-        "\nruntime stats: {} compiles ({:.1} ms total), {} executions \
-         ({:.3} ms mean)",
-        stats.compiles,
-        stats.compile_ns as f64 / 1e6,
-        stats.executions,
-        stats.execute_ns as f64 / 1e6 / stats.executions.max(1) as f64,
-    );
+    h.print_summary("backend hot paths (native, nano)");
 }

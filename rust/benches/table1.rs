@@ -4,7 +4,6 @@
 //! paper's analytic batch-1 lifespan numbers (41 667 vs 5e13) from the
 //! metrics layer for comparison.
 
-use std::path::Path;
 use std::time::Instant;
 
 use rimc_dora::calib::{BackpropConfig, CalibConfig};
@@ -16,8 +15,8 @@ use rimc_dora::metrics::params::{
 use rimc_dora::util::bench::print_table;
 
 fn main() {
-    let eng = Engine::open(Path::new("artifacts")).expect("make artifacts");
-    for (model, rank) in [("m20", 2), ("m50", 4)] {
+    let eng = Engine::native();
+    for (model, rank) in [("nano", 2), ("micro", 4)] {
         let t0 = Instant::now();
         let session = eng.session(model).unwrap();
         let rows = table1_rows(

@@ -1,0 +1,138 @@
+//! Dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment is hermetic (no crates.io access), so the crate
+//! vendors the small subset of the `anyhow` API the codebase uses:
+//! `Result`, `Error`, `anyhow!`, `bail!`, and the `Context` extension
+//! trait for `Result`/`Option`. Modules inside this crate import it as
+//! `use crate::anyhow::{bail, Context, Result}`; external targets (bin,
+//! tests, benches, examples) use `rimc_dora::anyhow::...`. Swapping back
+//! to the real crate one day is a one-line import change per file.
+
+use std::fmt;
+
+/// String-backed error: every failure in this crate is diagnostic text
+/// for a human, never matched on, so a message chain is all we need.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, `anyhow`-style (`context: cause`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?`-conversion from any std error. `Error` itself deliberately does not
+// implement `std::error::Error`, exactly like the real `anyhow::Error`,
+// so this blanket impl cannot overlap `impl From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! __rimc_anyhow {
+    ($($arg:tt)*) => {
+        $crate::anyhow::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! __rimc_bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::__rimc_anyhow!($($arg)*))
+    };
+}
+
+pub use crate::__rimc_anyhow as anyhow;
+pub use crate::__rimc_bail as bail;
+
+#[cfg(test)]
+mod tests {
+    use super::{anyhow, bail, Context, Error, Result};
+
+    fn fails() -> Result<u32> {
+        bail!("broke with code {}", 7);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke with code 7");
+        assert_eq!(format!("{e:#}"), "broke with code 7");
+        assert_eq!(format!("{e:?}"), "broke with code 7");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        let e = Error::msg("plain").context("ctx");
+        assert_eq!(e.to_string(), "ctx: plain");
+    }
+}

@@ -6,18 +6,18 @@
 //! step, and physically reprogram the crossbars at the end (with
 //! write-verify noise) before evaluation.
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use super::batches::make_batches;
 use super::BackpropConfig;
 use crate::device::constants;
 use crate::metrics::CalibrationCost;
 use crate::model::{ModelSpec, StudentModel, TeacherModel};
-use crate::runtime::ArtifactStore;
+use crate::runtime::{Backend, BpState, StepIo};
 use crate::util::tensor::Tensor;
 
 pub struct BackpropCalibrator<'a> {
-    store: &'a ArtifactStore,
+    backend: &'a dyn Backend,
     spec: &'a ModelSpec,
     cfg: BackpropConfig,
 }
@@ -32,11 +32,11 @@ pub struct BackpropOutcome {
 
 impl<'a> BackpropCalibrator<'a> {
     pub fn new(
-        store: &'a ArtifactStore,
+        backend: &'a dyn Backend,
         spec: &'a ModelSpec,
         cfg: BackpropConfig,
     ) -> Self {
-        BackpropCalibrator { store, spec, cfg }
+        BackpropCalibrator { backend, spec, cfg }
     }
 
     /// Retrain from the drifted weights and reprogram the arrays.
@@ -48,7 +48,6 @@ impl<'a> BackpropCalibrator<'a> {
         y: &[usize],
     ) -> Result<BackpropOutcome> {
         let spec = self.spec;
-        let step = self.store.executable(&spec.art("bp_step"))?;
         let batches = make_batches(x, y, spec.step_batch, spec.n_classes)?;
 
         // starting point: the drifted weights as read from the arrays
@@ -58,13 +57,10 @@ impl<'a> BackpropCalibrator<'a> {
             .iter_mut()
             .map(|b| b.read_weights())
             .collect();
-        let mut wb = Tensor::stack(&wr_blocks)?;
-        let mut wh = student.head.read_weights();
-        let mut mwb = Tensor::zeros(wb.shape().to_vec());
-        let mut vwb = Tensor::zeros(wb.shape().to_vec());
-        let mut mwh = Tensor::zeros(wh.shape().to_vec());
-        let mut vwh = Tensor::zeros(wh.shape().to_vec());
-        let lr = Tensor::scalar1(self.cfg.lr as f32);
+        let mut st = BpState::new(
+            Tensor::stack(&wr_blocks)?,
+            student.head.read_weights(),
+        );
 
         let mut losses = Vec::new();
         let mut t = 0f64;
@@ -73,26 +69,25 @@ impl<'a> BackpropCalibrator<'a> {
         for _epoch in 0..self.cfg.epochs {
             for b in &batches {
                 t += 1.0;
-                let ts = Tensor::scalar1(t as f32);
-                let out = step.execute(&[
-                    &b.x_rows, &b.sample_mask, &b.y_onehot, &wb, &wh,
-                    &mwb, &vwb, &mwh, &vwh, &ts, &lr,
-                ])?;
-                let mut it = out.into_iter();
-                wb = it.next().unwrap();
-                wh = it.next().unwrap();
-                mwb = it.next().unwrap();
-                vwb = it.next().unwrap();
-                mwh = it.next().unwrap();
-                vwh = it.next().unwrap();
-                losses.push(it.next().unwrap().data()[0] as f64);
+                let loss = self.backend.bp_step(
+                    spec,
+                    StepIo {
+                        x: &b.x_rows,
+                        mask: &b.sample_mask,
+                        target: &b.y_onehot,
+                    },
+                    &mut st,
+                    t,
+                    self.cfg.lr,
+                )?;
+                losses.push(loss);
                 // in-situ update: every device written once per step
                 rram_writes += devices;
             }
         }
 
         // deploy: physically write-and-verify the final weights
-        student.reprogram(&wb, &wh)?;
+        student.reprogram(&st.wb, &st.wh)?;
 
         let (t_ns, e_pj) = crate::metrics::rram_write_cost(rram_writes);
         let cost = CalibrationCost {
@@ -109,6 +104,6 @@ impl<'a> BackpropCalibrator<'a> {
         debug_assert!(
             (constants::RRAM_WRITE_NS - 100.0).abs() < f64::EPSILON
         );
-        Ok(BackpropOutcome { wb, wh, cost, losses })
+        Ok(BackpropOutcome { wb: st.wb, wh: st.wh, cost, losses })
     }
 }

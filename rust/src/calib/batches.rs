@@ -5,7 +5,7 @@
 //! sets of any size are chunked and the tail chunk zero-padded, with row
 //! and sample masks zeroing padding out of the loss (ref.masked_mse).
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use crate::util::tensor::Tensor;
 

@@ -1,12 +1,14 @@
 //! Algorithm 1 + 2: layer-wise feature-based calibration of DoRA/LoRA
-//! adapters against teacher features, driven entirely through the AOT
-//! executables (`dora_step_block_*`, `teacher_block_*`, ...).
+//! adapters against teacher features, driven entirely through the
+//! `runtime::Backend` trait (native kernels by default, AOT executables
+//! under `--features pjrt`).
 //!
 //! Flow per calibration round:
-//!   1. teacher feature chain on every minibatch (`teacher_block` execs),
+//!   1. teacher feature chain on every minibatch (`teacher_block`),
 //!   2. for each layer: sense-amp readout of W_r (one RRAM read) to init
-//!      the adapter, then Adam steps via the step executable until the
-//!      loss threshold or step cap (Algorithm 1 line 10),
+//!      the adapter, then Adam steps via `Backend::dora_step` /
+//!      `lora_step` until the loss threshold or step cap (Algorithm 1
+//!      line 10),
 //!   3. merge M_eff = M / n (Algorithm 2 line 12) and advance the student
 //!      activation chain through the calibrated layer (`dora_block`),
 //!   4. head layer the same way against teacher logits.
@@ -16,17 +18,22 @@
 //! paper's entire point, and the cost struct returned here proves it
 //! with counters.
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use super::batches::{make_batches, CalibBatch};
 use super::{CalibConfig, InputMode};
 use crate::metrics::CalibrationCost;
-use crate::model::{AdapterKind, AdapterSet, ModelSpec, StudentModel, TeacherModel};
-use crate::runtime::ArtifactStore;
+use crate::model::{
+    AdapterKind, AdapterSet, LayerAdapter, ModelSpec, StudentModel,
+    TeacherModel,
+};
+use crate::runtime::{
+    AdapterIo, ArrayIo, Backend, LayerRole, StepIo, StepOutput,
+};
 use crate::util::tensor::Tensor;
 
 pub struct FeatureCalibrator<'a> {
-    store: &'a ArtifactStore,
+    backend: &'a dyn Backend,
     spec: &'a ModelSpec,
     cfg: CalibConfig,
 }
@@ -48,22 +55,22 @@ pub struct CalibOutcome {
 
 impl<'a> FeatureCalibrator<'a> {
     pub fn new(
-        store: &'a ArtifactStore,
+        backend: &'a dyn Backend,
         spec: &'a ModelSpec,
         cfg: CalibConfig,
     ) -> Result<Self> {
         if !spec.ranks.contains(&cfg.rank) {
             bail!(
-                "rank {} not lowered for {} (available: {:?})",
+                "rank {} not available for {} (available: {:?})",
                 cfg.rank,
                 spec.name,
                 spec.ranks
             );
         }
         if cfg.kind == AdapterKind::Lora && !spec.with_lora {
-            bail!("LoRA artifacts not lowered for {}", spec.name);
+            bail!("LoRA path not enabled for {}", spec.name);
         }
-        Ok(FeatureCalibrator { store, spec, cfg })
+        Ok(FeatureCalibrator { backend, spec, cfg })
     }
 
     /// Run one full calibration round on `x [N,T,d]` / `y` samples.
@@ -79,8 +86,6 @@ impl<'a> FeatureCalibrator<'a> {
         let n_batches = batches.len();
 
         // ---- 1. teacher features: tf[b][l] = block-l output on batch b
-        let teacher_block = self.store.executable(&spec.art("teacher_block"))?;
-        let teacher_head = self.store.executable(&spec.art("teacher_head"))?;
         let mut tfeat: Vec<Vec<Tensor>> = Vec::with_capacity(n_batches);
         let mut tlogits: Vec<Tensor> = Vec::with_capacity(n_batches);
         for b in &batches {
@@ -88,13 +93,11 @@ impl<'a> FeatureCalibrator<'a> {
             let mut per_layer = Vec::with_capacity(spec.n_blocks);
             for l in 0..spec.n_blocks {
                 let w = teacher.block_weights(l);
-                let mut out = teacher_block.execute(&[&h, &w])?;
-                h = out.remove(0);
+                h = self.backend.teacher_block(spec, &h, &w)?;
                 per_layer.push(h.clone());
             }
-            let logits = teacher_head.execute(&[&h, &teacher.wh])?.remove(0);
+            tlogits.push(self.backend.teacher_head(spec, &h, &teacher.wh)?);
             tfeat.push(per_layer);
-            tlogits.push(logits);
         }
 
         // ---- 2. adapter init from sense-amp readout (one read per array)
@@ -116,38 +119,33 @@ impl<'a> FeatureCalibrator<'a> {
         let mut hs: Vec<Tensor> =
             batches.iter().map(|b| b.x_rows.clone()).collect();
         let mut traces = Vec::new();
-        let fwd_name = match self.cfg.kind {
-            AdapterKind::Dora => spec.art_r("dora_block", self.cfg.rank),
-            AdapterKind::Lora => spec.art_r("lora_block", self.cfg.rank),
-        };
-        let fwd = self.store.executable(&fwd_name)?;
+        let empty_meff = Tensor::zeros(vec![0]);
         for l in 0..spec.n_blocks {
             let trace = self.calibrate_layer(
-                student, &mut adapters, l, &batches, &tfeat, &mut hs,
+                student, &mut adapters, l, &batches, &tfeat, &hs,
             )?;
             traces.push(trace);
             // advance student chain through the calibrated layer
-            let inv = Tensor::scalar1(student.blocks[l].inv_w_scale());
-            let fs = Tensor::scalar1(student.adc_fs.data()[l]);
-            let gp = student.blocks[l].gp_tensor();
-            let gn = student.blocks[l].gn_tensor();
+            let arr = student.block_io(l);
             let la = &adapters.layers[l];
-            for (bi, h) in hs.iter_mut().enumerate() {
-                let _ = bi;
-                let out = match self.cfg.kind {
+            let meff = match self.cfg.kind {
+                AdapterKind::Dora => la.merged_meff()?,
+                AdapterKind::Lora => empty_meff.clone(),
+            };
+            let ad = AdapterIo {
+                a: la.a.tensor(),
+                b: la.b.tensor(),
+                meff: &meff,
+            };
+            for h in hs.iter_mut() {
+                *h = match self.cfg.kind {
                     AdapterKind::Dora => {
-                        let meff = la.merged_meff()?;
-                        fwd.execute(&[
-                            h, &gp, &gn, &inv, &fs,
-                            la.a.tensor(), la.b.tensor(), &meff,
-                        ])?
+                        self.backend.dora_block(spec, h, &arr, ad)?
                     }
-                    AdapterKind::Lora => fwd.execute(&[
-                        h, &gp, &gn, &inv, &fs,
-                        la.a.tensor(), la.b.tensor(),
-                    ])?,
+                    AdapterKind::Lora => {
+                        self.backend.lora_block(spec, h, &arr, ad)?
+                    }
                 };
-                *h = out.into_iter().next().unwrap();
                 student.blocks[l].count_read(1);
             }
         }
@@ -177,7 +175,6 @@ impl<'a> FeatureCalibrator<'a> {
         Ok(CalibOutcome { adapters, cost, traces })
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn calibrate_layer(
         &self,
         student: &mut StudentModel,
@@ -185,18 +182,9 @@ impl<'a> FeatureCalibrator<'a> {
         l: usize,
         batches: &[CalibBatch],
         tfeat: &[Vec<Tensor>],
-        hs: &mut [Tensor],
+        hs: &[Tensor],
     ) -> Result<LayerTrace> {
-        let spec = self.spec;
-        let step_name = match self.cfg.kind {
-            AdapterKind::Dora => spec.art_r("dora_step_block", self.cfg.rank),
-            AdapterKind::Lora => spec.art_r("lora_step_block", self.cfg.rank),
-        };
-        let step = self.store.executable(&step_name)?;
-        let gp = student.blocks[l].gp_tensor();
-        let gn = student.blocks[l].gn_tensor();
-        let inv = Tensor::scalar1(student.blocks[l].inv_w_scale());
-        let fs = Tensor::scalar1(student.adc_fs.data()[l]);
+        let arr = student.block_io(l);
         // per-batch (x, mask, target) triples for this layer
         let mut triples = Vec::with_capacity(batches.len());
         for (bi, b) in batches.iter().enumerate() {
@@ -213,16 +201,13 @@ impl<'a> FeatureCalibrator<'a> {
             triples.push((x_in, b.row_mask.clone(), tfeat[bi][l].clone()));
         }
         let trace = self.run_layer_loop(
-            &step,
+            LayerRole::Block,
             &mut adapters.layers[l],
             &triples,
-            &gp,
-            &gn,
-            &inv,
-            &fs,
+            &arr,
             &format!("block{l}"),
         )?;
-        // one analog forward per step inside the step executable
+        // one analog forward per step inside the step kernel
         student.blocks[l].count_read(trace.steps as u64);
         Ok(trace)
     }
@@ -235,16 +220,7 @@ impl<'a> FeatureCalibrator<'a> {
         tlogits: &[Tensor],
         hs: &[Tensor],
     ) -> Result<LayerTrace> {
-        let spec = self.spec;
-        let step_name = match self.cfg.kind {
-            AdapterKind::Dora => spec.art_r("dora_step_head", self.cfg.rank),
-            AdapterKind::Lora => spec.art_r("lora_step_head", self.cfg.rank),
-        };
-        let step = self.store.executable(&step_name)?;
-        let gp = student.head.gp_tensor();
-        let gn = student.head.gn_tensor();
-        let inv = Tensor::scalar1(student.head.inv_w_scale());
-        let fs = Tensor::scalar1(student.adc_fs_head.data()[0]);
+        let arr = student.head_io();
         let triples: Vec<(Tensor, Tensor, Tensor)> = batches
             .iter()
             .enumerate()
@@ -253,121 +229,54 @@ impl<'a> FeatureCalibrator<'a> {
             })
             .collect();
         let trace = self.run_layer_loop(
-            &step,
+            LayerRole::Head,
             &mut adapters.head,
             &triples,
-            &gp,
-            &gn,
-            &inv,
-            &fs,
+            &arr,
             "head",
         )?;
         student.head.count_read(trace.steps as u64);
         Ok(trace)
     }
 
-    /// Hot-loop Adam stepping for one layer (§Perf): inputs go to the
-    /// device as PJRT buffers (≈8x cheaper than the Literal path, see
-    /// runtime_hotpath bench), constants are uploaded once per layer,
-    /// and the step's tuple output is downloaded once per step. SRAM
-    /// wear is charged per step (`charge_step_writes`).
-    #[allow(clippy::too_many_arguments)]
+    /// Adam stepping for one layer through `Backend::dora_step` /
+    /// `lora_step`. Parameters + Adam state stay in an `AdapterState`
+    /// snapshot between steps and are folded back into the
+    /// SRAM-accounted buffers at the end: SRAM wear = one full rewrite
+    /// of every parameter word per step (`charge_step_writes`).
     fn run_layer_loop(
         &self,
-        step: &crate::runtime::Executable,
-        la: &mut crate::model::LayerAdapter,
+        role: LayerRole,
+        la: &mut LayerAdapter,
         triples: &[(Tensor, Tensor, Tensor)],
-        gp: &Tensor,
-        gn: &Tensor,
-        inv: &Tensor,
-        fs: &Tensor,
+        arr: &ArrayIo,
         label: &str,
     ) -> Result<LayerTrace> {
         let is_dora = self.cfg.kind == AdapterKind::Dora;
-        // upload per-batch + per-layer constants once
-        let mut consts = Vec::with_capacity(triples.len());
-        for (x, mask, ft) in triples {
-            consts.push((step.upload(x)?, step.upload(mask)?, step.upload(ft)?));
-        }
-        let gp_b = step.upload(gp)?;
-        let gn_b = step.upload(gn)?;
-        let inv_b = step.upload(inv)?;
-        let fs_b = step.upload(fs)?;
-        let lr_b = step.upload(&Tensor::scalar1(self.cfg.lr as f32))?;
-        // parameters + Adam state live on host between steps (the xla
-        // crate returns tuple outputs as one un-splittable buffer, so
-        // true on-device chaining is not expressible); uploads are cheap
-        let mut a = la.a.tensor().clone();
-        let mut b = la.b.tensor().clone();
-        let mut m = la.m.tensor().clone();
-        let (mut ma, mut va) = (la.ma.clone(), la.va.clone());
-        let (mut mb, mut vb) = (la.mb.clone(), la.vb.clone());
-        let (mut mm, mut vm) = (la.mm.clone(), la.vm.clone());
-
+        let mut st = la.step_state();
         let mut first_loss = f64::NAN;
         let mut last_loss = f64::NAN;
         let mut last_n: Option<Tensor> = None;
         let mut steps = 0usize;
         'outer: for _epoch in 0..self.cfg.max_steps_per_layer {
-            for (xb, maskb, ftb) in &consts {
+            for (x, mask, target) in triples {
                 if steps >= self.cfg.max_steps_per_layer {
                     break 'outer;
                 }
                 la.t += 1.0;
-                let t_b = step.upload(&Tensor::scalar1(la.t as f32))?;
-                let a_b = step.upload(&a)?;
-                let b_b = step.upload(&b)?;
-                let ma_b = step.upload(&ma)?;
-                let va_b = step.upload(&va)?;
-                let mb_b = step.upload(&mb)?;
-                let vb_b = step.upload(&vb)?;
-                let mut inputs: Vec<&xla::PjRtBuffer> =
-                    vec![xb, maskb, ftb, &gp_b, &gn_b, &inv_b, &fs_b, &a_b,
-                         &b_b];
-                let m_b;
-                let mm_b;
-                let vm_b;
-                if is_dora {
-                    m_b = step.upload(&m)?;
-                    inputs.push(&m_b);
-                    inputs.extend([&ma_b, &va_b, &mb_b, &vb_b]);
-                    mm_b = step.upload(&mm)?;
-                    vm_b = step.upload(&vm)?;
-                    inputs.push(&mm_b);
-                    inputs.push(&vm_b);
+                let io = StepIo { x, mask, target };
+                let StepOutput { loss, colnorm } = if is_dora {
+                    self.backend.dora_step(
+                        self.spec, role, io, arr, &mut st, la.t, self.cfg.lr,
+                    )?
                 } else {
-                    inputs.extend([&ma_b, &va_b, &mb_b, &vb_b]);
+                    self.backend.lora_step(
+                        self.spec, role, io, arr, &mut st, la.t, self.cfg.lr,
+                    )?
+                };
+                if colnorm.is_some() {
+                    last_n = colnorm;
                 }
-                inputs.push(&t_b);
-                inputs.push(&lr_b);
-                let out_bufs = step.execute_buffers(&inputs)?;
-                if out_bufs.len() != 1 {
-                    bail!("{label}: expected tuple buffer, got {}",
-                          out_bufs.len());
-                }
-                let mut out = step.download_tuple(&out_bufs[0])?;
-                // dora: a,b,m,ma,va,mb,vb,mm,vm,loss,n | lora: a,b,ma,va,mb,vb,loss
-                let want = if is_dora { 11 } else { 7 };
-                if out.len() != want {
-                    bail!("{label}: step returned {} outputs", out.len());
-                }
-                if is_dora {
-                    last_n = Some(out.pop().unwrap());
-                }
-                let loss = out.pop().unwrap().data()[0] as f64;
-                if is_dora {
-                    vm = out.pop().unwrap();
-                    mm = out.pop().unwrap();
-                }
-                vb = out.pop().unwrap();
-                mb = out.pop().unwrap();
-                va = out.pop().unwrap();
-                ma = out.pop().unwrap();
-                if is_dora {
-                    m = out.pop().unwrap();
-                }
-                b = out.pop().unwrap();
-                a = out.pop().unwrap();
                 steps += 1;
                 if first_loss.is_nan() {
                     first_loss = loss;
@@ -384,17 +293,17 @@ impl<'a> FeatureCalibrator<'a> {
         if steps > 0 {
             la.a.charge_step_writes(steps as u64 - 1);
             la.b.charge_step_writes(steps as u64 - 1);
-            la.a.store(a)?;
-            la.b.store(b)?;
-            la.ma = ma;
-            la.va = va;
-            la.mb = mb;
-            la.vb = vb;
+            la.a.store(st.a)?;
+            la.b.store(st.b)?;
+            la.ma = st.ma;
+            la.va = st.va;
+            la.mb = st.mb;
+            la.vb = st.vb;
             if is_dora {
                 la.m.charge_step_writes(steps as u64 - 1);
-                la.m.store(m)?;
-                la.mm = mm;
-                la.vm = vm;
+                la.m.store(st.m)?;
+                la.mm = st.mm;
+                la.vm = st.vm;
                 la.last_n = last_n;
             }
         }

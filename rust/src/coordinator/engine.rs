@@ -1,58 +1,191 @@
-//! Engine: artifact store + per-model sessions (spec, teacher, dataset).
+//! Engine: backend selection + per-model sessions (spec, teacher,
+//! dataset).
+//!
+//! * `Engine::native()` — hermetic default: synthesizes the dataset and
+//!   trains the teacher in-process through the native backend (see
+//!   `coordinator::presets` for the built-in model zoo).
+//! * `Engine::open(dir)` (`--features pjrt`) — opens the AOT artifact
+//!   store; specs/teachers/datasets come from the manifest + bundle
+//!   written by `make artifacts`.
 
-use std::path::Path;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
 
-use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use crate::anyhow::bail;
+use crate::anyhow::Result;
 
+use super::eval::Evaluator;
+use super::presets::{native_presets, NativePreset};
 use crate::calib::{
     BackpropCalibrator, BackpropConfig, CalibConfig, FeatureCalibrator,
 };
 use crate::dataset::Dataset;
 use crate::device::{DriftModel, ProgramModel};
-use crate::model::{ModelSpec, StudentModel, TeacherModel};
-use crate::runtime::ArtifactStore;
-use crate::util::tensorfile::read_bundle;
+use crate::model::{train_teacher, ModelSpec, StudentModel, TeacherModel};
+use crate::runtime::{Backend, NativeBackend};
 
-/// Process-wide entry point: open the artifacts once, then open one
+enum EngineKind {
+    Native {
+        presets: Vec<NativePreset>,
+        /// dataset generation + teacher training are deterministic per
+        /// preset, so repeat sessions reuse the first result
+        cache: RefCell<BTreeMap<String, (ModelSpec, TeacherModel, Dataset)>>,
+    },
+    #[cfg(feature = "pjrt")]
+    Pjrt { backend: Rc<crate::runtime::pjrt::PjrtBackend> },
+}
+
+/// Process-wide entry point: pick a backend once, then open one
 /// `Session` per model.
 pub struct Engine {
-    pub store: ArtifactStore,
+    backend: Rc<dyn Backend>,
+    kind: EngineKind,
 }
 
 impl Engine {
-    pub fn open(artifact_dir: &Path) -> Result<Engine> {
-        Ok(Engine { store: ArtifactStore::open(artifact_dir)? })
+    /// Hermetic native engine with the built-in model presets.
+    pub fn native() -> Engine {
+        Engine::native_with(native_presets())
     }
 
-    pub fn session(&self, model: &str) -> Result<Session<'_>> {
-        let spec = ModelSpec::from_manifest(&self.store.manifest, model)?;
-        let teacher = TeacherModel::load(self.store.dir(), &spec)?;
-        let bundle = read_bundle(&self.store.dir().join(&spec.bundle_file))?;
-        let dataset = Dataset::from_bundle(&bundle, spec.n_classes)?;
-        Ok(Session { store: &self.store, spec, teacher, dataset })
+    /// Native engine with a custom preset list (tests / scaling studies).
+    pub fn native_with(presets: Vec<NativePreset>) -> Engine {
+        Engine {
+            backend: Rc::new(NativeBackend::new()),
+            kind: EngineKind::Native {
+                presets,
+                cache: RefCell::new(BTreeMap::new()),
+            },
+        }
+    }
+
+    /// PJRT engine over an artifact directory (`make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn open(artifact_dir: &std::path::Path) -> Result<Engine> {
+        let pjrt =
+            Rc::new(crate::runtime::pjrt::PjrtBackend::open(artifact_dir)?);
+        Ok(Engine {
+            backend: pjrt.clone(),
+            kind: EngineKind::Pjrt { backend: pjrt },
+        })
+    }
+
+    pub fn backend(&self) -> &Rc<dyn Backend> {
+        &self.backend
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Artifact store accessor (PJRT engines only).
+    #[cfg(feature = "pjrt")]
+    pub fn store(&self) -> Result<&crate::runtime::pjrt::ArtifactStore> {
+        match &self.kind {
+            EngineKind::Pjrt { backend } => Ok(backend.store()),
+            _ => bail!("store() is only available on a PJRT engine"),
+        }
     }
 
     pub fn model_names(&self) -> Vec<String> {
-        self.store
-            .manifest
-            .req("models")
-            .as_obj()
-            .unwrap()
-            .keys()
-            .cloned()
-            .collect()
+        match &self.kind {
+            EngineKind::Native { presets, .. } => {
+                presets.iter().map(|p| p.spec.name.clone()).collect()
+            }
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt { backend } => backend
+                .store()
+                .manifest
+                .req("models")
+                .as_obj()
+                .map(|m| m.keys().cloned().collect())
+                .unwrap_or_default(),
+        }
+    }
+
+    /// Open a session: for native models this synthesizes the dataset
+    /// and trains the teacher on first use (seconds at preset scale;
+    /// deterministic, so repeat sessions come from the engine cache);
+    /// for PJRT it loads the prebuilt bundle.
+    pub fn session(&self, model: &str) -> Result<Session> {
+        match &self.kind {
+            EngineKind::Native { presets, cache } => {
+                if let Some((spec, teacher, dataset)) =
+                    cache.borrow().get(model)
+                {
+                    return Ok(Session {
+                        backend: self.backend.clone(),
+                        spec: spec.clone(),
+                        teacher: teacher.clone(),
+                        dataset: dataset.clone(),
+                    });
+                }
+                let preset = presets
+                    .iter()
+                    .find(|p| p.spec.name == model)
+                    .ok_or_else(|| {
+                        crate::anyhow::anyhow!(
+                            "unknown native model `{model}` (available: {:?})",
+                            presets
+                                .iter()
+                                .map(|p| p.spec.name.as_str())
+                                .collect::<Vec<_>>()
+                        )
+                    })?;
+                let mut spec = preset.spec.clone();
+                let data = crate::dataset::make_dataset(&preset.data)?;
+                let (teacher, acc) = train_teacher(
+                    &*self.backend,
+                    &spec,
+                    &data,
+                    &preset.train,
+                )?;
+                spec.teacher_acc = acc;
+                cache.borrow_mut().insert(
+                    model.to_string(),
+                    (spec.clone(), teacher.clone(), data.dataset.clone()),
+                );
+                Ok(Session {
+                    backend: self.backend.clone(),
+                    spec,
+                    teacher,
+                    dataset: data.dataset,
+                })
+            }
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt { .. } => self.pjrt_session(model),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_session(&self, model: &str) -> Result<Session> {
+        let store = self.store()?;
+        let spec = ModelSpec::from_manifest(&store.manifest, model)?;
+        let teacher = TeacherModel::load(store.dir(), &spec)?;
+        let bundle = crate::util::tensorfile::read_bundle(
+            &store.dir().join(&spec.bundle_file),
+        )?;
+        let dataset = Dataset::from_bundle(&bundle, spec.n_classes)?;
+        Ok(Session {
+            backend: self.backend.clone(),
+            spec,
+            teacher,
+            dataset,
+        })
     }
 }
 
 /// Everything needed to run experiments on one model.
-pub struct Session<'a> {
-    pub store: &'a ArtifactStore,
+pub struct Session {
+    pub backend: Rc<dyn Backend>,
     pub spec: ModelSpec,
     pub teacher: TeacherModel,
     pub dataset: Dataset,
 }
 
-impl<'a> Session<'a> {
+impl Session {
     /// Program a fresh student at the given relative drift (not yet
     /// drifted — call `apply_saturated_drift` or `advance_time`).
     pub fn program_student(
@@ -76,17 +209,21 @@ impl<'a> Session<'a> {
         Ok(s)
     }
 
+    pub fn evaluator(&self) -> Evaluator<'_> {
+        Evaluator::new(&*self.backend, &self.spec)
+    }
+
     pub fn feature_calibrator(
         &self,
         cfg: CalibConfig,
     ) -> Result<FeatureCalibrator<'_>> {
-        FeatureCalibrator::new(self.store, &self.spec, cfg)
+        FeatureCalibrator::new(&*self.backend, &self.spec, cfg)
     }
 
     pub fn backprop_calibrator(
         &self,
         cfg: BackpropConfig,
     ) -> BackpropCalibrator<'_> {
-        BackpropCalibrator::new(self.store, &self.spec, cfg)
+        BackpropCalibrator::new(&*self.backend, &self.spec, cfg)
     }
 }

@@ -1,21 +1,21 @@
 //! Accuracy evaluator: batched top-1 accuracy on the eval split through
-//! the stacked full-model executables (single PJRT dispatch per batch).
+//! the backend's stacked full-model forwards (one dispatch per batch).
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use crate::dataset::Dataset;
 use crate::model::{AdapterKind, AdapterSet, ModelSpec, StudentModel, TeacherModel};
-use crate::runtime::ArtifactStore;
+use crate::runtime::{AdapterIo, Backend};
 use crate::util::tensor::Tensor;
 
 pub struct Evaluator<'a> {
-    store: &'a ArtifactStore,
+    backend: &'a dyn Backend,
     spec: &'a ModelSpec,
 }
 
 impl<'a> Evaluator<'a> {
-    pub fn new(store: &'a ArtifactStore, spec: &'a ModelSpec) -> Self {
-        Evaluator { store, spec }
+    pub fn new(backend: &'a dyn Backend, spec: &'a ModelSpec) -> Self {
+        Evaluator { backend, spec }
     }
 
     fn accuracy_from_logits(logits: &Tensor, labels: &[usize]) -> usize {
@@ -29,13 +29,13 @@ impl<'a> Evaluator<'a> {
 
     /// Teacher (digital) accuracy via `model_fwd`.
     pub fn teacher(&self, teacher: &TeacherModel, ds: &Dataset) -> Result<f64> {
-        let exe = self.store.executable(&self.spec.art("model_fwd"))?;
         let mut correct = 0;
         let mut total = 0;
         for (x, y) in ds.eval_batches(self.spec.eval_batch) {
             let rows = Dataset::rows(&x)?;
-            let logits = exe.execute(&[&rows, &teacher.wb, &teacher.wh])?
-                .remove(0);
+            let logits =
+                self.backend.model_fwd(self.spec, &rows, &teacher.wb,
+                                       &teacher.wh)?;
             correct += Self::accuracy_from_logits(&logits, y);
             total += y.len();
         }
@@ -49,12 +49,11 @@ impl<'a> Evaluator<'a> {
         wh: &Tensor,
         ds: &Dataset,
     ) -> Result<f64> {
-        let exe = self.store.executable(&self.spec.art("model_fwd"))?;
         let mut correct = 0;
         let mut total = 0;
         for (x, y) in ds.eval_batches(self.spec.eval_batch) {
             let rows = Dataset::rows(&x)?;
-            let logits = exe.execute(&[&rows, wb, wh])?.remove(0);
+            let logits = self.backend.model_fwd(self.spec, &rows, wb, wh)?;
             correct += Self::accuracy_from_logits(&logits, y);
             total += y.len();
         }
@@ -67,25 +66,15 @@ impl<'a> Evaluator<'a> {
         student: &mut StudentModel,
         ds: &Dataset,
     ) -> Result<f64> {
-        let exe = self.store.executable(&self.spec.art("student_fwd"))?;
-        let gp = student.gp_stack()?;
-        let gn = student.gn_stack()?;
-        let inv = student.inv_scale_stack();
-        let gph = student.head.gp_tensor();
-        let gnh = student.head.gn_tensor();
-        let invh = Tensor::scalar1(student.head.inv_w_scale());
-        let fsh = Tensor::scalar1(student.adc_fs_head.data()[0]);
+        let blocks = student.stacked_arrays()?;
+        let head = student.head_io();
         let mut correct = 0;
         let mut total = 0;
         let mut n_batches = 0u64;
         for (x, y) in ds.eval_batches(self.spec.eval_batch) {
             let rows = Dataset::rows(&x)?;
-            let logits = exe
-                .execute(&[
-                    &rows, &gp, &gn, &inv, &student.adc_fs, &gph, &gnh,
-                    &invh, &fsh,
-                ])?
-                .remove(0);
+            let logits =
+                self.backend.student_fwd(self.spec, &rows, &blocks, &head)?;
             correct += Self::accuracy_from_logits(&logits, y);
             total += y.len();
             n_batches += 1;
@@ -95,51 +84,34 @@ impl<'a> Evaluator<'a> {
     }
 
     /// Calibrated student (DoRA or LoRA adapters) via the stacked
-    /// `*_model_fwd` executable.
+    /// calibrated forward.
     pub fn calibrated(
         &self,
         student: &mut StudentModel,
         adapters: &AdapterSet,
         ds: &Dataset,
     ) -> Result<f64> {
-        let name = match adapters.kind {
-            AdapterKind::Dora => {
-                self.spec.art_r("dora_model_fwd", adapters.rank)
-            }
-            AdapterKind::Lora => {
-                self.spec.art_r("lora_model_fwd", adapters.rank)
-            }
-        };
-        let exe = self.store.executable(&name)?;
-        let gp = student.gp_stack()?;
-        let gn = student.gn_stack()?;
-        let inv = student.inv_scale_stack();
-        let gph = student.head.gp_tensor();
-        let gnh = student.head.gn_tensor();
-        let invh = Tensor::scalar1(student.head.inv_w_scale());
-        let fsh = Tensor::scalar1(student.adc_fs_head.data()[0]);
-        let (a, b, meff) = adapters.stacked()?;
-        let ah = adapters.head.a.tensor().clone();
-        let bh = adapters.head.b.tensor().clone();
+        let blocks = student.stacked_arrays()?;
+        let head = student.head_io();
+        let ads = adapters.stacked()?;
         let meffh = adapters.head.merged_meff()?;
+        let head_ad = AdapterIo {
+            a: adapters.head.a.tensor(),
+            b: adapters.head.b.tensor(),
+            meff: &meffh,
+        };
         let mut correct = 0;
         let mut total = 0;
         let mut n_batches = 0u64;
         for (x, y) in ds.eval_batches(self.spec.eval_batch) {
             let rows = Dataset::rows(&x)?;
             let logits = match adapters.kind {
-                AdapterKind::Dora => exe
-                    .execute(&[
-                        &rows, &gp, &gn, &inv, &student.adc_fs, &a, &b, &meff,
-                        &gph, &gnh, &invh, &fsh, &ah, &bh, &meffh,
-                    ])?
-                    .remove(0),
-                AdapterKind::Lora => exe
-                    .execute(&[
-                        &rows, &gp, &gn, &inv, &student.adc_fs, &a, &b,
-                        &gph, &gnh, &invh, &fsh, &ah, &bh,
-                    ])?
-                    .remove(0),
+                AdapterKind::Dora => self.backend.dora_model_fwd(
+                    self.spec, &rows, &blocks, &ads, &head, head_ad,
+                )?,
+                AdapterKind::Lora => self.backend.lora_model_fwd(
+                    self.spec, &rows, &blocks, &ads, &head, head_ad,
+                )?,
             };
             correct += Self::accuracy_from_logits(&logits, y);
             total += y.len();

@@ -2,10 +2,9 @@
 //! structured rows; the bench targets and the CLI print them. The
 //! pass-criteria (who wins, trends) live in rust/tests/experiments.rs.
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use super::engine::Session;
-use super::eval::Evaluator;
 use crate::calib::{BackpropConfig, CalibConfig};
 use crate::device::constants;
 use crate::model::AdapterKind;
@@ -28,7 +27,7 @@ pub fn fig2_drift_sweep(
     drifts: &[f64],
     seeds: &[u64],
 ) -> Result<Vec<Fig2Row>> {
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
     let mut rows = Vec::new();
     for &rel in drifts {
@@ -71,7 +70,7 @@ pub fn fig4_dataset_size_sweep(
     bp_cfg: &BackpropConfig,
     seed: u64,
 ) -> Result<Vec<Fig4Row>> {
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let mut rows = Vec::new();
     for &n in sizes {
         let (x, y) = session.dataset.calib_subset(n)?;
@@ -126,7 +125,7 @@ pub fn fig5_rank_sweep(
     calib_cfg: &CalibConfig,
     seed: u64,
 ) -> Result<Vec<Fig5Row>> {
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let (x, y) = session.dataset.calib_subset(n_samples)?;
     let mut rows = Vec::new();
     for &rank in &session.spec.ranks.clone() {
@@ -167,7 +166,7 @@ pub fn fig6_lora_vs_dora(
     calib_cfg: &CalibConfig,
     seed: u64,
 ) -> Result<Vec<Fig6Row>> {
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let (x, y) = session.dataset.calib_subset(n_samples)?;
     let mut rows = Vec::new();
     for &rel in rel_drifts {
@@ -233,7 +232,7 @@ pub fn table1_rows(
     bp_cfg: &BackpropConfig,
     seed: u64,
 ) -> Result<Vec<Table1Row>> {
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
 
     // --- backprop
     let (xb, yb) = session.dataset.calib_subset(bp_samples)?;

@@ -4,10 +4,9 @@
 //! "silicon lifecycle management" loop the conclusion motivates, and the
 //! substrate of `examples/edge_deployment.rs`.
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use super::engine::Session;
-use super::eval::Evaluator;
 use crate::calib::CalibConfig;
 use crate::model::StudentModel;
 
@@ -31,16 +30,16 @@ pub struct SchedulerEvent {
     pub rram_writes: u64,
 }
 
-pub struct RecalibrationScheduler<'a, 's> {
-    session: &'s Session<'a>,
+pub struct RecalibrationScheduler<'s> {
+    session: &'s Session,
     policy: SchedulerPolicy,
     calib_cfg: CalibConfig,
     n_calib_samples: usize,
 }
 
-impl<'a, 's> RecalibrationScheduler<'a, 's> {
+impl<'s> RecalibrationScheduler<'s> {
     pub fn new(
-        session: &'s Session<'a>,
+        session: &'s Session,
         policy: SchedulerPolicy,
         calib_cfg: CalibConfig,
         n_calib_samples: usize,
@@ -57,7 +56,7 @@ impl<'a, 's> RecalibrationScheduler<'a, 's> {
         step_hours: f64,
         checkpoints: usize,
     ) -> Result<Vec<SchedulerEvent>> {
-        let ev = Evaluator::new(self.session.store, &self.session.spec);
+        let ev = self.session.evaluator();
         let (x, y) =
             self.session.dataset.calib_subset(self.n_calib_samples)?;
         let mut events = Vec::new();

@@ -1,10 +1,18 @@
-//! Dataset access: the synthetic calibration/eval splits generated at
-//! build time (python/compile/data.py) and shipped in the artifact
-//! bundle. Samples are `[TOKENS, d]` patch-token grids (see data.py for
-//! why — it preserves the conv-layer weight-reuse that makes 10-sample
-//! calibration generalize).
+//! Dataset access. Samples are `[TOKENS, d]` patch-token grids (see
+//! python/compile/data.py for why — it preserves the conv-layer
+//! weight-reuse that makes 10-sample calibration generalize). Two
+//! sources produce the same `Dataset`:
+//!
+//! * `synth::make_dataset` — generated natively in Rust (the default,
+//!   hermetic path),
+//! * `Dataset::from_bundle` — read from the artifact bundle written by
+//!   the build-time JAX pipeline (PJRT path).
 
-use anyhow::{bail, Context, Result};
+pub mod synth;
+
+pub use synth::{make_dataset, SynthData, SynthSpec};
+
+use crate::anyhow::{bail, Context, Result};
 
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;

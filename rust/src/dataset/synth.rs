@@ -1,0 +1,251 @@
+//! Native synthetic dataset generation — the Rust port of
+//! `python/compile/data.py`, so the default (hermetic) build can
+//! construct calibration/eval splits without the JAX toolchain or an
+//! artifact bundle.
+//!
+//! Construction (identical in structure to data.py; see its docstring
+//! for why samples are `[T, d]` patch-token grids):
+//! 1. `n_classes` unit-norm class centers in R^dim,
+//! 2. per sample: center + a sample-level anisotropic latent (shared by
+//!    all tokens) + per-token jitter,
+//! 3. a fixed random two-layer tanh warp per token (non-linear class
+//!    boundaries so depth matters),
+//! 4. feature-wise standardization with population stats.
+
+use crate::anyhow::Result;
+
+use super::Dataset;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Shape/noise parameters of one synthetic classification task
+/// (mirror of data.py `DatasetSpec`).
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub dim: usize,
+    pub n_classes: usize,
+    pub tokens: usize,
+    pub n_train: usize,
+    pub n_calib: usize,
+    pub n_eval: usize,
+    /// sample-level latent scale (before the warp)
+    pub noise: f64,
+    /// per-token jitter scale
+    pub token_jitter: f64,
+    /// dominant latent directions per class
+    pub n_dirs: usize,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    pub fn n_total(&self) -> usize {
+        self.n_train + self.n_calib + self.n_eval
+    }
+}
+
+/// Generated splits: the teacher-training split plus a ready `Dataset`
+/// (calibration pool + held-out eval split).
+#[derive(Debug, Clone)]
+pub struct SynthData {
+    /// `[n_train, T, d]`
+    pub train_x: Tensor,
+    pub train_y: Vec<usize>,
+    pub dataset: Dataset,
+}
+
+pub fn make_dataset(spec: &SynthSpec) -> Result<SynthData> {
+    let mut rng = Rng::new(spec.seed);
+    let (d, c, t) = (spec.dim, spec.n_classes, spec.tokens);
+    let n = spec.n_total();
+
+    // unit-norm class centers [c, d]
+    let centers = normal_rows(&mut rng, c, d, 1.0, true);
+    // per-class anisotropy directions [c, n_dirs, d], unit-norm along d
+    let dirs = normal_rows(&mut rng, c * spec.n_dirs, d, 1.0, true);
+
+    let y: Vec<usize> = (0..n).map(|_| rng.below(c)).collect();
+    // sample latent = center[y] + sum_k coeff_k * dirs[y, k]
+    let mut latent = vec![0.0f32; n * d];
+    for (s, &cls) in y.iter().enumerate() {
+        let dst = &mut latent[s * d..(s + 1) * d];
+        dst.copy_from_slice(&centers[cls * d..(cls + 1) * d]);
+        for k in 0..spec.n_dirs {
+            let coeff = rng.normal_scaled(0.0, spec.noise) as f32;
+            let dir = &dirs[(cls * spec.n_dirs + k) * d
+                ..(cls * spec.n_dirs + k + 1) * d];
+            for (o, &v) in dst.iter_mut().zip(dir) {
+                *o += coeff * v;
+            }
+        }
+    }
+    // tokens = latent + per-token jitter, flattened to [n*t, d]
+    let mut rows = Vec::with_capacity(n * t * d);
+    for s in 0..n {
+        let lat = &latent[s * d..(s + 1) * d];
+        for _ in 0..t {
+            for &v in lat {
+                rows.push(v + rng.normal_scaled(0.0, spec.token_jitter) as f32);
+            }
+        }
+    }
+    let x = Tensor::new(vec![n * t, d], rows)?;
+
+    // fixed random two-layer tanh warp + skip
+    let h = 2 * d;
+    let w1 = Tensor::new(
+        vec![d, h],
+        normal_rows(&mut rng, d, h, 1.0 / (d as f64).sqrt(), false),
+    )?;
+    let w2 = Tensor::new(
+        vec![h, d],
+        normal_rows(&mut rng, h, d, 1.0 / (h as f64).sqrt(), false),
+    )?;
+    let warped = x
+        .matmul(&w1)?
+        .map(f32::tanh)
+        .matmul(&w2)?
+        .zip_with(&x, |a, b| a + 0.3 * b)?;
+
+    // feature-wise standardization (population stats)
+    let rows_n = n * t;
+    let mut mean = vec![0.0f64; d];
+    for i in 0..rows_n {
+        for j in 0..d {
+            mean[j] += warped.data()[i * d + j] as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= rows_n as f64;
+    }
+    let mut var = vec![0.0f64; d];
+    for i in 0..rows_n {
+        for j in 0..d {
+            let dv = warped.data()[i * d + j] as f64 - mean[j];
+            var[j] += dv * dv;
+        }
+    }
+    let sd: Vec<f64> =
+        var.iter().map(|v| (v / rows_n as f64).sqrt() + 1e-6).collect();
+    let mut std_data = Vec::with_capacity(rows_n * d);
+    for i in 0..rows_n {
+        for j in 0..d {
+            std_data.push(
+                ((warped.data()[i * d + j] as f64 - mean[j]) / sd[j]) as f32,
+            );
+        }
+    }
+    let x = Tensor::new(vec![n, t, d], std_data)?;
+
+    // split train / calib / eval
+    let (a, b) = (spec.n_train, spec.n_train + spec.n_calib);
+    let slice3 = |lo: usize, hi: usize| -> Result<Tensor> {
+        let parts: Vec<Tensor> = (lo..hi).map(|i| x.subtensor(i)).collect();
+        Tensor::stack(&parts)
+    };
+    let dataset = Dataset {
+        calib_x: slice3(a, b)?,
+        calib_y: y[a..b].to_vec(),
+        eval_x: slice3(b, n)?,
+        eval_y: y[b..n].to_vec(),
+        tokens: t,
+        dim: d,
+        n_classes: c,
+    };
+    Ok(SynthData {
+        train_x: slice3(0, a)?,
+        train_y: y[..a].to_vec(),
+        dataset,
+    })
+}
+
+/// `rows x cols` normal samples (std `scale`), optionally row-normalized.
+fn normal_rows(
+    rng: &mut Rng,
+    rows: usize,
+    cols: usize,
+    scale: f64,
+    unit_rows: bool,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for _ in 0..rows {
+        let start = out.len();
+        for _ in 0..cols {
+            out.push(rng.normal_scaled(0.0, scale) as f32);
+        }
+        if unit_rows {
+            let norm = out[start..]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt()
+                .max(1e-12);
+            for v in &mut out[start..] {
+                *v /= norm;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SynthSpec {
+        SynthSpec {
+            dim: 8,
+            n_classes: 4,
+            tokens: 2,
+            n_train: 32,
+            n_calib: 16,
+            n_eval: 24,
+            noise: 0.6,
+            token_jitter: 0.4,
+            n_dirs: 3,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn shapes_and_label_ranges() {
+        let data = make_dataset(&tiny_spec()).unwrap();
+        assert_eq!(data.train_x.shape(), &[32, 2, 8]);
+        assert_eq!(data.train_y.len(), 32);
+        assert_eq!(data.dataset.calib_x.shape(), &[16, 2, 8]);
+        assert_eq!(data.dataset.eval_x.shape(), &[24, 2, 8]);
+        assert!(data.train_y.iter().all(|&y| y < 4));
+        assert!(data.dataset.eval_y.iter().all(|&y| y < 4));
+    }
+
+    #[test]
+    fn generation_is_seeded() {
+        let a = make_dataset(&tiny_spec()).unwrap();
+        let b = make_dataset(&tiny_spec()).unwrap();
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.dataset.eval_y, b.dataset.eval_y);
+        let c = make_dataset(&SynthSpec { seed: 12, ..tiny_spec() }).unwrap();
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn features_are_standardized() {
+        let data = make_dataset(&SynthSpec {
+            n_train: 256,
+            n_calib: 8,
+            n_eval: 8,
+            ..tiny_spec()
+        })
+        .unwrap();
+        // population mean ~0, std ~1 per feature over all rows
+        let x = &data.train_x;
+        let (n, t, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        for j in 0..d {
+            let mut mean = 0.0f64;
+            for i in 0..n * t {
+                mean += x.data()[i * d + j] as f64;
+            }
+            mean /= (n * t) as f64;
+            assert!(mean.abs() < 0.1, "feature {j} mean {mean}");
+        }
+    }
+}

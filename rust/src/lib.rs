@@ -1,25 +1,26 @@
 //! # rimc-dora
 //!
 //! Full-system reproduction of *"Efficient Calibration for RRAM-based
-//! In-Memory Computing using DoRA"* (CS.AR 2025) as a three-layer
-//! rust + JAX + Pallas stack:
+//! In-Memory Computing using DoRA"* (CS.AR 2025): RRAM crossbar
+//! simulator, SRAM adapter store, drift lifecycle, the layer-wise
+//! feature calibration engine (Algorithms 1-2), the backprop/LoRA
+//! baselines, metrics (Table I) and the experiment harness for every
+//! figure — all driven through a pluggable execution backend:
 //!
-//! * **L3 (this crate)** — the coordinator: RRAM crossbar simulator,
-//!   SRAM adapter store, drift lifecycle, the layer-wise feature
-//!   calibration engine (Algorithms 1-2), the backprop/LoRA baselines,
-//!   metrics (Table I) and the experiment harness for every figure.
-//! * **L2 (python/compile, build-time only)** — the MicroNet compute
-//!   graphs in JAX, AOT-lowered to HLO text artifacts.
-//! * **L1 (python/compile/kernels)** — Pallas kernels for the crossbar
-//!   MVM readout and the fused DoRA forward, with a hand-derived VJP.
+//! * **`runtime::NativeBackend`** (default) — a hermetic pure-Rust port
+//!   of the paper's kernels (`python/compile/kernels/ref.py`): crossbar
+//!   MVM with differential-pair decode and ADC quantization, the fused
+//!   DoRA forward with its hand-derived VJP, Adam, masked losses. Builds
+//!   and runs end-to-end with no Python, no XLA, no artifacts.
+//! * **`runtime::pjrt::PjrtBackend`** (`--features pjrt`) — executes the
+//!   AOT HLO artifacts lowered from the JAX/Pallas graphs in
+//!   `python/compile` through the PJRT C API.
 //!
-//! Python never runs at request time: `runtime::ArtifactStore` loads the
-//! HLO artifacts through the PJRT C API (`xla` crate) and all experiment
-//! logic is rust.
-//!
-//! See DESIGN.md for the substitution map (what the paper had vs what we
-//! simulate) and EXPERIMENTS.md for paper-vs-measured results.
+//! See DESIGN.md for the backend substitution map (what the paper had vs
+//! what each backend executes) and EXPERIMENTS.md for paper-vs-measured
+//! results.
 
+pub mod anyhow;
 pub mod calib;
 pub mod coordinator;
 pub mod dataset;

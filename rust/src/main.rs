@@ -1,7 +1,7 @@
 //! `rimc` — CLI for the RIMC-DoRA calibration system.
 //!
 //! Subcommands:
-//!   info                         artifact + model inventory
+//!   info                         backend + model inventory
 //!   evaluate                     teacher / drifted-student accuracy
 //!   calibrate                    run one calibration round (dora|lora|backprop)
 //!   sweep drift                  Fig. 2 rows
@@ -11,18 +11,19 @@
 //!   report table1                Table I from measured counters
 //!   lifecycle                    periodic-recalibration timeline (Fig. 1c)
 //!
-//! All subcommands take `--artifacts DIR` (default: ./artifacts).
+//! Backend selection: `--backend native` (default, hermetic) or
+//! `--backend pjrt --artifacts DIR` (requires a build with
+//! `--features pjrt` and a `make artifacts` run).
 
-use std::path::PathBuf;
 use std::process::ExitCode;
 
-use anyhow::{bail, Result};
+use rimc_dora::anyhow::{bail, Result};
 
 use rimc_dora::calib::{BackpropConfig, CalibConfig, InputMode};
 use rimc_dora::coordinator::{
     fig2_drift_sweep, fig4_dataset_size_sweep, fig5_rank_sweep,
-    fig6_lora_vs_dora, table1_rows, Engine, Evaluator,
-    RecalibrationScheduler, SchedulerPolicy,
+    fig6_lora_vs_dora, table1_rows, Engine, RecalibrationScheduler,
+    SchedulerPolicy,
 };
 use rimc_dora::model::AdapterKind;
 use rimc_dora::util::bench::print_table;
@@ -40,8 +41,26 @@ fn main() -> ExitCode {
 }
 
 fn engine(args: &Args) -> Result<Engine> {
-    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    match args.str_or("backend", "native").as_str() {
+        "native" => Ok(Engine::native()),
+        "pjrt" => pjrt_engine(args),
+        b => bail!("--backend {b}: expected native|pjrt"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_engine(args: &Args) -> Result<Engine> {
+    let dir = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
     Engine::open(&dir)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine(_args: &Args) -> Result<Engine> {
+    bail!(
+        "this build has no PJRT support; rebuild with `--features pjrt` \
+         (needs the `xla` crate, see DESIGN.md §Backends) or use the \
+         default native backend"
+    )
 }
 
 fn calib_cfg(args: &Args) -> Result<CalibConfig> {
@@ -96,10 +115,11 @@ fn run(args: &Args) -> Result<()> {
 const HELP: &str = "\
 rimc — RRAM in-memory-computing calibration with DoRA (paper repro)
 
-USAGE: rimc <SUBCOMMAND> [--artifacts DIR] [--model m20|m50] [flags]
+USAGE: rimc <SUBCOMMAND> [--backend native|pjrt] [--model nano|micro] [flags]
+       (pjrt needs a `--features pjrt` build plus [--artifacts DIR])
 
 SUBCOMMANDS
-  info                      artifact + model inventory
+  info                      backend + model inventory
   evaluate  [--drift R]     teacher & drifted-student accuracy
   calibrate [--method dora|lora|backprop] [--drift R] [--samples N]
             [--rank R] [--steps N] [--lr F] [--input-mode sequential|teacher]
@@ -113,7 +133,7 @@ SUBCOMMANDS
 
 fn cmd_info(args: &Args) -> Result<()> {
     let eng = engine(args)?;
-    println!("artifact dir: {}", eng.store.dir().display());
+    println!("backend: {}", eng.backend_name());
     for name in eng.model_names() {
         let s = eng.session(&name)?;
         println!(
@@ -134,15 +154,13 @@ fn cmd_info(args: &Args) -> Result<()> {
             s.dataset.n_eval()
         );
     }
-    let n = eng.store.names().count();
-    println!("{n} artifacts available");
     Ok(())
 }
 
 fn cmd_evaluate(args: &Args) -> Result<()> {
     let eng = engine(args)?;
-    let session = eng.session(&args.str_or("model", "m20"))?;
-    let ev = Evaluator::new(session.store, &session.spec);
+    let session = eng.session(&args.str_or("model", "nano"))?;
+    let ev = session.evaluator();
     let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
     println!("teacher accuracy: {}", pct(teacher_acc));
     let rel = args.f64_or("drift", 0.2)?;
@@ -155,8 +173,8 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let eng = engine(args)?;
-    let session = eng.session(&args.str_or("model", "m20"))?;
-    let ev = Evaluator::new(session.store, &session.spec);
+    let session = eng.session(&args.str_or("model", "nano"))?;
+    let ev = session.evaluator();
     let rel = args.f64_or("drift", 0.2)?;
     let n = args.usize_or("samples", 10)?;
     let seed = args.u64_or("seed", 3)?;
@@ -211,7 +229,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
     let eng = engine(args)?;
-    let session = eng.session(&args.str_or("model", "m20"))?;
+    let session = eng.session(&args.str_or("model", "nano"))?;
     match what {
         "drift" => {
             let drifts = args.f64_list_or(
@@ -310,7 +328,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         bail!("unknown report `{what}`");
     }
     let eng = engine(args)?;
-    let session = eng.session(&args.str_or("model", "m20"))?;
+    let session = eng.session(&args.str_or("model", "nano"))?;
     let rows = table1_rows(
         &session,
         args.f64_or("drift", 0.2)?,
@@ -340,7 +358,7 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_lifecycle(args: &Args) -> Result<()> {
     let eng = engine(args)?;
-    let session = eng.session(&args.str_or("model", "m20"))?;
+    let session = eng.session(&args.str_or("model", "nano"))?;
     let policy = match args.str_or("policy", "periodic").as_str() {
         "periodic" => SchedulerPolicy::Periodic {
             interval_hours: args.f64_or("interval-hours", 200.0)?,

@@ -6,8 +6,9 @@
 //! which makes the initial adapter an exact identity (DoRA output ==
 //! plain crossbar output), a property the integration tests pin down.
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
+use crate::runtime::{AdapterState, StackedAdapters};
 use crate::sram::SramBuffer;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -101,6 +102,22 @@ impl LayerAdapter {
         self.a.word_writes + self.b.word_writes + self.m.word_writes
     }
 
+    /// Snapshot of parameters + Adam moments for the backend step
+    /// kernels (which thread state through by value, artifact-style).
+    pub fn step_state(&self) -> AdapterState {
+        AdapterState {
+            a: self.a.tensor().clone(),
+            b: self.b.tensor().clone(),
+            m: self.m.tensor().clone(),
+            ma: self.ma.clone(),
+            va: self.va.clone(),
+            mb: self.mb.clone(),
+            vb: self.vb.clone(),
+            mm: self.mm.clone(),
+            vm: self.vm.clone(),
+        }
+    }
+
     /// Algorithm 2 line 12: merged magnitude for deployment,
     /// M_eff = M / n with the final column norm.
     pub fn merged_meff(&self) -> Result<Tensor> {
@@ -110,7 +127,7 @@ impl LayerAdapter {
                 let n = self
                     .last_n
                     .as_ref()
-                    .ok_or_else(|| anyhow::anyhow!("no step has run yet"))?;
+                    .ok_or_else(|| crate::anyhow::anyhow!("no step has run yet"))?;
                 let m = self.m.tensor();
                 let data: Vec<f32> = m
                     .data()
@@ -165,9 +182,8 @@ impl AdapterSet {
 
     /// Stacked [L, d, r] / [L, r, d] / [L, d] tensors for the full-model
     /// eval executables (requires every layer to have stepped at least
-    /// once for DoRA's meff; identity-initialized adapters use
-    /// `stacked_identity` instead).
-    pub fn stacked(&self) -> Result<(Tensor, Tensor, Tensor)> {
+    /// once for DoRA's meff).
+    pub fn stacked(&self) -> Result<StackedAdapters> {
         let a = Tensor::stack(
             &self.layers.iter().map(|l| l.a.tensor().clone()).collect::<Vec<_>>(),
         )?;
@@ -184,7 +200,7 @@ impl AdapterSet {
                     .collect::<Result<Vec<_>>>()?,
             )?,
         };
-        Ok((a, b, meff))
+        Ok(StackedAdapters { a, b, meff })
     }
 }
 

@@ -1,13 +1,16 @@
 //! Host-side model state: the teacher snapshot (digital weights + ADC
-//! scales from the bundle), the student (one RRAM crossbar per layer),
-//! and the SRAM-resident adapter sets (DoRA / LoRA + Adam state).
+//! scales, either trained natively or loaded from the artifact bundle),
+//! the student (one RRAM crossbar per layer), and the SRAM-resident
+//! adapter sets (DoRA / LoRA + Adam state).
 
 mod adapters;
 mod spec;
 mod student;
 mod teacher;
+pub mod train;
 
 pub use adapters::{AdapterKind, AdapterSet, LayerAdapter};
 pub use spec::ModelSpec;
 pub use student::StudentModel;
 pub use teacher::TeacherModel;
+pub use train::{train_teacher, TrainConfig};

@@ -1,7 +1,7 @@
 //! Model shape description, parsed from the artifact manifest (mirrors
 //! python/compile/model.py::ModelSpec).
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
 use crate::util::json::Json;
 

@@ -2,12 +2,13 @@
 //! (one per block + one for the head). Owns the drift lifecycle and
 //! produces the stacked conductance tensors the AOT executables consume.
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use super::spec::ModelSpec;
 use super::teacher::TeacherModel;
 use crate::device::{DriftModel, ProgramModel};
 use crate::rram::{ArrayCounters, Crossbar};
+use crate::runtime::{ArrayIo, StackedArrays};
 use crate::util::tensor::Tensor;
 
 pub struct StudentModel {
@@ -94,6 +95,36 @@ impl StudentModel {
     /// [L] per-block 1/w_scale.
     pub fn inv_scale_stack(&self) -> Tensor {
         Tensor::from_vec(self.blocks.iter().map(|b| b.inv_w_scale()).collect())
+    }
+
+    /// Backend inputs for block `l`'s array.
+    pub fn block_io(&self, l: usize) -> ArrayIo {
+        ArrayIo::new(
+            self.blocks[l].gp_tensor(),
+            self.blocks[l].gn_tensor(),
+            self.blocks[l].inv_w_scale(),
+            self.adc_fs.data()[l],
+        )
+    }
+
+    /// Backend inputs for the head array.
+    pub fn head_io(&self) -> ArrayIo {
+        ArrayIo::new(
+            self.head.gp_tensor(),
+            self.head.gn_tensor(),
+            self.head.inv_w_scale(),
+            self.adc_fs_head.data()[0],
+        )
+    }
+
+    /// Stacked backend inputs for the full-model eval forwards.
+    pub fn stacked_arrays(&self) -> Result<StackedArrays> {
+        Ok(StackedArrays {
+            gp: self.gp_stack()?,
+            gn: self.gn_stack()?,
+            inv_w_scale: self.inv_scale_stack(),
+            adc_fs: self.adc_fs.clone(),
+        })
     }
 
     /// Charge one MVM readout per array (one forward pass through the

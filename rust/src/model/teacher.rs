@@ -4,7 +4,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use super::spec::ModelSpec;
 use crate::util::tensor::Tensor;

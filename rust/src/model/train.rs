@@ -1,0 +1,223 @@
+//! Native teacher training — the Rust port of `python/compile/train.py`
+//! plus the ADC full-scale measurement from aot.py, so the hermetic
+//! build can produce a "GPU-trained DNN" (the paper's starting point)
+//! through the same `Backend::bp_step` kernel the backprop baseline
+//! uses.
+//!
+//! Residual-net initialization: `W ~ N(0, (init_gain / sqrt(d * L))^2)`
+//! keeps the pre-activation variance roughly constant through L residual
+//! blocks without BatchNorm (feature calibration explicitly avoids BN
+//! updates).
+
+use crate::anyhow::{bail, Result};
+
+use super::spec::ModelSpec;
+use super::teacher::TeacherModel;
+use crate::dataset::SynthData;
+use crate::runtime::{Backend, BpState, StepIo};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// ADC full-scale = margin * p99.9(|pre-activation|) (aot.py ADC_MARGIN).
+pub const ADC_MARGIN: f64 = 1.2;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub init_gain: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 40, batch: 32, lr: 2e-3, init_gain: 2.2, seed: 7 }
+    }
+}
+
+/// Train a teacher on the synthetic training split; returns the model
+/// (with measured per-layer ADC full-scales) and its eval accuracy.
+pub fn train_teacher(
+    backend: &dyn Backend,
+    spec: &ModelSpec,
+    data: &SynthData,
+    cfg: &TrainConfig,
+) -> Result<(TeacherModel, f64)> {
+    let (l, d, c) = (spec.n_blocks, spec.width, spec.n_classes);
+    let n = data.train_x.shape()[0];
+    if n < cfg.batch {
+        bail!("train split {n} smaller than batch {}", cfg.batch);
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let std = cfg.init_gain / ((d * l) as f64).sqrt();
+    let wb = Tensor::new(
+        vec![l, d, d],
+        (0..l * d * d)
+            .map(|_| rng.normal_scaled(0.0, std) as f32)
+            .collect(),
+    )?;
+    let wh = Tensor::new(
+        vec![d, c],
+        (0..d * c)
+            .map(|_| rng.normal_scaled(0.0, 1.0 / (d as f64).sqrt()) as f32)
+            .collect(),
+    )?;
+    let mut st = BpState::new(wb, wh);
+    let mask = Tensor::filled(vec![cfg.batch], 1.0);
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut t = 0.0f64;
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut perm);
+        let mut i = 0;
+        while i + cfg.batch <= n {
+            let idx = &perm[i..i + cfg.batch];
+            let rows = gather_rows(&data.train_x, idx)?;
+            let y1h = onehot(&data.train_y, idx, c)?;
+            t += 1.0;
+            backend.bp_step(
+                spec,
+                StepIo { x: &rows, mask: &mask, target: &y1h },
+                &mut st,
+                t,
+                cfg.lr,
+            )?;
+            i += cfg.batch;
+        }
+    }
+
+    let (adc_fs, adc_fs_head) =
+        measure_adc_fs(backend, spec, &st.wb, &st.wh, &data.train_x)?;
+    let teacher = TeacherModel {
+        wb: st.wb,
+        wh: st.wh,
+        adc_fs,
+        adc_fs_head,
+    };
+    let acc = crate::coordinator::Evaluator::new(backend, spec)
+        .teacher(&teacher, &data.dataset)?;
+    Ok((teacher, acc))
+}
+
+/// Per-layer ADC full-scale from teacher pre-activation statistics
+/// (aot.py `measure_adc_fs`), probed on the first <=128 train samples.
+/// The probe chains through the same backend that trained the teacher.
+fn measure_adc_fs(
+    backend: &dyn Backend,
+    spec: &ModelSpec,
+    wb: &Tensor,
+    wh: &Tensor,
+    train_x: &Tensor,
+) -> Result<(Tensor, Tensor)> {
+    let n_probe = train_x.shape()[0].min(128);
+    let d = spec.width;
+    let parts: Vec<Tensor> =
+        (0..n_probe).map(|i| train_x.subtensor(i)).collect();
+    let mut h = Tensor::stack(&parts)?
+        .reshaped(vec![n_probe * spec.tokens, d])?;
+    let mut fs = Vec::with_capacity(spec.n_blocks);
+    for l in 0..spec.n_blocks {
+        let w = wb.subtensor(l);
+        let y = h.matmul(&w)?;
+        fs.push((ADC_MARGIN * abs_quantile(&y, 0.999)) as f32);
+        h = backend.teacher_block(spec, &h, &w)?;
+    }
+    let logits = h.mean_pool_rows(spec.tokens)?.matmul(wh)?;
+    let fs_head = (ADC_MARGIN * abs_quantile(&logits, 0.999)) as f32;
+    Ok((Tensor::from_vec(fs), Tensor::from_vec(vec![fs_head])))
+}
+
+/// Linearly-interpolated quantile of |values| (numpy default method).
+fn abs_quantile(t: &Tensor, q: f64) -> f64 {
+    let mut v: Vec<f32> = t.data().iter().map(|x| x.abs()).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("no NaN in activations"));
+    if v.is_empty() {
+        return 0.0;
+    }
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    v[lo] as f64 * (1.0 - frac) + v[hi] as f64 * frac
+}
+
+/// Stack the samples at `idx` into `[len(idx) * T, d]` token rows.
+fn gather_rows(x: &Tensor, idx: &[usize]) -> Result<Tensor> {
+    let (t, d) = (x.shape()[1], x.shape()[2]);
+    let mut data = Vec::with_capacity(idx.len() * t * d);
+    for &i in idx {
+        data.extend_from_slice(x.subtensor(i).data());
+    }
+    Tensor::new(vec![idx.len() * t, d], data)
+}
+
+fn onehot(y: &[usize], idx: &[usize], n_classes: usize) -> Result<Tensor> {
+    let mut data = vec![0.0f32; idx.len() * n_classes];
+    for (row, &i) in idx.iter().enumerate() {
+        if y[i] >= n_classes {
+            bail!("label {} >= n_classes {n_classes}", y[i]);
+        }
+        data[row * n_classes + y[i]] = 1.0;
+    }
+    Tensor::new(vec![idx.len(), n_classes], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::{make_dataset, SynthSpec};
+    use crate::runtime::NativeBackend;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            n_blocks: 2,
+            width: 8,
+            n_classes: 4,
+            ranks: vec![1, 2],
+            with_lora: true,
+            teacher_acc: 0.0,
+            bundle_file: String::new(),
+            tokens: 2,
+            step_batch: 8,
+            eval_batch: 16,
+        }
+    }
+
+    #[test]
+    fn training_beats_chance() {
+        let spec = tiny_spec();
+        let data = make_dataset(&SynthSpec {
+            dim: 8,
+            n_classes: 4,
+            tokens: 2,
+            n_train: 256,
+            n_calib: 16,
+            n_eval: 128,
+            noise: 0.5,
+            token_jitter: 0.4,
+            n_dirs: 3,
+            seed: 5,
+        })
+        .unwrap();
+        let backend = NativeBackend::new();
+        let cfg = TrainConfig { epochs: 15, batch: 16, ..Default::default() };
+        let (teacher, acc) =
+            train_teacher(&backend, &spec, &data, &cfg).unwrap();
+        assert!(acc > 0.5, "teacher acc {acc} not above chance (0.25)");
+        assert_eq!(teacher.wb.shape(), &[2, 8, 8]);
+        assert_eq!(teacher.adc_fs.shape(), &[2]);
+        // full-scales must cover the signal with margin
+        assert!(teacher.adc_fs.data().iter().all(|&f| f > 0.0));
+        assert!(teacher.adc_fs_head.data()[0] > 0.0);
+        teacher.validate(&spec).unwrap();
+    }
+
+    #[test]
+    fn abs_quantile_interpolates() {
+        let t = Tensor::from_vec(vec![-4.0, 1.0, 2.0, 3.0]);
+        assert!((abs_quantile(&t, 1.0) - 4.0).abs() < 1e-9);
+        assert!((abs_quantile(&t, 0.5) - 2.5).abs() < 1e-9);
+        assert!((abs_quantile(&t, 0.0) - 1.0).abs() < 1e-9);
+    }
+}

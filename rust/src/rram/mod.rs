@@ -11,10 +11,11 @@
 //!   count exceeds endurance becomes *stuck* and ignores further writes,
 //! * read (MVM) energy/latency accounting for the metrics layer.
 //!
-//! The actual MVM arithmetic of the deployed model runs inside the AOT
-//! HLO artifacts (the Pallas crossbar kernel); this module owns the
-//! *state* — conductances and counters — and hands `gp()/gn()` tensors to
-//! the runtime as executable inputs. `read_weights()` is the slow
+//! The actual MVM arithmetic of the deployed model runs inside the
+//! execution backend (`runtime::Backend`: native kernels by default, or
+//! the AOT Pallas crossbar kernel under `--features pjrt`); this module
+//! owns the *state* — conductances and counters — and hands `gp()/gn()`
+//! tensors to the backend as inputs. `read_weights()` is the slow
 //! sense-amp readout path used once per calibration round to obtain
 //! `W_r` for the DoRA column norm (reads do not wear the device).
 
@@ -26,7 +27,7 @@ use crate::device::{constants, DriftModel, ProgramModel, WeightCoding};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 /// One differential crossbar array holding a `rows x cols` weight matrix.
 #[derive(Debug, Clone)]

@@ -1,0 +1,451 @@
+//! Pure-Rust ports of the oracle kernels in `python/compile/kernels/ref.py`.
+//!
+//! These are the single source of truth for the native backend's math and
+//! are pinned against golden values computed from the JAX reference in
+//! `rust/tests/native_backend.rs`. Conventions (paper Eq. 2 / Eq. 6,
+//! Algorithm 2 — see ref.py's module docstring):
+//!
+//! * differential pair:  `W_r = (G+ - G-) / w_scale`
+//! * mid-rise ADC:       `q = clip(round(y / lsb), -half, half-1) * lsb`,
+//!   `lsb = fs / 2^(bits-1)`, straight-through gradient
+//! * DoRA column norm:   `n_j = ||(W_r + A B)_{:,j}||_2` (NORM_EPS inside
+//!   the sqrt), merged magnitude `M_eff = M / n`
+//!
+//! `round` matches JAX/numpy round-half-to-even, not Rust's default
+//! round-half-away-from-zero — ADC codes at exact half-LSB boundaries
+//! must agree bit-for-bit with the PJRT artifacts.
+
+use crate::anyhow::{bail, Result};
+
+use crate::util::tensor::Tensor;
+
+/// Hardware ADC resolution baked into every artifact
+/// (python/compile/model.py `ADC_BITS`).
+pub const ADC_BITS: u32 = 8;
+
+/// Epsilon inside the DoRA column-norm sqrt (ref.py `NORM_EPS`).
+pub const NORM_EPS: f32 = 1e-8;
+
+pub const ADAM_B1: f64 = 0.9;
+pub const ADAM_B2: f64 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Round half-to-even (banker's rounding), the IEEE default used by
+/// `jnp.round` — `f32::round` rounds half away from zero and would put
+/// half-LSB inputs on different ADC codes than the artifacts.
+pub fn round_ties_even(v: f32) -> f32 {
+    let floor = v.floor();
+    let diff = v - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
+    }
+}
+
+/// Paper Eq. 2: effective weight seen by the array readout.
+pub fn weights_from_conductance(
+    gp: &Tensor,
+    gn: &Tensor,
+    inv_w_scale: f32,
+) -> Result<Tensor> {
+    gp.zip_with(gn, |p, n| (p - n) * inv_w_scale)
+}
+
+/// Uniform mid-rise ADC with full-scale `fs` (value path only; the
+/// gradient is straight-through by construction in the step kernels).
+pub fn adc_quantize(y: &Tensor, fs: f32, bits: u32) -> Tensor {
+    let half = (1u32 << (bits - 1)) as f32;
+    let lsb = fs / half;
+    y.map(|v| round_ties_even(v / lsb).clamp(-half, half - 1.0) * lsb)
+}
+
+/// Analog MVM: `X @ W_r` through the differential pair + ADC readout.
+pub fn crossbar_mvm(
+    x: &Tensor,
+    gp: &Tensor,
+    gn: &Tensor,
+    inv_w_scale: f32,
+    fs: f32,
+    bits: u32,
+) -> Result<Tensor> {
+    let wr = weights_from_conductance(gp, gn, inv_w_scale)?;
+    Ok(adc_quantize(&x.matmul(&wr)?, fs, bits))
+}
+
+/// Per-column L2 norm of the effective weight `W' = W_r + A@B` -> `[k]`.
+pub fn dora_colnorm(w_eff: &Tensor) -> Result<Tensor> {
+    if w_eff.shape().len() != 2 {
+        bail!("dora_colnorm wants 2-D, got {:?}", w_eff.shape());
+    }
+    let (d, k) = (w_eff.shape()[0], w_eff.shape()[1]);
+    let mut sums = vec![NORM_EPS; k];
+    for i in 0..d {
+        let row = &w_eff.data()[i * k..(i + 1) * k];
+        for (s, &w) in sums.iter_mut().zip(row) {
+            *s += w * w;
+        }
+    }
+    for s in &mut sums {
+        *s = s.sqrt();
+    }
+    Ok(Tensor::from_vec(sums))
+}
+
+/// Digital residual block: `relu(x W) + x`.
+pub fn teacher_block(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    x.matmul(w)?.map(|v| v.max(0.0)).zip_with(x, |a, b| a + b)
+}
+
+/// Drifted uncalibrated block: `relu(crossbar_mvm(x)) + x`.
+pub fn student_block(
+    x: &Tensor,
+    gp: &Tensor,
+    gn: &Tensor,
+    inv_w_scale: f32,
+    fs: f32,
+    bits: u32,
+) -> Result<Tensor> {
+    crossbar_mvm(x, gp, gn, inv_w_scale, fs, bits)?
+        .map(|v| v.max(0.0))
+        .zip_with(x, |a, b| a + b)
+}
+
+/// Intermediate products of the unmerged (training-time) DoRA forward,
+/// kept for the hand-derived backward pass.
+pub struct DoraForward {
+    /// `(quant(X W_r) + (X A) B) o (M / n)`
+    pub y: Tensor,
+    /// column norm `n` of `W' = W_r + A@B`
+    pub n: Tensor,
+    /// pre-scale sum `S = quant(X W_r) + (X A) B`
+    pub s: Tensor,
+    /// decoded weights `W_r`
+    pub wr: Tensor,
+    /// effective weight `W' = W_r + A@B` (reused by the norm-path VJP)
+    pub w_eff: Tensor,
+}
+
+/// Unmerged DoRA forward (ref.dora_linear), returning the residuals the
+/// VJP needs.
+#[allow(clippy::too_many_arguments)]
+pub fn dora_linear(
+    x: &Tensor,
+    gp: &Tensor,
+    gn: &Tensor,
+    inv_w_scale: f32,
+    fs: f32,
+    a: &Tensor,
+    b: &Tensor,
+    m: &Tensor,
+    bits: u32,
+) -> Result<DoraForward> {
+    let wr = weights_from_conductance(gp, gn, inv_w_scale)?;
+    let z = adc_quantize(&x.matmul(&wr)?, fs, bits);
+    let corr = x.matmul(a)?.matmul(b)?;
+    let w_eff = wr.zip_with(&a.matmul(b)?, |u, v| u + v)?;
+    let n = dora_colnorm(&w_eff)?;
+    let s = z.zip_with(&corr, |u, v| u + v)?;
+    let scale = m.zip_with(&n, |mm, nn| mm / nn)?;
+    let y = s.scale_cols(&scale)?;
+    Ok(DoraForward { y, n, s, wr, w_eff })
+}
+
+/// Merged (inference-time) DoRA forward: `M_eff = M / n` precomputed.
+#[allow(clippy::too_many_arguments)]
+pub fn dora_linear_merged(
+    x: &Tensor,
+    gp: &Tensor,
+    gn: &Tensor,
+    inv_w_scale: f32,
+    fs: f32,
+    a: &Tensor,
+    b: &Tensor,
+    meff: &Tensor,
+    bits: u32,
+) -> Result<Tensor> {
+    let z = crossbar_mvm(x, gp, gn, inv_w_scale, fs, bits)?;
+    let corr = x.matmul(a)?.matmul(b)?;
+    z.zip_with(&corr, |u, v| u + v)?.scale_cols(meff)
+}
+
+/// LoRA forward (Fig. 6 baseline): `Y = quant(X W_r) + (X A) B`.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_linear(
+    x: &Tensor,
+    gp: &Tensor,
+    gn: &Tensor,
+    inv_w_scale: f32,
+    fs: f32,
+    a: &Tensor,
+    b: &Tensor,
+    bits: u32,
+) -> Result<Tensor> {
+    let z = crossbar_mvm(x, gp, gn, inv_w_scale, fs, bits)?;
+    let corr = x.matmul(a)?.matmul(b)?;
+    z.zip_with(&corr, |u, v| u + v)
+}
+
+/// Mean squared error over rows with `mask == 1` (ref.masked_mse).
+pub fn masked_mse(pred: &Tensor, target: &Tensor, mask: &Tensor) -> Result<f32> {
+    check_masked(pred, target, mask, "masked_mse")?;
+    let k = pred.shape()[1];
+    let mut se = 0.0f32;
+    for (i, &m) in mask.data().iter().enumerate() {
+        if m == 0.0 {
+            continue;
+        }
+        let p = &pred.data()[i * k..(i + 1) * k];
+        let t = &target.data()[i * k..(i + 1) * k];
+        for (pv, tv) in p.iter().zip(t) {
+            se += (pv - tv) * (pv - tv) * m;
+        }
+    }
+    let denom = (mask.data().iter().sum::<f32>() * k as f32).max(1.0);
+    Ok(se / denom)
+}
+
+/// `d masked_mse / d pred = 2 (pred - target) mask / denom`.
+pub fn masked_mse_grad(
+    pred: &Tensor,
+    target: &Tensor,
+    mask: &Tensor,
+) -> Result<Tensor> {
+    check_masked(pred, target, mask, "masked_mse_grad")?;
+    let k = pred.shape()[1];
+    let denom = (mask.data().iter().sum::<f32>() * k as f32).max(1.0);
+    let mut out = Vec::with_capacity(pred.len());
+    for (i, &m) in mask.data().iter().enumerate() {
+        let p = &pred.data()[i * k..(i + 1) * k];
+        let t = &target.data()[i * k..(i + 1) * k];
+        for (pv, tv) in p.iter().zip(t) {
+            out.push(2.0 * (pv - tv) * m / denom);
+        }
+    }
+    Tensor::new(pred.shape().to_vec(), out)
+}
+
+/// Masked softmax cross-entropy with one-hot f32 labels
+/// (ref.masked_cross_entropy).
+pub fn masked_cross_entropy(
+    logits: &Tensor,
+    y_onehot: &Tensor,
+    mask: &Tensor,
+) -> Result<f32> {
+    check_masked(logits, y_onehot, mask, "masked_cross_entropy")?;
+    let c = logits.shape()[1];
+    let mut total = 0.0f32;
+    for (i, &m) in mask.data().iter().enumerate() {
+        if m == 0.0 {
+            continue;
+        }
+        let row = &logits.data()[i * c..(i + 1) * c];
+        let y = &y_onehot.data()[i * c..(i + 1) * c];
+        let logz = log_sum_exp(row);
+        let ll: f32 = row.iter().zip(y).map(|(l, yy)| (l - logz) * yy).sum();
+        total += ll * m;
+    }
+    let denom = mask.data().iter().sum::<f32>().max(1.0);
+    Ok(-total / denom)
+}
+
+/// `d masked_ce / d logits = (softmax - y) mask / denom`.
+pub fn masked_cross_entropy_grad(
+    logits: &Tensor,
+    y_onehot: &Tensor,
+    mask: &Tensor,
+) -> Result<Tensor> {
+    check_masked(logits, y_onehot, mask, "masked_cross_entropy_grad")?;
+    let c = logits.shape()[1];
+    let denom = mask.data().iter().sum::<f32>().max(1.0);
+    let mut out = Vec::with_capacity(logits.len());
+    for (i, &m) in mask.data().iter().enumerate() {
+        let row = &logits.data()[i * c..(i + 1) * c];
+        let y = &y_onehot.data()[i * c..(i + 1) * c];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let z: f32 = row.iter().map(|&l| (l - mx).exp()).sum();
+        for (l, yy) in row.iter().zip(y) {
+            let sm = (l - mx).exp() / z;
+            out.push((sm - yy) * m / denom);
+        }
+    }
+    Tensor::new(logits.shape().to_vec(), out)
+}
+
+/// One in-place Adam update (model.py `_adam_update`, beta1=.9,
+/// beta2=.999, eps=1e-8).
+pub fn adam_update(
+    p: &mut Tensor,
+    g: &Tensor,
+    mu: &mut Tensor,
+    nu: &mut Tensor,
+    t: f64,
+    lr: f64,
+) {
+    debug_assert_eq!(p.shape(), g.shape());
+    let b1 = ADAM_B1 as f32;
+    let b2 = ADAM_B2 as f32;
+    let c1 = (1.0 - ADAM_B1.powf(t)) as f32;
+    let c2 = (1.0 - ADAM_B2.powf(t)) as f32;
+    let lr = lr as f32;
+    let (pd, gd) = (p.data_mut(), g.data());
+    let (mud, nud) = (mu.data_mut(), nu.data_mut());
+    for i in 0..gd.len() {
+        mud[i] = b1 * mud[i] + (1.0 - b1) * gd[i];
+        nud[i] = b2 * nud[i] + (1.0 - b2) * gd[i] * gd[i];
+        let mu_hat = mud[i] / c1;
+        let nu_hat = nud[i] / c2;
+        pd[i] -= lr * mu_hat / (nu_hat.sqrt() + ADAM_EPS);
+    }
+}
+
+fn log_sum_exp(row: &[f32]) -> f32 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    mx + row.iter().map(|&l| (l - mx).exp()).sum::<f32>().ln()
+}
+
+fn check_masked(
+    pred: &Tensor,
+    target: &Tensor,
+    mask: &Tensor,
+    what: &str,
+) -> Result<()> {
+    if pred.shape().len() != 2
+        || pred.shape() != target.shape()
+        || mask.shape() != [pred.shape()[0]]
+    {
+        bail!(
+            "{what}: shapes pred {:?} target {:?} mask {:?}",
+            pred.shape(),
+            target.shape(),
+            mask.shape()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_ties_even_matches_ieee() {
+        for (v, want) in [
+            (0.5, 0.0),
+            (1.5, 2.0),
+            (2.5, 2.0),
+            (-0.5, 0.0),
+            (-1.5, -2.0),
+            (-2.5, -2.0),
+            (0.4, 0.0),
+            (0.6, 1.0),
+            (-3.5, -4.0),
+        ] {
+            assert_eq!(round_ties_even(v), want, "round({v})");
+        }
+    }
+
+    #[test]
+    fn adc_codes_live_on_the_grid_and_clip() {
+        let y = Tensor::from_vec(vec![-3.0, -0.26, 0.0, 0.26, 0.74, 10.0]);
+        let q = adc_quantize(&y, 2.0, 3); // half=4, lsb=0.5
+        for v in q.data() {
+            assert_eq!(v / 0.5, (v / 0.5).round(), "{v} off-grid");
+            assert!((-2.0..=1.5).contains(v), "{v} out of range");
+        }
+        assert_eq!(q.data()[0], -2.0); // clipped at -half * lsb
+        assert_eq!(q.data()[5], 1.5); // clipped at (half-1) * lsb
+    }
+
+    #[test]
+    fn colnorm_of_zero_matrix_is_sqrt_eps() {
+        let n = dora_colnorm(&Tensor::zeros(vec![3, 2])).unwrap();
+        for v in n.data() {
+            assert!((v - NORM_EPS.sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn adam_first_step_moves_by_lr() {
+        // bias-corrected Adam's first step is ~lr * sign(g)
+        let mut p = Tensor::from_vec(vec![1.0, -1.0]);
+        let g = Tensor::from_vec(vec![0.5, -0.25]);
+        let mut mu = Tensor::zeros(vec![2]);
+        let mut nu = Tensor::zeros(vec![2]);
+        adam_update(&mut p, &g, &mut mu, &mut nu, 1.0, 0.1);
+        assert!((p.data()[0] - 0.9).abs() < 1e-4, "{}", p.data()[0]);
+        assert!((p.data()[1] + 0.9).abs() < 1e-4, "{}", p.data()[1]);
+    }
+
+    #[test]
+    fn masked_losses_ignore_padding() {
+        let pred =
+            Tensor::new(vec![3, 2], vec![1.0, 2.0, 3.0, -1.0, 0.5, 0.5]).unwrap();
+        let tgt =
+            Tensor::new(vec![3, 2], vec![0.0, 2.0, 1.0, 1.0, 9.0, 9.0]).unwrap();
+        let mask = Tensor::from_vec(vec![1.0, 1.0, 0.0]);
+        // ((1)^2 + (2)^2 + (2)^2) / (2 * 2) = 9/4 (golden from ref.py)
+        let l = masked_mse(&pred, &tgt, &mask).unwrap();
+        assert!((l - 2.25).abs() < 1e-6, "{l}");
+        let g = masked_mse_grad(&pred, &tgt, &mask).unwrap();
+        assert_eq!(&g.data()[4..], &[0.0, 0.0], "padding row must not leak");
+        assert!((g.data()[0] - 2.0 * 1.0 / 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits_is_ln_c() {
+        let logits = Tensor::new(vec![2, 4], vec![1.0; 8]).unwrap();
+        let mut y = vec![0.0; 8];
+        y[0] = 1.0;
+        y[5] = 1.0;
+        let y = Tensor::new(vec![2, 4], y).unwrap();
+        let mask = Tensor::from_vec(vec![1.0, 1.0]);
+        let l = masked_cross_entropy(&logits, &y, &mask).unwrap();
+        assert!((l - (4.0f32).ln()).abs() < 1e-6, "{l}");
+        let g = masked_cross_entropy_grad(&logits, &y, &mask).unwrap();
+        // rows sum to zero; true class negative
+        assert!(g.data()[..4].iter().sum::<f32>().abs() < 1e-6);
+        assert!(g.data()[0] < 0.0 && g.data()[1] > 0.0);
+    }
+
+    #[test]
+    fn merged_equals_unmerged_with_meff_m_over_n() {
+        let x = Tensor::new(vec![2, 3], vec![0.5, -1.0, 2.0, 1.5, 0.5, -0.5])
+            .unwrap();
+        let gp = Tensor::new(vec![3, 2], vec![30.0, 0.0, 0.0, 40.0, 10.0, 0.0])
+            .unwrap();
+        let gn = Tensor::new(vec![3, 2], vec![0.0, 20.0, 15.0, 0.0, 0.0, 5.0])
+            .unwrap();
+        let (inv, fs) = (0.004, 2.0);
+        let a = Tensor::new(vec![3, 2], vec![0.1, -0.2, 0.0, 0.3, 0.2, 0.1])
+            .unwrap();
+        let b = Tensor::new(vec![2, 2], vec![0.4, -0.1, 0.1, 0.3]).unwrap();
+        let m = Tensor::from_vec(vec![0.9, 1.2]);
+        let fwd = dora_linear(&x, &gp, &gn, inv, fs, &a, &b, &m, 8).unwrap();
+        let meff = m.zip_with(&fwd.n, |mm, nn| mm / nn).unwrap();
+        let ym =
+            dora_linear_merged(&x, &gp, &gn, inv, fs, &a, &b, &meff, 8).unwrap();
+        for (u, v) in fwd.y.data().iter().zip(ym.data()) {
+            assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn lora_is_dora_merged_with_unit_meff() {
+        let x = Tensor::new(vec![2, 2], vec![1.0, -0.5, 0.25, 2.0]).unwrap();
+        let gp = Tensor::new(vec![2, 2], vec![50.0, 0.0, 0.0, 25.0]).unwrap();
+        let gn = Tensor::new(vec![2, 2], vec![0.0, 10.0, 30.0, 0.0]).unwrap();
+        let a = Tensor::new(vec![2, 1], vec![0.3, -0.1]).unwrap();
+        let b = Tensor::new(vec![1, 2], vec![0.2, 0.5]).unwrap();
+        let ones = Tensor::from_vec(vec![1.0, 1.0]);
+        let lo = lora_linear(&x, &gp, &gn, 0.01, 3.0, &a, &b, 8).unwrap();
+        let dm =
+            dora_linear_merged(&x, &gp, &gn, 0.01, 3.0, &a, &b, &ones, 8)
+                .unwrap();
+        assert_eq!(lo.data(), dm.data());
+    }
+}

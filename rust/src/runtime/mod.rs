@@ -1,282 +1,296 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Execution backends: every paper entry point (forwards, calibration
+//! steps, stacked eval graphs) behind one `Backend` trait.
 //!
-//! Design points:
-//! * **HLO text interchange** — `HloModuleProto::from_text_file`; see
-//!   aot.py for why serialized protos are rejected by xla_extension 0.5.1.
-//! * **Lazy compile + cache** — `ArtifactStore::executable` compiles an
-//!   entry point on first use and memoizes it; sweeps reuse the cache.
-//! * **Buffer-resident hot loop** — `Executable::execute_buffers` takes
-//!   device-resident `PjRtBuffer`s so the calibration loop can keep
-//!   conductance planes and activations on device instead of re-uploading
-//!   literals every step (see EXPERIMENTS.md §Perf).
-//! * All outputs come back as a flat `Vec<Tensor>` (the AOT side lowers
-//!   with `return_tuple=True`).
+//! Two implementations exist:
+//!
+//! * [`NativeBackend`] (default, hermetic) — a pure-Rust port of the
+//!   oracle kernels in `python/compile/kernels/ref.py`: differential-pair
+//!   weight decode, mid-rise ADC quantization, DoRA column norm, the
+//!   fused DoRA forward with its hand-derived VJP, Adam, and the masked
+//!   losses. No Python, no XLA, no artifacts directory.
+//! * `pjrt::PjrtBackend` (behind the `pjrt` cargo feature) — loads the
+//!   AOT HLO artifacts produced by `python/compile/aot.py` and executes
+//!   them through the PJRT C API (`xla` crate).
+//!
+//! The calibration engine (`calib::*`), evaluator and experiment harness
+//! (`coordinator::*`) are written against the trait only; swapping the
+//! execution substrate never touches them. See DESIGN.md §Backends for
+//! the substitution map.
 
-mod convert;
+pub mod kernels;
+mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use convert::{literal_to_tensor, tensor_to_literal};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ArtifactStore, Executable, PjrtBackend, RuntimeStats};
 
-use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
+use crate::anyhow::Result;
 
-use anyhow::{bail, Context, Result};
-
-use crate::util::json::Json;
+use crate::model::ModelSpec;
 use crate::util::tensor::Tensor;
 
-/// Cumulative runtime statistics (perf pass instrumentation).
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeStats {
-    pub compiles: u64,
-    pub compile_ns: u128,
-    pub executions: u64,
-    pub execute_ns: u128,
-    pub h2d_transfers: u64,
-    pub d2h_transfers: u64,
-}
-
-/// One compiled entry point.
-pub struct Executable {
-    name: String,
-    exe: xla::PjRtLoadedExecutable,
-    stats: Rc<RefCell<RuntimeStats>>,
-}
-
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// Execute with host tensors; returns all outputs as host tensors.
-    pub fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| tensor_to_literal(t))
-            .collect::<Result<_>>()?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.h2d_transfers += literals.len() as u64;
-        }
-        let t0 = Instant::now();
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("execute {}", self.name))?;
-        let out = self.collect_outputs(result)?;
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.execute_ns += t0.elapsed().as_nanos();
-        Ok(out)
-    }
-
-    /// Upload a host tensor once; reuse across many `execute_buffers`.
-    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        let mut s = self.stats.borrow_mut();
-        s.h2d_transfers += 1;
-        drop(s);
-        self.exe
-            .client()
-            .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
-            .with_context(|| format!("upload to {}", self.name))
-    }
-
-    /// Execute with device-resident buffers (hot-loop path). Outputs stay
-    /// on device; use `download` on the ones you need.
-    pub fn execute_buffers(
-        &self,
-        inputs: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<xla::PjRtBuffer>> {
-        let t0 = Instant::now();
-        let mut result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .with_context(|| format!("execute_b {}", self.name))?;
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.execute_ns += t0.elapsed().as_nanos();
-        drop(s);
-        if result.len() != 1 {
-            bail!("{}: expected 1 replica, got {}", self.name, result.len());
-        }
-        Ok(result.remove(0))
-    }
-
-    /// Download the (tuple) output of `execute_buffers` and decompose it
-    /// into per-element host tensors. `return_tuple=True` executables
-    /// return ONE tuple buffer from `execute_b` on this client.
-    pub fn download_tuple(&self, buf: &xla::PjRtBuffer) -> Result<Vec<Tensor>> {
-        let mut s = self.stats.borrow_mut();
-        s.d2h_transfers += 1;
-        drop(s);
-        let lit = buf.to_literal_sync()?;
-        match lit.clone().to_tuple() {
-            Ok(parts) => parts.iter().map(literal_to_tensor).collect(),
-            Err(_) => Ok(vec![literal_to_tensor(&lit)?]),
-        }
-    }
-
-    /// Download one device buffer to a host tensor.
-    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
-        let mut s = self.stats.borrow_mut();
-        s.d2h_transfers += 1;
-        drop(s);
-        let lit = buf.to_literal_sync()?;
-        literal_to_tensor(&lit)
-    }
-
-    fn collect_outputs(
-        &self,
-        result: Vec<Vec<xla::PjRtBuffer>>,
-    ) -> Result<Vec<Tensor>> {
-        if result.len() != 1 {
-            bail!("{}: expected 1 replica, got {}", self.name, result.len());
-        }
-        let bufs = &result[0];
-        let mut out = Vec::new();
-        {
-            let mut s = self.stats.borrow_mut();
-            s.d2h_transfers += bufs.len() as u64;
-        }
-        if bufs.len() == 1 {
-            // single buffer: may be the tuple itself (execute keeps tuples
-            // together on some paths) — decompose if so
-            let lit = bufs[0].to_literal_sync()?;
-            match lit.clone().to_tuple() {
-                Ok(parts) => {
-                    for p in parts {
-                        out.push(literal_to_tensor(&p)?);
-                    }
-                }
-                Err(_) => out.push(literal_to_tensor(&lit)?),
-            }
-        } else {
-            for b in bufs {
-                let lit = b.to_literal_sync()?;
-                out.push(literal_to_tensor(&lit)?);
-            }
-        }
-        Ok(out)
-    }
-}
-
-/// Shape metadata for one artifact, parsed from the manifest.
+/// Executable inputs describing one crossbar array: drifted conductance
+/// planes plus the two per-array scalars every kernel needs.
 #[derive(Debug, Clone)]
-pub struct ArtifactInfo {
-    pub file: PathBuf,
-    pub input_shapes: Vec<Vec<usize>>,
+pub struct ArrayIo {
+    /// positive-device conductances `[rows, cols]`
+    pub gp: Tensor,
+    /// negative-device conductances `[rows, cols]`
+    pub gn: Tensor,
+    /// `1 / w_scale` as a `[1]` tensor (artifact input convention)
+    pub inv_w_scale: Tensor,
+    /// ADC full-scale as a `[1]` tensor
+    pub adc_fs: Tensor,
 }
 
-/// Loads `manifest.json`, memoizes compiled executables.
-pub struct ArtifactStore {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Json,
-    infos: BTreeMap<String, ArtifactInfo>,
-    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
-    stats: Rc<RefCell<RuntimeStats>>,
+impl ArrayIo {
+    pub fn new(gp: Tensor, gn: Tensor, inv_w_scale: f32, adc_fs: f32) -> ArrayIo {
+        ArrayIo {
+            gp,
+            gn,
+            inv_w_scale: Tensor::scalar1(inv_w_scale),
+            adc_fs: Tensor::scalar1(adc_fs),
+        }
+    }
+
+    pub fn inv(&self) -> f32 {
+        self.inv_w_scale.data()[0]
+    }
+
+    pub fn fs(&self) -> f32 {
+        self.adc_fs.data()[0]
+    }
 }
 
-impl ArtifactStore {
-    pub fn open(dir: &Path) -> Result<ArtifactStore> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "read {} — run `make artifacts` first",
-                manifest_path.display()
-            )
-        })?;
-        let manifest = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
-        let mut infos = BTreeMap::new();
-        for (model, m) in manifest.req("models").as_obj().unwrap() {
-            for (name, a) in m.req("artifacts").as_obj().unwrap() {
-                let file = dir.join(a.req("file").as_str().unwrap());
-                let input_shapes = a
-                    .req("inputs")
-                    .as_arr()
-                    .unwrap()
-                    .iter()
-                    .map(|s| {
-                        s.as_arr()
-                            .unwrap()
-                            .iter()
-                            .map(|d| d.as_usize().unwrap())
-                            .collect()
-                    })
-                    .collect();
-                infos.insert(name.clone(), ArtifactInfo { file, input_shapes });
-                let _ = model;
-            }
+/// Stacked per-block array inputs for the full-model eval executables.
+#[derive(Debug, Clone)]
+pub struct StackedArrays {
+    /// `[L, d, d]`
+    pub gp: Tensor,
+    /// `[L, d, d]`
+    pub gn: Tensor,
+    /// `[L]`
+    pub inv_w_scale: Tensor,
+    /// `[L]`
+    pub adc_fs: Tensor,
+}
+
+/// Stacked per-block adapters for the full-model eval executables.
+/// `meff` is zero-length for LoRA.
+#[derive(Debug, Clone)]
+pub struct StackedAdapters {
+    /// `[L, d, r]`
+    pub a: Tensor,
+    /// `[L, r, d]`
+    pub b: Tensor,
+    /// `[L, d]` (DoRA) or `[0]` (LoRA)
+    pub meff: Tensor,
+}
+
+/// One layer's adapter tensors by reference (merged form). `meff` is
+/// zero-length for LoRA.
+#[derive(Debug, Clone, Copy)]
+pub struct AdapterIo<'a> {
+    pub a: &'a Tensor,
+    pub b: &'a Tensor,
+    pub meff: &'a Tensor,
+}
+
+/// Whether a calibration step targets a residual block (token rows,
+/// relu + residual) or the classifier head (mean-pooled, plain linear).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerRole {
+    Block,
+    Head,
+}
+
+/// One minibatch of calibration-step inputs.
+///
+/// Block role: `x`/`target` are token rows `[rows, d]`, `mask` is the row
+/// mask `[rows]`. Head role: `x` is token rows, `target` the teacher
+/// logits `[batch, C]`, `mask` the sample mask `[batch]`. For `bp_step`,
+/// `target` is the one-hot label matrix and `mask` the sample mask.
+#[derive(Debug, Clone, Copy)]
+pub struct StepIo<'a> {
+    pub x: &'a Tensor,
+    pub mask: &'a Tensor,
+    pub target: &'a Tensor,
+}
+
+/// Adapter parameters + Adam moments threaded through step kernels.
+/// `m`/`mm`/`vm` are zero-length for LoRA.
+#[derive(Debug, Clone)]
+pub struct AdapterState {
+    pub a: Tensor,
+    pub b: Tensor,
+    pub m: Tensor,
+    pub ma: Tensor,
+    pub va: Tensor,
+    pub mb: Tensor,
+    pub vb: Tensor,
+    pub mm: Tensor,
+    pub vm: Tensor,
+}
+
+/// Full-model weights + Adam moments for the backprop baseline.
+#[derive(Debug, Clone)]
+pub struct BpState {
+    /// `[L, d, d]`
+    pub wb: Tensor,
+    /// `[d, C]`
+    pub wh: Tensor,
+    pub mwb: Tensor,
+    pub vwb: Tensor,
+    pub mwh: Tensor,
+    pub vwh: Tensor,
+}
+
+impl BpState {
+    /// Zero-moment state around a weight snapshot.
+    pub fn new(wb: Tensor, wh: Tensor) -> BpState {
+        BpState {
+            mwb: Tensor::zeros(wb.shape().to_vec()),
+            vwb: Tensor::zeros(wb.shape().to_vec()),
+            mwh: Tensor::zeros(wh.shape().to_vec()),
+            vwh: Tensor::zeros(wh.shape().to_vec()),
+            wb,
+            wh,
         }
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(ArtifactStore {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            infos,
-            cache: RefCell::new(BTreeMap::new()),
-            stats: Rc::new(RefCell::new(RuntimeStats::default())),
-        })
     }
+}
 
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
+/// Result of one calibration step.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub loss: f64,
+    /// DoRA column norm after the update (Algorithm 2's `n`, consumed by
+    /// the line-12 merge); `None` for LoRA.
+    pub colnorm: Option<Tensor>,
+}
 
-    pub fn names(&self) -> impl Iterator<Item = &String> {
-        self.infos.keys()
-    }
+/// The paper's compute surface. One method per AOT entry point family
+/// (python/compile/model.py `entry_points`), expressed over host
+/// `Tensor`s so substrates and calibration logic stay backend-agnostic.
+#[allow(clippy::too_many_arguments)]
+pub trait Backend {
+    fn name(&self) -> &'static str;
 
-    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
-        self.infos.get(name)
-    }
+    // ---- single-layer forwards (x: [rows, d] token rows) ------------
 
-    pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
-    }
+    /// Digital residual block: `relu(x W) + x`.
+    fn teacher_block(&self, spec: &ModelSpec, x: &Tensor, w: &Tensor)
+        -> Result<Tensor>;
 
-    /// Compile-on-first-use accessor.
-    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let info = self
-            .infos
-            .get(name)
-            .with_context(|| format!("unknown artifact `{name}`"))?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&info.file)
-            .map_err(|e| anyhow::anyhow!("load {}: {e:?}", info.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.compiles += 1;
-            s.compile_ns += t0.elapsed().as_nanos();
-        }
-        let exec = Rc::new(Executable {
-            name: name.to_string(),
-            exe,
-            stats: self.stats.clone(),
-        });
-        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
-        Ok(exec)
-    }
+    /// Digital head: mean-pool tokens, then `x W_h`.
+    fn teacher_head(&self, spec: &ModelSpec, x: &Tensor, w: &Tensor)
+        -> Result<Tensor>;
 
-    /// Manifest constants block accessor.
-    pub fn constant_f64(&self, key: &str) -> f64 {
-        self.manifest
-            .req("constants")
-            .req(key)
-            .as_f64()
-            .unwrap_or_else(|| panic!("constant {key}"))
-    }
+    /// Drifted uncalibrated block (Fig. 2 subject).
+    fn student_block(&self, spec: &ModelSpec, x: &Tensor, arr: &ArrayIo)
+        -> Result<Tensor>;
+
+    /// Drifted uncalibrated head (mean-pooled crossbar MVM).
+    fn student_head(&self, spec: &ModelSpec, x: &Tensor, arr: &ArrayIo)
+        -> Result<Tensor>;
+
+    /// Calibrated block, merged DoRA form (deployment hot path).
+    fn dora_block(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+        ad: AdapterIo<'_>,
+    ) -> Result<Tensor>;
+
+    /// Calibrated block, LoRA baseline.
+    fn lora_block(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+        ad: AdapterIo<'_>,
+    ) -> Result<Tensor>;
+
+    // ---- calibration steps (Algorithm 1 lines 6-9) ------------------
+
+    /// One Adam step on `(A, B, M)` against teacher features; mutates
+    /// `st` in place and reports the pre-update loss plus the refreshed
+    /// column norm.
+    fn dora_step(
+        &self,
+        spec: &ModelSpec,
+        role: LayerRole,
+        io: StepIo<'_>,
+        arr: &ArrayIo,
+        st: &mut AdapterState,
+        t: f64,
+        lr: f64,
+    ) -> Result<StepOutput>;
+
+    /// LoRA variant (no magnitude vector).
+    fn lora_step(
+        &self,
+        spec: &ModelSpec,
+        role: LayerRole,
+        io: StepIo<'_>,
+        arr: &ArrayIo,
+        st: &mut AdapterState,
+        t: f64,
+        lr: f64,
+    ) -> Result<StepOutput>;
+
+    /// One Adam step of end-to-end cross-entropy retraining of every
+    /// weight (the §II-B baseline); mutates `st`, returns the loss.
+    fn bp_step(
+        &self,
+        spec: &ModelSpec,
+        io: StepIo<'_>,
+        st: &mut BpState,
+        t: f64,
+        lr: f64,
+    ) -> Result<f64>;
+
+    // ---- stacked full-model eval forwards ---------------------------
+
+    /// Digital forward through all blocks + head -> logits.
+    fn model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        wb: &Tensor,
+        wh: &Tensor,
+    ) -> Result<Tensor>;
+
+    /// Drifted uncalibrated forward -> logits.
+    fn student_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        head: &ArrayIo,
+    ) -> Result<Tensor>;
+
+    /// Calibrated forward with merged DoRA adapters -> logits.
+    fn dora_model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        ads: &StackedAdapters,
+        head: &ArrayIo,
+        head_ad: AdapterIo<'_>,
+    ) -> Result<Tensor>;
+
+    /// Calibrated forward with LoRA adapters -> logits.
+    fn lora_model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        ads: &StackedAdapters,
+        head: &ArrayIo,
+        head_ad: AdapterIo<'_>,
+    ) -> Result<Tensor>;
 }

@@ -1,0 +1,392 @@
+//! `NativeBackend`: the default, hermetic execution backend. Every entry
+//! point is computed directly on host `Tensor`s with the pure-Rust
+//! kernels in `runtime::kernels` — no Python, no XLA, no artifacts.
+//!
+//! Gradient paths are the hand-derived VJPs from
+//! `python/compile/kernels/dora.py` (validated against `jax.grad` of the
+//! oracle before porting; see DESIGN.md §Backends):
+//!
+//! ```text
+//! W' = W_r + A B,  n_j = ||W'_:,j||,  S = quant(X W_r) + (X A) B,
+//! s = M / n,  Y = S o s
+//!   dS = G o s                      (G = dL/dY)
+//!   dM = sum_rows(G o S) / n
+//!   dn = -(M / n^2) sum_rows(G o S)
+//!   dW'(norm path) = W' o (dn / n)
+//!   dA = X^T dS B^T + dW' B^T,  dB = A^T X^T dS + A^T dW'
+//! ```
+//! (the ADC quantizer is straight-through, so `z` contributes no extra
+//! factor; `X`, conductances and scales are non-trainable).
+
+use crate::anyhow::{bail, Result};
+
+use super::kernels as k;
+use super::{
+    AdapterIo, AdapterState, ArrayIo, Backend, BpState, LayerRole,
+    StackedAdapters, StackedArrays, StepIo, StepOutput,
+};
+use crate::model::ModelSpec;
+use crate::util::tensor::Tensor;
+
+/// Pure-Rust execution backend (zero-sized; all state flows through
+/// arguments).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+/// `sum_rows(a o b)` per column -> `[k]`.
+fn column_dot(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape() != b.shape() || a.shape().len() != 2 {
+        bail!("column_dot shapes {:?} vs {:?}", a.shape(), b.shape());
+    }
+    let (rows, kk) = (a.shape()[0], a.shape()[1]);
+    let mut out = vec![0.0f32; kk];
+    for i in 0..rows {
+        let ar = &a.data()[i * kk..(i + 1) * kk];
+        let br = &b.data()[i * kk..(i + 1) * kk];
+        for (o, (&u, &v)) in out.iter_mut().zip(ar.iter().zip(br)) {
+            *o += u * v;
+        }
+    }
+    Ok(Tensor::from_vec(out))
+}
+
+/// relu(y) + x and the mask `1[y > 0]` the backward pass reuses.
+fn relu_residual(y: &Tensor, x: &Tensor) -> Result<Tensor> {
+    y.map(|v| v.max(0.0)).zip_with(x, |a, b| a + b)
+}
+
+fn relu_mask_grad(g: &Tensor, y: &Tensor) -> Result<Tensor> {
+    g.zip_with(y, |gv, yv| if yv > 0.0 { gv } else { 0.0 })
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn teacher_block(
+        &self,
+        _spec: &ModelSpec,
+        x: &Tensor,
+        w: &Tensor,
+    ) -> Result<Tensor> {
+        k::teacher_block(x, w)
+    }
+
+    fn teacher_head(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        w: &Tensor,
+    ) -> Result<Tensor> {
+        x.mean_pool_rows(spec.tokens)?.matmul(w)
+    }
+
+    fn student_block(
+        &self,
+        _spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+    ) -> Result<Tensor> {
+        k::student_block(x, &arr.gp, &arr.gn, arr.inv(), arr.fs(), k::ADC_BITS)
+    }
+
+    fn student_head(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+    ) -> Result<Tensor> {
+        let pooled = x.mean_pool_rows(spec.tokens)?;
+        k::crossbar_mvm(&pooled, &arr.gp, &arr.gn, arr.inv(), arr.fs(), k::ADC_BITS)
+    }
+
+    fn dora_block(
+        &self,
+        _spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+        ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let y = k::dora_linear_merged(
+            x, &arr.gp, &arr.gn, arr.inv(), arr.fs(), ad.a, ad.b, ad.meff, k::ADC_BITS,
+        )?;
+        relu_residual(&y, x)
+    }
+
+    fn lora_block(
+        &self,
+        _spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+        ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let y =
+            k::lora_linear(x, &arr.gp, &arr.gn, arr.inv(), arr.fs(), ad.a, ad.b, k::ADC_BITS)?;
+        relu_residual(&y, x)
+    }
+
+    fn dora_step(
+        &self,
+        spec: &ModelSpec,
+        role: LayerRole,
+        io: StepIo<'_>,
+        arr: &ArrayIo,
+        st: &mut AdapterState,
+        t: f64,
+        lr: f64,
+    ) -> Result<StepOutput> {
+        let pooled;
+        let x: &Tensor = match role {
+            LayerRole::Block => io.x,
+            LayerRole::Head => {
+                pooled = io.x.mean_pool_rows(spec.tokens)?;
+                &pooled
+            }
+        };
+        let fwd = k::dora_linear(
+            x, &arr.gp, &arr.gn, arr.inv(), arr.fs(), &st.a, &st.b, &st.m, k::ADC_BITS,
+        )?;
+        let (loss, g) = match role {
+            LayerRole::Block => {
+                let pred = relu_residual(&fwd.y, x)?;
+                let loss = k::masked_mse(&pred, io.target, io.mask)?;
+                let g = k::masked_mse_grad(&pred, io.target, io.mask)?;
+                (loss, relu_mask_grad(&g, &fwd.y)?)
+            }
+            LayerRole::Head => {
+                let loss = k::masked_mse(&fwd.y, io.target, io.mask)?;
+                (loss, k::masked_mse_grad(&fwd.y, io.target, io.mask)?)
+            }
+        };
+        // hand-derived VJP (module docstring)
+        let s_scale = st.m.zip_with(&fwd.n, |m, n| m / n)?;
+        let ds = g.scale_cols(&s_scale)?;
+        let gs = column_dot(&g, &fwd.s)?;
+        let dm = gs.zip_with(&fwd.n, |u, n| u / n)?;
+        let dn_over_n = gs
+            .zip_with(&fwd.n, |u, n| -u / (n * n))?
+            .zip_with(&st.m, |u, m| u * m)?
+            .zip_with(&fwd.n, |u, n| u / n)?;
+        let dw_norm = fwd.w_eff.scale_cols(&dn_over_n)?;
+        let u = x.transposed().matmul(&ds)?.zip_with(&dw_norm, |p, q| p + q)?;
+        let da = u.matmul(&st.b.transposed())?;
+        let db = st.a.transposed().matmul(&u)?;
+        k::adam_update(&mut st.a, &da, &mut st.ma, &mut st.va, t, lr);
+        k::adam_update(&mut st.b, &db, &mut st.mb, &mut st.vb, t, lr);
+        k::adam_update(&mut st.m, &dm, &mut st.mm, &mut st.vm, t, lr);
+        let n = k::dora_colnorm(
+            &fwd.wr.zip_with(&st.a.matmul(&st.b)?, |u, v| u + v)?,
+        )?;
+        Ok(StepOutput { loss: loss as f64, colnorm: Some(n) })
+    }
+
+    fn lora_step(
+        &self,
+        spec: &ModelSpec,
+        role: LayerRole,
+        io: StepIo<'_>,
+        arr: &ArrayIo,
+        st: &mut AdapterState,
+        t: f64,
+        lr: f64,
+    ) -> Result<StepOutput> {
+        let pooled;
+        let x: &Tensor = match role {
+            LayerRole::Block => io.x,
+            LayerRole::Head => {
+                pooled = io.x.mean_pool_rows(spec.tokens)?;
+                &pooled
+            }
+        };
+        let z = k::crossbar_mvm(x, &arr.gp, &arr.gn, arr.inv(), arr.fs(), k::ADC_BITS)?;
+        let xa = x.matmul(&st.a)?;
+        let y = z.zip_with(&xa.matmul(&st.b)?, |u, v| u + v)?;
+        let (loss, g) = match role {
+            LayerRole::Block => {
+                let pred = relu_residual(&y, x)?;
+                let loss = k::masked_mse(&pred, io.target, io.mask)?;
+                let g = k::masked_mse_grad(&pred, io.target, io.mask)?;
+                (loss, relu_mask_grad(&g, &y)?)
+            }
+            LayerRole::Head => {
+                let loss = k::masked_mse(&y, io.target, io.mask)?;
+                (loss, k::masked_mse_grad(&y, io.target, io.mask)?)
+            }
+        };
+        let da = x.transposed().matmul(&g.matmul(&st.b.transposed())?)?;
+        let db = xa.transposed().matmul(&g)?;
+        k::adam_update(&mut st.a, &da, &mut st.ma, &mut st.va, t, lr);
+        k::adam_update(&mut st.b, &db, &mut st.mb, &mut st.vb, t, lr);
+        Ok(StepOutput { loss: loss as f64, colnorm: None })
+    }
+
+    fn bp_step(
+        &self,
+        spec: &ModelSpec,
+        io: StepIo<'_>,
+        st: &mut BpState,
+        t: f64,
+        lr: f64,
+    ) -> Result<f64> {
+        let n_blocks = st.wb.shape()[0];
+        // forward, keeping per-layer inputs and pre-activations
+        let mut hs: Vec<Tensor> = vec![io.x.clone()];
+        let mut pres: Vec<Tensor> = Vec::with_capacity(n_blocks);
+        for l in 0..n_blocks {
+            let w = st.wb.subtensor(l);
+            let h = hs.last().expect("nonempty");
+            let pre = h.matmul(&w)?;
+            let next = relu_residual(&pre, h)?;
+            pres.push(pre);
+            hs.push(next);
+        }
+        let pooled = hs.last().expect("nonempty").mean_pool_rows(spec.tokens)?;
+        let logits = pooled.matmul(&st.wh)?;
+        let loss = k::masked_cross_entropy(&logits, io.target, io.mask)?;
+        // backward
+        let dlogits = k::masked_cross_entropy_grad(&logits, io.target, io.mask)?;
+        let dwh = pooled.transposed().matmul(&dlogits)?;
+        let dpooled = dlogits.matmul(&st.wh.transposed())?;
+        // unpool the mean: every token row gets dpooled[sample] / tokens
+        let tokens = spec.tokens;
+        let (batch, d) = (dpooled.shape()[0], dpooled.shape()[1]);
+        let mut dh_data = Vec::with_capacity(batch * tokens * d);
+        for s in 0..batch {
+            let row = &dpooled.data()[s * d..(s + 1) * d];
+            for _ in 0..tokens {
+                dh_data.extend(row.iter().map(|&v| v / tokens as f32));
+            }
+        }
+        let mut dh = Tensor::new(vec![batch * tokens, d], dh_data)?;
+        let mut dwb_parts: Vec<Tensor> = Vec::with_capacity(n_blocks);
+        for l in (0..n_blocks).rev() {
+            let gpre = relu_mask_grad(&dh, &pres[l])?;
+            dwb_parts.push(hs[l].transposed().matmul(&gpre)?);
+            let w = st.wb.subtensor(l);
+            dh = dh.zip_with(&gpre.matmul(&w.transposed())?, |u, v| u + v)?;
+        }
+        dwb_parts.reverse();
+        let dwb = Tensor::stack(&dwb_parts)?;
+        k::adam_update(&mut st.wb, &dwb, &mut st.mwb, &mut st.vwb, t, lr);
+        k::adam_update(&mut st.wh, &dwh, &mut st.mwh, &mut st.vwh, t, lr);
+        Ok(loss as f64)
+    }
+
+    fn model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        wb: &Tensor,
+        wh: &Tensor,
+    ) -> Result<Tensor> {
+        let mut h = x.clone();
+        for l in 0..wb.shape()[0] {
+            h = k::teacher_block(&h, &wb.subtensor(l))?;
+        }
+        h.mean_pool_rows(spec.tokens)?.matmul(wh)
+    }
+
+    fn student_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        head: &ArrayIo,
+    ) -> Result<Tensor> {
+        let mut h = x.clone();
+        for l in 0..blocks.gp.shape()[0] {
+            h = k::student_block(
+                &h,
+                &blocks.gp.subtensor(l),
+                &blocks.gn.subtensor(l),
+                blocks.inv_w_scale.data()[l],
+                blocks.adc_fs.data()[l],
+                k::ADC_BITS,
+            )?;
+        }
+        let pooled = h.mean_pool_rows(spec.tokens)?;
+        k::crossbar_mvm(&pooled, &head.gp, &head.gn, head.inv(), head.fs(), k::ADC_BITS)
+    }
+
+    fn dora_model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        ads: &StackedAdapters,
+        head: &ArrayIo,
+        head_ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let mut h = x.clone();
+        for l in 0..blocks.gp.shape()[0] {
+            let y = k::dora_linear_merged(
+                &h,
+                &blocks.gp.subtensor(l),
+                &blocks.gn.subtensor(l),
+                blocks.inv_w_scale.data()[l],
+                blocks.adc_fs.data()[l],
+                &ads.a.subtensor(l),
+                &ads.b.subtensor(l),
+                &ads.meff.subtensor(l),
+                k::ADC_BITS,
+            )?;
+            h = relu_residual(&y, &h)?;
+        }
+        let pooled = h.mean_pool_rows(spec.tokens)?;
+        k::dora_linear_merged(
+            &pooled,
+            &head.gp,
+            &head.gn,
+            head.inv(),
+            head.fs(),
+            head_ad.a,
+            head_ad.b,
+            head_ad.meff,
+            k::ADC_BITS,
+        )
+    }
+
+    fn lora_model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        ads: &StackedAdapters,
+        head: &ArrayIo,
+        head_ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let mut h = x.clone();
+        for l in 0..blocks.gp.shape()[0] {
+            let y = k::lora_linear(
+                &h,
+                &blocks.gp.subtensor(l),
+                &blocks.gn.subtensor(l),
+                blocks.inv_w_scale.data()[l],
+                blocks.adc_fs.data()[l],
+                &ads.a.subtensor(l),
+                &ads.b.subtensor(l),
+                k::ADC_BITS,
+            )?;
+            h = relu_residual(&y, &h)?;
+        }
+        let pooled = h.mean_pool_rows(spec.tokens)?;
+        k::lora_linear(
+            &pooled,
+            &head.gp,
+            &head.gn,
+            head.inv(),
+            head.fs(),
+            head_ad.a,
+            head_ad.b,
+            k::ADC_BITS,
+        )
+    }
+}

@@ -1,6 +1,6 @@
 //! Tensor <-> xla::Literal conversion.
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use crate::util::tensor::Tensor;
 
@@ -14,18 +14,18 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
         t.shape(),
         bytes,
     )
-    .map_err(|e| anyhow::anyhow!("literal from shape {:?}: {e:?}", t.shape()))
+    .map_err(|e| crate::anyhow::anyhow!("literal from shape {:?}: {e:?}", t.shape()))
 }
 
 /// f32 literal -> host tensor (shape preserved).
 pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit
         .array_shape()
-        .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        .map_err(|e| crate::anyhow::anyhow!("literal shape: {e:?}"))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     let data: Vec<f32> = lit
         .to_vec::<f32>()
-        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+        .map_err(|e| crate::anyhow::anyhow!("literal to_vec: {e:?}"))?;
     if data.len() != dims.iter().product::<usize>() {
         bail!("literal element count mismatch: {:?} vs {}", dims, data.len());
     }

@@ -1,0 +1,555 @@
+//! PJRT runtime (optional, `--features pjrt`): loads the AOT HLO-text
+//! artifacts produced by `python/compile/aot.py` and executes them on the
+//! CPU PJRT client. `PjrtBackend` adapts the artifact store to the
+//! `runtime::Backend` trait; see DESIGN.md §Backends for how the
+//! executables map onto the trait's entry points.
+//!
+//! Design points:
+//! * **HLO text interchange** — `HloModuleProto::from_text_file`; see
+//!   aot.py for why serialized protos are rejected by xla_extension 0.5.1.
+//! * **Lazy compile + cache** — `ArtifactStore::executable` compiles an
+//!   entry point on first use and memoizes it; sweeps reuse the cache.
+//! * **Buffer-resident hot loop** — `Executable::execute_buffers` takes
+//!   device-resident `PjRtBuffer`s so callers that manage their own
+//!   buffers can keep conductance planes on device between dispatches
+//!   (see EXPERIMENTS.md §Perf). The trait-level step methods use the
+//!   host-tensor `execute` path for backend uniformity.
+//! * All outputs come back as a flat `Vec<Tensor>` (the AOT side lowers
+//!   with `return_tuple=True`).
+
+mod convert;
+
+pub use convert::{literal_to_tensor, tensor_to_literal};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::anyhow::{bail, Context, Result};
+
+use super::{
+    AdapterIo, AdapterState, ArrayIo, Backend, BpState, LayerRole,
+    StackedAdapters, StackedArrays, StepIo, StepOutput,
+};
+use crate::model::ModelSpec;
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+/// Cumulative runtime statistics (perf pass instrumentation).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub compile_ns: u128,
+    pub executions: u64,
+    pub execute_ns: u128,
+    pub h2d_transfers: u64,
+    pub d2h_transfers: u64,
+}
+
+/// One compiled entry point.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    stats: Rc<RefCell<RuntimeStats>>,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host tensors; returns all outputs as host tensors.
+    pub fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.h2d_transfers += literals.len() as u64;
+        }
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let out = self.collect_outputs(result)?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_ns += t0.elapsed().as_nanos();
+        Ok(out)
+    }
+
+    /// Upload a host tensor once; reuse across many `execute_buffers`.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let mut s = self.stats.borrow_mut();
+        s.h2d_transfers += 1;
+        drop(s);
+        self.exe
+            .client()
+            .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+            .with_context(|| format!("upload to {}", self.name))
+    }
+
+    /// Execute with device-resident buffers (hot-loop path). Outputs stay
+    /// on device; use `download` on the ones you need.
+    pub fn execute_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let t0 = Instant::now();
+        let mut result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("execute_b {}", self.name))?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_ns += t0.elapsed().as_nanos();
+        drop(s);
+        if result.len() != 1 {
+            bail!("{}: expected 1 replica, got {}", self.name, result.len());
+        }
+        Ok(result.remove(0))
+    }
+
+    /// Download the (tuple) output of `execute_buffers` and decompose it
+    /// into per-element host tensors. `return_tuple=True` executables
+    /// return ONE tuple buffer from `execute_b` on this client.
+    pub fn download_tuple(&self, buf: &xla::PjRtBuffer) -> Result<Vec<Tensor>> {
+        let mut s = self.stats.borrow_mut();
+        s.d2h_transfers += 1;
+        drop(s);
+        let lit = buf.to_literal_sync()?;
+        match lit.clone().to_tuple() {
+            Ok(parts) => parts.iter().map(literal_to_tensor).collect(),
+            Err(_) => Ok(vec![literal_to_tensor(&lit)?]),
+        }
+    }
+
+    /// Download one device buffer to a host tensor.
+    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
+        let mut s = self.stats.borrow_mut();
+        s.d2h_transfers += 1;
+        drop(s);
+        let lit = buf.to_literal_sync()?;
+        literal_to_tensor(&lit)
+    }
+
+    fn collect_outputs(
+        &self,
+        result: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<Tensor>> {
+        if result.len() != 1 {
+            bail!("{}: expected 1 replica, got {}", self.name, result.len());
+        }
+        let bufs = &result[0];
+        let mut out = Vec::new();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.d2h_transfers += bufs.len() as u64;
+        }
+        if bufs.len() == 1 {
+            // single buffer: may be the tuple itself (execute keeps tuples
+            // together on some paths) — decompose if so
+            let lit = bufs[0].to_literal_sync()?;
+            match lit.clone().to_tuple() {
+                Ok(parts) => {
+                    for p in parts {
+                        out.push(literal_to_tensor(&p)?);
+                    }
+                }
+                Err(_) => out.push(literal_to_tensor(&lit)?),
+            }
+        } else {
+            for b in bufs {
+                let lit = b.to_literal_sync()?;
+                out.push(literal_to_tensor(&lit)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Shape metadata for one artifact, parsed from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Loads `manifest.json`, memoizes compiled executables.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Json,
+    infos: BTreeMap<String, ArtifactInfo>,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+    stats: Rc<RefCell<RuntimeStats>>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: &Path) -> Result<ArtifactStore> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text)
+            .map_err(|e| crate::anyhow::anyhow!("manifest.json: {e}"))?;
+        let mut infos = BTreeMap::new();
+        for (model, m) in manifest.req("models").as_obj().unwrap() {
+            for (name, a) in m.req("artifacts").as_obj().unwrap() {
+                let file = dir.join(a.req("file").as_str().unwrap());
+                let input_shapes = a
+                    .req("inputs")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|d| d.as_usize().unwrap())
+                            .collect()
+                    })
+                    .collect();
+                infos.insert(name.clone(), ArtifactInfo { file, input_shapes });
+                let _ = model;
+            }
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| crate::anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(ArtifactStore {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            infos,
+            cache: RefCell::new(BTreeMap::new()),
+            stats: Rc::new(RefCell::new(RuntimeStats::default())),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.infos.keys()
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.infos.get(name)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile-on-first-use accessor.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .infos
+            .get(name)
+            .with_context(|| format!("unknown artifact `{name}`"))?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .map_err(|e| crate::anyhow::anyhow!("load {}: {e:?}", info.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| crate::anyhow::anyhow!("compile {name}: {e:?}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_ns += t0.elapsed().as_nanos();
+        }
+        let exec = Rc::new(Executable {
+            name: name.to_string(),
+            exe,
+            stats: self.stats.clone(),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Manifest constants block accessor.
+    pub fn constant_f64(&self, key: &str) -> f64 {
+        self.manifest
+            .req("constants")
+            .req(key)
+            .as_f64()
+            .unwrap_or_else(|| panic!("constant {key}"))
+    }
+}
+
+/// `runtime::Backend` over the AOT artifact store: each trait method
+/// dispatches the matching executable with host tensors.
+pub struct PjrtBackend {
+    store: ArtifactStore,
+}
+
+impl PjrtBackend {
+    pub fn open(dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { store: ArtifactStore::open(dir)? })
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    fn run1(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        let mut out = self.store.executable(name)?.execute(inputs)?;
+        if out.is_empty() {
+            bail!("{name}: no outputs");
+        }
+        Ok(out.remove(0))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn teacher_block(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        w: &Tensor,
+    ) -> Result<Tensor> {
+        self.run1(&spec.art("teacher_block"), &[x, w])
+    }
+
+    fn teacher_head(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        w: &Tensor,
+    ) -> Result<Tensor> {
+        self.run1(&spec.art("teacher_head"), &[x, w])
+    }
+
+    fn student_block(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+    ) -> Result<Tensor> {
+        self.run1(
+            &spec.art("student_block"),
+            &[x, &arr.gp, &arr.gn, &arr.inv_w_scale, &arr.adc_fs],
+        )
+    }
+
+    fn student_head(
+        &self,
+        _spec: &ModelSpec,
+        _x: &Tensor,
+        _arr: &ArrayIo,
+    ) -> Result<Tensor> {
+        bail!(
+            "student_head is not lowered as a standalone artifact; use \
+             student_fwd (stacked) or the native backend"
+        )
+    }
+
+    fn dora_block(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+        ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let name = spec.art_r("dora_block", ad.a.shape()[1]);
+        self.run1(
+            &name,
+            &[x, &arr.gp, &arr.gn, &arr.inv_w_scale, &arr.adc_fs, ad.a, ad.b,
+              ad.meff],
+        )
+    }
+
+    fn lora_block(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        arr: &ArrayIo,
+        ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let name = spec.art_r("lora_block", ad.a.shape()[1]);
+        self.run1(
+            &name,
+            &[x, &arr.gp, &arr.gn, &arr.inv_w_scale, &arr.adc_fs, ad.a, ad.b],
+        )
+    }
+
+    fn dora_step(
+        &self,
+        spec: &ModelSpec,
+        role: LayerRole,
+        io: StepIo<'_>,
+        arr: &ArrayIo,
+        st: &mut AdapterState,
+        t: f64,
+        lr: f64,
+    ) -> Result<StepOutput> {
+        let family = match role {
+            LayerRole::Block => "dora_step_block",
+            LayerRole::Head => "dora_step_head",
+        };
+        let name = spec.art_r(family, st.a.shape()[1]);
+        let t_s = Tensor::scalar1(t as f32);
+        let lr_s = Tensor::scalar1(lr as f32);
+        let mut out = self.store.executable(&name)?.execute(&[
+            io.x, io.mask, io.target, &arr.gp, &arr.gn, &arr.inv_w_scale,
+            &arr.adc_fs, &st.a, &st.b, &st.m, &st.ma, &st.va, &st.mb, &st.vb,
+            &st.mm, &st.vm, &t_s, &lr_s,
+        ])?;
+        if out.len() != 11 {
+            bail!("{name}: expected 11 outputs, got {}", out.len());
+        }
+        let n = out.pop().expect("len checked");
+        let loss = out.pop().expect("len checked").data()[0] as f64;
+        st.vm = out.pop().expect("len checked");
+        st.mm = out.pop().expect("len checked");
+        st.vb = out.pop().expect("len checked");
+        st.mb = out.pop().expect("len checked");
+        st.va = out.pop().expect("len checked");
+        st.ma = out.pop().expect("len checked");
+        st.m = out.pop().expect("len checked");
+        st.b = out.pop().expect("len checked");
+        st.a = out.pop().expect("len checked");
+        Ok(StepOutput { loss, colnorm: Some(n) })
+    }
+
+    fn lora_step(
+        &self,
+        spec: &ModelSpec,
+        role: LayerRole,
+        io: StepIo<'_>,
+        arr: &ArrayIo,
+        st: &mut AdapterState,
+        t: f64,
+        lr: f64,
+    ) -> Result<StepOutput> {
+        let family = match role {
+            LayerRole::Block => "lora_step_block",
+            LayerRole::Head => "lora_step_head",
+        };
+        let name = spec.art_r(family, st.a.shape()[1]);
+        let t_s = Tensor::scalar1(t as f32);
+        let lr_s = Tensor::scalar1(lr as f32);
+        let mut out = self.store.executable(&name)?.execute(&[
+            io.x, io.mask, io.target, &arr.gp, &arr.gn, &arr.inv_w_scale,
+            &arr.adc_fs, &st.a, &st.b, &st.ma, &st.va, &st.mb, &st.vb, &t_s,
+            &lr_s,
+        ])?;
+        if out.len() != 7 {
+            bail!("{name}: expected 7 outputs, got {}", out.len());
+        }
+        let loss = out.pop().expect("len checked").data()[0] as f64;
+        st.vb = out.pop().expect("len checked");
+        st.mb = out.pop().expect("len checked");
+        st.va = out.pop().expect("len checked");
+        st.ma = out.pop().expect("len checked");
+        st.b = out.pop().expect("len checked");
+        st.a = out.pop().expect("len checked");
+        Ok(StepOutput { loss, colnorm: None })
+    }
+
+    fn bp_step(
+        &self,
+        spec: &ModelSpec,
+        io: StepIo<'_>,
+        st: &mut BpState,
+        t: f64,
+        lr: f64,
+    ) -> Result<f64> {
+        let t_s = Tensor::scalar1(t as f32);
+        let lr_s = Tensor::scalar1(lr as f32);
+        let mut out = self.store.executable(&spec.art("bp_step"))?.execute(&[
+            io.x, io.mask, io.target, &st.wb, &st.wh, &st.mwb, &st.vwb,
+            &st.mwh, &st.vwh, &t_s, &lr_s,
+        ])?;
+        if out.len() != 7 {
+            bail!("bp_step: expected 7 outputs, got {}", out.len());
+        }
+        let loss = out.pop().expect("len checked").data()[0] as f64;
+        st.vwh = out.pop().expect("len checked");
+        st.mwh = out.pop().expect("len checked");
+        st.vwb = out.pop().expect("len checked");
+        st.mwb = out.pop().expect("len checked");
+        st.wh = out.pop().expect("len checked");
+        st.wb = out.pop().expect("len checked");
+        Ok(loss)
+    }
+
+    fn model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        wb: &Tensor,
+        wh: &Tensor,
+    ) -> Result<Tensor> {
+        self.run1(&spec.art("model_fwd"), &[x, wb, wh])
+    }
+
+    fn student_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        head: &ArrayIo,
+    ) -> Result<Tensor> {
+        self.run1(
+            &spec.art("student_fwd"),
+            &[x, &blocks.gp, &blocks.gn, &blocks.inv_w_scale, &blocks.adc_fs,
+              &head.gp, &head.gn, &head.inv_w_scale, &head.adc_fs],
+        )
+    }
+
+    fn dora_model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        ads: &StackedAdapters,
+        head: &ArrayIo,
+        head_ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let name = spec.art_r("dora_model_fwd", ads.a.shape()[2]);
+        self.run1(
+            &name,
+            &[x, &blocks.gp, &blocks.gn, &blocks.inv_w_scale, &blocks.adc_fs,
+              &ads.a, &ads.b, &ads.meff, &head.gp, &head.gn,
+              &head.inv_w_scale, &head.adc_fs, head_ad.a, head_ad.b,
+              head_ad.meff],
+        )
+    }
+
+    fn lora_model_fwd(
+        &self,
+        spec: &ModelSpec,
+        x: &Tensor,
+        blocks: &StackedArrays,
+        ads: &StackedAdapters,
+        head: &ArrayIo,
+        head_ad: AdapterIo<'_>,
+    ) -> Result<Tensor> {
+        let name = spec.art_r("lora_model_fwd", ads.a.shape()[2]);
+        self.run1(
+            &name,
+            &[x, &blocks.gp, &blocks.gn, &blocks.inv_w_scale, &blocks.adc_fs,
+              &ads.a, &ads.b, &head.gp, &head.gn, &head.inv_w_scale,
+              &head.adc_fs, head_ad.a, head_ad.b],
+        )
+    }
+}

@@ -9,7 +9,7 @@
 use crate::device::constants;
 use crate::util::tensor::Tensor;
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 /// A named SRAM-resident f32 buffer with write accounting.
 #[derive(Debug, Clone)]

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {

@@ -1,8 +1,13 @@
 //! Host-side tensor: a flat f32 buffer + shape. This is the lingua franca
-//! between the substrates (crossbars, adapters, datasets) and the PJRT
-//! runtime (which converts to/from `xla::Literal`).
+//! between the substrates (crossbars, adapters, datasets) and every
+//! `runtime::Backend` — the native backend computes on it directly, the
+//! optional PJRT backend converts to/from `xla::Literal`.
+//!
+//! Besides storage, this module carries the dense linear-algebra
+//! primitives the native kernels are built from (`matmul`, `transposed`,
+//! `map`/`zip_with`, column broadcast, token-mean pooling).
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -132,6 +137,132 @@ impl Tensor {
             / n as f32)
     }
 
+    /// Row-major matrix product: `[m, k] x [k, n] -> [m, n]`.
+    ///
+    /// i-k-j loop order so the inner loop streams both the output row and
+    /// the rhs row contiguously (the whole native backend hot path sits
+    /// on this function).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!(
+                "matmul wants 2-D operands, got {:?} x {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        if k != k2 {
+            bail!("matmul inner dim mismatch: {:?} x {:?}", self.shape, other.shape);
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// 2-D transpose.
+    pub fn transposed(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2, "transpose wants 2-D");
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// Elementwise map.
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Elementwise combine with an equal-shape tensor.
+    pub fn zip_with<F: Fn(f32, f32) -> f32>(
+        &self,
+        other: &Tensor,
+        f: F,
+    ) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("zip shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    /// Broadcast-multiply each row of a `[m, k]` tensor by a `[k]` vector
+    /// (the DoRA magnitude rescale `Y = S o M_eff`).
+    pub fn scale_cols(&self, v: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || v.shape.len() != 1 || self.shape[1] != v.len()
+        {
+            bail!(
+                "scale_cols shape mismatch: {:?} o {:?}",
+                self.shape,
+                v.shape
+            );
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(m * k);
+        for i in 0..m {
+            for j in 0..k {
+                out.push(self.data[i * k + j] * v.data[j]);
+            }
+        }
+        Tensor::new(vec![m, k], out)
+    }
+
+    /// Mean over the token axis: `[batch * tokens, d] -> [batch, d]`
+    /// (model.py `pool`).
+    pub fn mean_pool_rows(&self, tokens: usize) -> Result<Tensor> {
+        if self.shape.len() != 2 || tokens == 0 || self.shape[0] % tokens != 0 {
+            bail!(
+                "mean_pool_rows: shape {:?} not divisible into {tokens}-token \
+                 samples",
+                self.shape
+            );
+        }
+        let (rows, d) = (self.shape[0], self.shape[1]);
+        let batch = rows / tokens;
+        let mut out = vec![0.0f32; batch * d];
+        for b in 0..batch {
+            let dst = &mut out[b * d..(b + 1) * d];
+            for t in 0..tokens {
+                let src = &self.data[(b * tokens + t) * d..(b * tokens + t + 1) * d];
+                for (o, &s) in dst.iter_mut().zip(src) {
+                    *o += s;
+                }
+            }
+            let inv = 1.0 / tokens as f32;
+            for o in dst.iter_mut() {
+                *o *= inv;
+            }
+        }
+        Tensor::new(vec![batch, d], out)
+    }
+
     /// argmax over the last axis for a 2-D tensor -> one index per row.
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.shape.len(), 2);
@@ -199,6 +330,55 @@ mod tests {
         assert!((a.mse(&b).unwrap() - 4.0 / 3.0).abs() < 1e-6);
         assert_eq!(a.max_abs(), 3.0);
         assert!((a.mean() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .unwrap();
+        let b = Tensor::new(vec![3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0])
+            .unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+        assert!(a.matmul(&a).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let a = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect())
+            .unwrap();
+        let t = a.transposed();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data(), &[0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(t.transposed(), a);
+    }
+
+    #[test]
+    fn map_zip_and_scale_cols() {
+        let a = Tensor::from_vec(vec![1.0, -2.0, 3.0]);
+        assert_eq!(a.map(|v| v.max(0.0)).data(), &[1.0, 0.0, 3.0]);
+        let b = Tensor::from_vec(vec![10.0, 20.0, 30.0]);
+        assert_eq!(a.zip_with(&b, |x, y| x + y).unwrap().data(),
+                   &[11.0, 18.0, 33.0]);
+        let m = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let v = Tensor::from_vec(vec![10.0, 100.0]);
+        assert_eq!(m.scale_cols(&v).unwrap().data(),
+                   &[10.0, 200.0, 30.0, 400.0]);
+    }
+
+    #[test]
+    fn mean_pool_rows_averages_tokens() {
+        // 2 samples x 2 tokens x 2 features
+        let x = Tensor::new(
+            vec![4, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0],
+        )
+        .unwrap();
+        let p = x.mean_pool_rows(2).unwrap();
+        assert_eq!(p.shape(), &[2, 2]);
+        assert_eq!(p.data(), &[2.0, 3.0, 20.0, 30.0]);
+        assert!(x.mean_pool_rows(3).is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use super::tensor::Tensor;
 

@@ -1,7 +1,10 @@
 //! Experiment-shape tests: the pass criteria from DESIGN.md §5. We do
 //! not check the paper's absolute numbers (our substrate is a simulator
 //! and the models are scaled), but every *relation* the paper's figures
-//! claim must hold on our reproduction.
+//! claim must hold on our reproduction. Compiled only with `--features
+//! pjrt` (needs `make artifacts`); native relation tests live in
+//! native_backend.rs.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

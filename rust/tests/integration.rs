@@ -1,11 +1,13 @@
 //! Integration tests over the full stack: artifacts -> PJRT runtime ->
-//! substrates -> calibration engine. Requires `make artifacts` to have
-//! run (the repo ships with the stamp; CI runs it first).
+//! substrates -> calibration engine. Compiled only with `--features
+//! pjrt` and requires `make artifacts` to have run; the hermetic
+//! counterpart lives in native_backend.rs.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
 use rimc_dora::calib::{BackpropConfig, CalibConfig, InputMode};
-use rimc_dora::coordinator::{Engine, Evaluator};
+use rimc_dora::coordinator::Engine;
 use rimc_dora::dataset::Dataset;
 use rimc_dora::model::{AdapterKind, AdapterSet};
 use rimc_dora::util::tensor::Tensor;
@@ -51,7 +53,7 @@ fn manifest_lists_both_models_and_all_artifact_families() {
         "lora_model_fwd_m20_r2",
         "dora_model_fwd_m50_r4",
     ] {
-        assert!(eng.store.info(family).is_some(), "missing {family}");
+        assert!(eng.store().unwrap().info(family).is_some(), "missing {family}");
     }
 }
 
@@ -60,7 +62,7 @@ fn teacher_block_matches_host_math() {
     // relu(X W) + X computed by the artifact == host-side reference
     let eng = engine();
     let session = eng.session("m20").unwrap();
-    let exe = eng.store.executable("teacher_block_m20").unwrap();
+    let exe = eng.store().unwrap().executable("teacher_block_m20").unwrap();
     let rows = session.spec.step_rows();
     let d = session.spec.width;
     let x = Tensor::new(
@@ -86,17 +88,18 @@ fn teacher_block_matches_host_math() {
 #[test]
 fn executable_cache_compiles_once() {
     let eng = engine();
-    let a = eng.store.executable("teacher_block_m20").unwrap();
-    let before = eng.store.stats().compiles;
-    let b = eng.store.executable("teacher_block_m20").unwrap();
-    assert_eq!(eng.store.stats().compiles, before);
+    let store = eng.store().unwrap();
+    let a = store.executable("teacher_block_m20").unwrap();
+    let before = store.stats().compiles;
+    let b = store.executable("teacher_block_m20").unwrap();
+    assert_eq!(store.stats().compiles, before);
     assert_eq!(a.name(), b.name());
 }
 
 #[test]
 fn unknown_artifact_is_an_error() {
     let eng = engine();
-    assert!(eng.store.executable("nope").is_err());
+    assert!(eng.store().unwrap().executable("nope").is_err());
 }
 
 // ---------------------------------------------------------------------
@@ -128,7 +131,8 @@ fn fresh_dora_adapter_is_identity() {
     let fs = Tensor::scalar1(student.adc_fs.data()[0]);
 
     let plain = eng
-        .store
+        .store()
+        .unwrap()
         .executable("student_block_m20")
         .unwrap()
         .execute(&[&x, &gp, &gn, &inv, &fs])
@@ -139,7 +143,8 @@ fn fresh_dora_adapter_is_identity() {
     let la = &adapters.layers[0];
     let meff = Tensor::from_vec(vec![1.0f32; d]);
     let dora = eng
-        .store
+        .store()
+        .unwrap()
         .executable("dora_block_m20_r2")
         .unwrap()
         .execute(&[&x, &gp, &gn, &inv, &fs, la.a.tensor(), la.b.tensor(),
@@ -158,7 +163,7 @@ fn fresh_dora_adapter_is_identity() {
 fn calibration_restores_accuracy_without_rram_writes() {
     let eng = engine();
     let session = eng.session("m20").unwrap();
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let mut student = session.drifted_student(0.2, 3).unwrap();
     let pre = ev.student(&mut student, &session.dataset).unwrap();
 
@@ -198,7 +203,7 @@ fn calibration_restores_accuracy_without_rram_writes() {
 fn lora_calibration_runs_but_underperforms_dora() {
     let eng = engine();
     let session = eng.session("m20").unwrap();
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let (x, y) = session.dataset.calib_subset(10).unwrap();
 
     let mut acc = [0.0f64; 2];
@@ -230,7 +235,7 @@ fn lora_calibration_runs_but_underperforms_dora() {
 fn backprop_baseline_wears_rram() {
     let eng = engine();
     let session = eng.session("m20").unwrap();
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let mut student = session.drifted_student(0.2, 3).unwrap();
     let (x, y) = session.dataset.calib_subset(32).unwrap();
     let writes_before = student.total_counters().write_attempts;
@@ -252,7 +257,7 @@ fn backprop_baseline_wears_rram() {
 fn teacher_eval_matches_buildtime_accuracy() {
     let eng = engine();
     let session = eng.session("m20").unwrap();
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let acc = ev.teacher(&session.teacher, &session.dataset).unwrap();
     // build-time accuracy was computed on the same split with the same
     // batching; the PJRT path must agree closely
@@ -267,7 +272,7 @@ fn teacher_eval_matches_buildtime_accuracy() {
 fn input_mode_ablation_both_restore() {
     let eng = engine();
     let session = eng.session("m20").unwrap();
-    let ev = Evaluator::new(session.store, &session.spec);
+    let ev = session.evaluator();
     let (x, y) = session.dataset.calib_subset(10).unwrap();
     let mut accs = Vec::new();
     for mode in [InputMode::Sequential, InputMode::TeacherInput] {

@@ -1,0 +1,380 @@
+//! Native-backend correctness: golden-value kernel tests against the JAX
+//! oracle (`python/compile/kernels/ref.py`, fixtures computed offline
+//! with the exact float32 math) plus the hermetic end-to-end calibration
+//! smoke test — program, drift, calibrate, recover, and prove zero
+//! in-field RRAM writes from counters. Runs on a clean checkout with no
+//! Python, no XLA and no artifacts directory.
+
+use rimc_dora::calib::{BackpropConfig, CalibConfig, InputMode};
+use rimc_dora::coordinator::Engine;
+use rimc_dora::model::{AdapterKind, AdapterSet};
+use rimc_dora::runtime::{kernels, AdapterIo, Backend, NativeBackend};
+use rimc_dora::util::tensor::Tensor;
+
+const ATOL: f32 = 1e-4;
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= ATOL,
+            "{what}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// golden kernel fixtures (values from ref.py run under JAX float32)
+// ---------------------------------------------------------------------
+
+/// The shared DoRA fixture: d=4, k=3, r=2, batch=2, one-sided
+/// differential coding at G_MAX=100 with w_max = 0.6.
+struct Fixture {
+    x: Tensor,
+    gp: Tensor,
+    gn: Tensor,
+    inv: f32,
+    fs: f32,
+    a: Tensor,
+    b: Tensor,
+    m: Tensor,
+}
+
+fn fixture() -> Fixture {
+    let wr = [
+        [0.2f32, -0.4, 0.1],
+        [0.3, 0.2, -0.5],
+        [-0.1, 0.6, 0.4],
+        [0.0, -0.2, 0.3],
+    ];
+    let w_scale = 100.0f64 / 0.6;
+    let mut gp = Vec::new();
+    let mut gn = Vec::new();
+    for row in &wr {
+        for &w in row {
+            gp.push((f64::from(w.max(0.0)) * w_scale) as f32);
+            gn.push((f64::from((-w).max(0.0)) * w_scale) as f32);
+        }
+    }
+    Fixture {
+        x: Tensor::new(
+            vec![2, 4],
+            vec![0.5, -1.0, 2.0, 0.25, 1.5, 0.5, -0.5, -2.0],
+        )
+        .unwrap(),
+        gp: Tensor::new(vec![4, 3], gp).unwrap(),
+        gn: Tensor::new(vec![4, 3], gn).unwrap(),
+        inv: (1.0 / w_scale) as f32,
+        fs: 2.5,
+        a: Tensor::new(
+            vec![4, 2],
+            vec![0.1, -0.2, 0.0, 0.3, 0.2, 0.1, -0.3, 0.0],
+        )
+        .unwrap(),
+        b: Tensor::new(vec![2, 3], vec![0.4, -0.1, 0.2, 0.1, 0.3, -0.2])
+            .unwrap(),
+        m: Tensor::from_vec(vec![0.9, 1.2, 0.7]),
+    }
+}
+
+#[test]
+fn golden_adc_quantize_including_ties_and_clipping() {
+    // fs=2, bits=3: half=4, lsb=0.5. Includes half-LSB ties (round to
+    // even), both clip ends, and zero. Golden from ref.adc_quantize.
+    let y = Tensor::from_vec(vec![
+        -3.0, -2.1, -1.75, -0.75, -0.25, 0.0, 0.25, 0.6, 0.75, 1.3, 1.9, 10.0,
+    ]);
+    let want = [
+        -2.0, -2.0, -2.0, -1.0, 0.0, 0.0, 0.0, 0.5, 1.0, 1.5, 1.5, 1.5,
+    ];
+    let q = kernels::adc_quantize(&y, 2.0, 3);
+    assert_close(q.data(), &want, "adc_quantize");
+}
+
+#[test]
+fn golden_dora_colnorm_with_norm_eps() {
+    let f = fixture();
+    let wr = kernels::weights_from_conductance(&f.gp, &f.gn, f.inv).unwrap();
+    let w_eff = wr.zip_with(&f.a.matmul(&f.b).unwrap(), |u, v| u + v).unwrap();
+    let n = kernels::dora_colnorm(&w_eff).unwrap();
+    // golden from ref.dora_colnorm
+    assert_close(
+        n.data(),
+        &[4.144876599e-1, 8.402380943e-1, 7.570997477e-1],
+        "dora_colnorm",
+    );
+    // zero matrix: the column norm is sqrt(NORM_EPS), not 0
+    let z = kernels::dora_colnorm(&Tensor::zeros(vec![4, 3])).unwrap();
+    for v in z.data() {
+        assert!((v - kernels::NORM_EPS.sqrt()).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn golden_dora_forward_unmerged_and_merged() {
+    let f = fixture();
+    let fwd = kernels::dora_linear(&f.x, &f.gp, &f.gn, f.inv, f.fs, &f.a,
+                                   &f.b, &f.m, 8)
+        .unwrap();
+    // golden from ref.dora_linear
+    let want_y = [
+        -5.659094453e-1,
+        9.207212329e-1,
+        1.424577117e0,
+        1.623766661e0,
+        -7.363984585e-1,
+        -6.734994650e-1,
+    ];
+    assert_close(fwd.y.data(), &want_y, "dora_linear y");
+
+    // merged-vs-unmerged equivalence: M_eff = M / n
+    let meff = f.m.zip_with(&fwd.n, |m, n| m / n).unwrap();
+    let ym = kernels::dora_linear_merged(&f.x, &f.gp, &f.gn, f.inv, f.fs,
+                                         &f.a, &f.b, &meff, 8)
+        .unwrap();
+    assert_close(ym.data(), &want_y, "dora_linear_merged");
+}
+
+#[test]
+fn golden_lora_forward() {
+    let f = fixture();
+    let y = kernels::lora_linear(&f.x, &f.gp, &f.gn, f.inv, f.fs, &f.a, &f.b,
+                                 8)
+        .unwrap();
+    // golden from ref.lora_linear
+    let want = [
+        -2.606250048e-1,
+        6.446874738e-1,
+        1.540781260e0,
+        7.478125095e-1,
+        -5.156250000e-1,
+        -7.284374833e-1,
+    ];
+    assert_close(y.data(), &want, "lora_linear");
+}
+
+#[test]
+fn golden_masked_cross_entropy() {
+    let logits = Tensor::new(
+        vec![4, 3],
+        vec![2.0, 0.5, -1.0, 0.1, 0.2, 0.3, 5.0, 5.0, 5.0, 1.0, 1.0, 1.0],
+    )
+    .unwrap();
+    let mut y = vec![0.0f32; 12];
+    for (row, cls) in [0usize, 2, 1, 0].iter().enumerate() {
+        y[row * 3 + cls] = 1.0;
+    }
+    let y = Tensor::new(vec![4, 3], y).unwrap();
+    let mask = Tensor::from_vec(vec![1.0, 1.0, 1.0, 0.0]);
+    let l = kernels::masked_cross_entropy(&logits, &y, &mask).unwrap();
+    // golden from ref.masked_cross_entropy
+    assert!((l - 0.780_622_2).abs() < 1e-5, "{l}");
+}
+
+// ---------------------------------------------------------------------
+// adapter identity at init (the Algorithm-2 line-2 property)
+// ---------------------------------------------------------------------
+
+#[test]
+fn fresh_dora_adapter_is_identity() {
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let mut student = session.drifted_student(0.25, 11).unwrap();
+    let wr: Vec<Tensor> =
+        student.blocks.iter_mut().map(|b| b.read_weights()).collect();
+    let wr_head = student.head.read_weights();
+    let adapters =
+        AdapterSet::init(AdapterKind::Dora, 2, &wr, &wr_head, 5).unwrap();
+
+    let rows = session.spec.step_rows();
+    let d = session.spec.width;
+    let x = Tensor::new(
+        vec![rows, d],
+        (0..rows * d)
+            .map(|i| ((i * 31 % 101) as f32 - 50.0) * 0.02)
+            .collect(),
+    )
+    .unwrap();
+    let arr = student.block_io(0);
+    let backend = NativeBackend::new();
+    let plain = backend
+        .student_block(&session.spec, &x, &arr)
+        .unwrap();
+    // B=0, M=||W_r||_c  =>  M_eff = M / n = 1 exactly
+    let la = &adapters.layers[0];
+    let meff = Tensor::from_vec(vec![1.0f32; d]);
+    let dora = backend
+        .dora_block(
+            &session.spec,
+            &x,
+            &arr,
+            AdapterIo { a: la.a.tensor(), b: la.b.tensor(), meff: &meff },
+        )
+        .unwrap();
+    let mse = plain.mse(&dora).unwrap();
+    assert!(mse < 1e-6, "identity violated: mse {mse}");
+}
+
+// ---------------------------------------------------------------------
+// end-to-end: program -> drift -> calibrate -> recover, zero RRAM writes
+// ---------------------------------------------------------------------
+
+fn quick_cfg() -> CalibConfig {
+    CalibConfig {
+        kind: AdapterKind::Dora,
+        rank: 2,
+        lr: 1e-2,
+        max_steps_per_layer: 100,
+        loss_threshold: 1e-4,
+        input_mode: InputMode::Sequential,
+        seed: 7,
+    }
+}
+
+#[test]
+fn calibration_restores_accuracy_without_rram_writes() {
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    assert!(
+        session.spec.teacher_acc > 0.7,
+        "teacher undertrained: {}",
+        session.spec.teacher_acc
+    );
+    let ev = session.evaluator();
+    let mut student = session.drifted_student(0.25, 3).unwrap();
+    let pre = ev.student(&mut student, &session.dataset).unwrap();
+    assert!(
+        pre < session.spec.teacher_acc,
+        "drift did not hurt: pre {pre} vs teacher {}",
+        session.spec.teacher_acc
+    );
+
+    // per-array post-programming write counters — the paper's core claim
+    // is that calibration never adds to ANY of these
+    let block_writes: Vec<u64> = student
+        .blocks
+        .iter()
+        .map(|b| b.counters.write_attempts)
+        .collect();
+    let head_writes = student.head.counters.write_attempts;
+
+    let (x, y) = session.dataset.calib_subset(10).unwrap();
+    let calibrator = session.feature_calibrator(quick_cfg()).unwrap();
+    let outcome = calibrator
+        .calibrate(&mut student, &session.teacher, &x, &y)
+        .unwrap();
+    let post = ev
+        .calibrated(&mut student, &outcome.adapters, &session.dataset)
+        .unwrap();
+
+    // headline claims, in order:
+    assert!(post > pre + 0.05, "restoration too weak: {pre} -> {post}");
+    for (l, b) in student.blocks.iter().enumerate() {
+        assert_eq!(
+            b.counters.write_attempts, block_writes[l],
+            "calibration wrote RRAM on block {l}!"
+        );
+    }
+    assert_eq!(
+        student.head.counters.write_attempts, head_writes,
+        "calibration wrote RRAM on the head!"
+    );
+    assert_eq!(outcome.cost.rram_writes, 0);
+    assert!(outcome.cost.sram_writes > 0);
+    assert!(outcome.cost.trainable_fraction < 0.5);
+    // layer losses must improve
+    for t in &outcome.traces {
+        assert!(
+            t.last_loss <= t.first_loss,
+            "{}: {} -> {}",
+            t.layer,
+            t.first_loss,
+            t.last_loss
+        );
+    }
+}
+
+#[test]
+fn drift_degrades_accuracy_monotonically() {
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let ev = session.evaluator();
+    let mean_acc = |rel: f64| -> f64 {
+        let mut acc = 0.0;
+        for seed in [3u64, 4, 5] {
+            let mut s = session.drifted_student(rel, seed).unwrap();
+            acc += ev.student(&mut s, &session.dataset).unwrap();
+        }
+        acc / 3.0
+    };
+    let low = mean_acc(0.05);
+    let high = mean_acc(0.30);
+    assert!(
+        low > high + 0.02,
+        "30% drift should hurt much more than 5%: {low} vs {high}"
+    );
+    assert!(
+        session.spec.teacher_acc >= low - 0.02,
+        "teacher {} should bound low-drift accuracy {low}",
+        session.spec.teacher_acc
+    );
+}
+
+#[test]
+fn backprop_baseline_wears_rram() {
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let mut student = session.drifted_student(0.25, 3).unwrap();
+    // 16 samples = one step_batch, so the loss trajectory is a single
+    // comparable series; 10 epochs gives a clear first -> last decrease
+    let (x, y) = session.dataset.calib_subset(16).unwrap();
+    let writes_before = student.total_counters().write_attempts;
+    let bp = session.backprop_calibrator(BackpropConfig {
+        epochs: 10,
+        ..Default::default()
+    });
+    let out = bp.calibrate(&mut student, &session.teacher, &x, &y).unwrap();
+    assert!(out.cost.rram_writes > 0);
+    assert!(
+        student.total_counters().write_attempts > writes_before,
+        "deployment reprogram must hit the arrays"
+    );
+    assert!(out.losses.last().unwrap() < out.losses.first().unwrap());
+}
+
+#[test]
+fn lora_calibration_runs_without_rram_writes() {
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let ev = session.evaluator();
+    let mut student = session.drifted_student(0.25, 3).unwrap();
+    let writes_before = student.total_counters().write_attempts;
+    let (x, y) = session.dataset.calib_subset(10).unwrap();
+    let cfg = CalibConfig {
+        kind: AdapterKind::Lora,
+        rank: 2,
+        max_steps_per_layer: 40,
+        ..quick_cfg()
+    };
+    let calibrator = session.feature_calibrator(cfg).unwrap();
+    let outcome = calibrator
+        .calibrate(&mut student, &session.teacher, &x, &y)
+        .unwrap();
+    let acc = ev
+        .calibrated(&mut student, &outcome.adapters, &session.dataset)
+        .unwrap();
+    assert!(acc > 0.2, "lora-calibrated accuracy collapsed: {acc}");
+    assert_eq!(student.total_counters().write_attempts, writes_before);
+    assert_eq!(outcome.cost.rram_writes, 0);
+    for t in &outcome.traces {
+        assert!(t.last_loss <= t.first_loss, "{}: loss rose", t.layer);
+    }
+}
+
+#[test]
+fn rank_not_available_is_rejected() {
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let cfg = CalibConfig { rank: 3, ..quick_cfg() };
+    assert!(session.feature_calibrator(cfg).is_err());
+}
