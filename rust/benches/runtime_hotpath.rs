@@ -1,10 +1,15 @@
 //! Backend hot-path microbenchmarks: per-dispatch latency of every
 //! kernel class on the request path — single-layer forwards (the
 //! in-field inference path), the DoRA Adam step (the calibration inner
-//! loop), the backprop baseline step, and the stacked full-model eval
-//! forward. Runs on the native backend, hermetically; rebuild with
-//! `--features pjrt` and use the CLI to compare against the artifact
-//! path.
+//! loop), the backprop baseline step, the stacked full-model eval
+//! forward, the tiled-vs-naive matmul kernels, and the parallel batch
+//! eval multiplier (`--threads N` workers vs 1). Runs on the native
+//! backend, hermetically; rebuild with `--features pjrt` and use the
+//! CLI to compare against the artifact path.
+//!
+//! Flags (after `cargo bench --bench runtime_hotpath --`):
+//!   --smoke       1 iteration, no warmup, nano-scale eval (CI gate)
+//!   --threads N   worker count for the parallel-eval section (default 4)
 
 use rimc_dora::calib::CalibConfig;
 use rimc_dora::coordinator::Engine;
@@ -13,9 +18,16 @@ use rimc_dora::runtime::{
     AdapterIo, Backend, BpState, LayerRole, NativeBackend, StepIo,
 };
 use rimc_dora::util::bench::Harness;
+use rimc_dora::util::cli::Args;
 use rimc_dora::util::tensor::Tensor;
+use rimc_dora::util::threads;
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.bool_or("smoke", false).unwrap_or(false);
+    let par_threads = args.usize_or("threads", 4).unwrap_or(4);
+    let (warmup, iters) = if smoke { (0, 1) } else { (5, 30) };
+
     let eng = Engine::native();
     let session = eng.session("nano").unwrap();
     let spec = &session.spec;
@@ -32,7 +44,7 @@ fn main() {
     let w = session.teacher.block_weights(0);
     let arr = student.block_io(0);
 
-    let mut h = Harness::new(5, 30);
+    let mut h = Harness::new(warmup, iters);
 
     // -- per-layer forwards (the in-field inference path)
     h.bench("teacher_block forward", || {
@@ -126,5 +138,52 @@ fn main() {
         backend.student_fwd(spec, &xe, &blocks, &head).unwrap();
     });
 
-    h.print_summary("backend hot paths (native, nano)");
+    // -- matmul kernels (the per-batch multiplier: tiled vs naive,
+    //    fused-transpose vs materialized)
+    let (mm, mk, mn) = if smoke { (64, 64, 64) } else { (256, 256, 256) };
+    let fill = |len: usize, salt: usize| -> Vec<f32> {
+        (0..len)
+            .map(|i| (((i * 31 + salt) % 97) as f32 - 48.0) * 0.01)
+            .collect()
+    };
+    let am = Tensor::new(vec![mm, mk], fill(mm * mk, 1)).unwrap();
+    let bm = Tensor::new(vec![mk, mn], fill(mk * mn, 5)).unwrap();
+    h.bench(&format!("matmul {mm}x{mk}x{mn} (tiled)"), || {
+        am.matmul(&bm).unwrap();
+    });
+    h.bench(&format!("matmul {mm}x{mk}x{mn} (naive)"), || {
+        am.matmul_naive(&bm).unwrap();
+    });
+    h.bench(&format!("t_matmul {mm}x{mk}x{mn} (fused transpose)"), || {
+        am.t_matmul(&bm).unwrap();
+    });
+    h.bench(&format!("transposed().matmul {mm}x{mk}x{mn}"), || {
+        am.transposed().matmul(&bm).unwrap();
+    });
+
+    // -- parallel batch eval (the tentpole multiplier); micro is the
+    //    bench-scale subject, nano keeps the CI smoke run under a second
+    let eval_model = if smoke { "nano" } else { "micro" };
+    let esession = eng.session(eval_model).unwrap();
+    let mut estudent = esession.drifted_student(0.2, 3).unwrap();
+    let ev = esession.evaluator();
+    threads::set_threads(1);
+    let t1 = h.bench(&format!("student eval [{eval_model}] (1 thread)"), || {
+        ev.student(&mut estudent, &esession.dataset).unwrap();
+    });
+    threads::set_threads(par_threads);
+    let tn = h.bench(
+        &format!("student eval [{eval_model}] ({par_threads} threads)"),
+        || {
+            ev.student(&mut estudent, &esession.dataset).unwrap();
+        },
+    );
+    threads::set_threads(0);
+
+    h.print_summary("backend hot paths (native)");
+    println!(
+        "\nparallel eval speedup [{eval_model}]: {:.2}x \
+         ({par_threads} threads vs 1)",
+        t1 / tn
+    );
 }

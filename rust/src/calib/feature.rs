@@ -31,6 +31,7 @@ use crate::runtime::{
     AdapterIo, ArrayIo, Backend, LayerRole, StepIo, StepOutput,
 };
 use crate::util::tensor::Tensor;
+use crate::util::threads::ThreadPool;
 
 pub struct FeatureCalibrator<'a> {
     backend: &'a dyn Backend,
@@ -86,9 +87,10 @@ impl<'a> FeatureCalibrator<'a> {
         let n_batches = batches.len();
 
         // ---- 1. teacher features: tf[b][l] = block-l output on batch b
-        let mut tfeat: Vec<Vec<Tensor>> = Vec::with_capacity(n_batches);
-        let mut tlogits: Vec<Tensor> = Vec::with_capacity(n_batches);
-        for b in &batches {
+        // (independent per batch, so fanned out over the thread pool;
+        // results come back in batch order)
+        let pool = ThreadPool::global();
+        let teacher_out = pool.try_map(&batches, |b| {
             let mut h = b.x_rows.clone();
             let mut per_layer = Vec::with_capacity(spec.n_blocks);
             for l in 0..spec.n_blocks {
@@ -96,8 +98,14 @@ impl<'a> FeatureCalibrator<'a> {
                 h = self.backend.teacher_block(spec, &h, &w)?;
                 per_layer.push(h.clone());
             }
-            tlogits.push(self.backend.teacher_head(spec, &h, &teacher.wh)?);
+            let logits = self.backend.teacher_head(spec, &h, &teacher.wh)?;
+            Ok::<_, crate::anyhow::Error>((per_layer, logits))
+        })?;
+        let mut tfeat: Vec<Vec<Tensor>> = Vec::with_capacity(n_batches);
+        let mut tlogits: Vec<Tensor> = Vec::with_capacity(n_batches);
+        for (per_layer, logits) in teacher_out {
             tfeat.push(per_layer);
+            tlogits.push(logits);
         }
 
         // ---- 2. adapter init from sense-amp readout (one read per array)
@@ -116,6 +124,10 @@ impl<'a> FeatureCalibrator<'a> {
         )?;
 
         // ---- 3. layer loop
+        // chain-advance read wear is charged per real sample (one MVM
+        // readout chain each), matching the evaluator's accounting
+        let n_chain_samples: u64 =
+            batches.iter().map(|b| b.n_real as u64).sum();
         let mut hs: Vec<Tensor> =
             batches.iter().map(|b| b.x_rows.clone()).collect();
         let mut traces = Vec::new();
@@ -137,17 +149,13 @@ impl<'a> FeatureCalibrator<'a> {
                 b: la.b.tensor(),
                 meff: &meff,
             };
-            for h in hs.iter_mut() {
-                *h = match self.cfg.kind {
-                    AdapterKind::Dora => {
-                        self.backend.dora_block(spec, h, &arr, ad)?
-                    }
-                    AdapterKind::Lora => {
-                        self.backend.lora_block(spec, h, &arr, ad)?
-                    }
-                };
-                student.blocks[l].count_read(1);
-            }
+            hs = pool.try_map(&hs, |h| match self.cfg.kind {
+                AdapterKind::Dora => self.backend.dora_block(spec, h, &arr, ad),
+                AdapterKind::Lora => self.backend.lora_block(spec, h, &arr, ad),
+            })?;
+            // charged after the parallel section (workers never touch
+            // the wear counters)
+            student.blocks[l].count_read(n_chain_samples);
         }
 
         // ---- 4. head

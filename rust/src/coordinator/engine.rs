@@ -7,10 +7,15 @@
 //! * `Engine::open(dir)` (`--features pjrt`) — opens the AOT artifact
 //!   store; specs/teachers/datasets come from the manifest + bundle
 //!   written by `make artifacts`.
+//!
+//! Both `Engine` and `Session` are `Send + Sync` (asserted at compile
+//! time in `tests/parallel_eval.rs`): the backend is shared through an
+//! `Arc<dyn Backend>` and the per-preset session cache sits behind a
+//! `Mutex`, so sessions can be opened from — and evaluated on — multiple
+//! threads at once.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 #[cfg(feature = "pjrt")]
 use crate::anyhow::bail;
@@ -31,16 +36,16 @@ enum EngineKind {
         presets: Vec<NativePreset>,
         /// dataset generation + teacher training are deterministic per
         /// preset, so repeat sessions reuse the first result
-        cache: RefCell<BTreeMap<String, (ModelSpec, TeacherModel, Dataset)>>,
+        cache: Mutex<BTreeMap<String, (ModelSpec, TeacherModel, Dataset)>>,
     },
     #[cfg(feature = "pjrt")]
-    Pjrt { backend: Rc<crate::runtime::pjrt::PjrtBackend> },
+    Pjrt { backend: Arc<crate::runtime::pjrt::PjrtBackend> },
 }
 
 /// Process-wide entry point: pick a backend once, then open one
 /// `Session` per model.
 pub struct Engine {
-    backend: Rc<dyn Backend>,
+    backend: Arc<dyn Backend>,
     kind: EngineKind,
 }
 
@@ -53,10 +58,10 @@ impl Engine {
     /// Native engine with a custom preset list (tests / scaling studies).
     pub fn native_with(presets: Vec<NativePreset>) -> Engine {
         Engine {
-            backend: Rc::new(NativeBackend::new()),
+            backend: Arc::new(NativeBackend::new()),
             kind: EngineKind::Native {
                 presets,
-                cache: RefCell::new(BTreeMap::new()),
+                cache: Mutex::new(BTreeMap::new()),
             },
         }
     }
@@ -65,14 +70,14 @@ impl Engine {
     #[cfg(feature = "pjrt")]
     pub fn open(artifact_dir: &std::path::Path) -> Result<Engine> {
         let pjrt =
-            Rc::new(crate::runtime::pjrt::PjrtBackend::open(artifact_dir)?);
+            Arc::new(crate::runtime::pjrt::PjrtBackend::open(artifact_dir)?);
         Ok(Engine {
             backend: pjrt.clone(),
             kind: EngineKind::Pjrt { backend: pjrt },
         })
     }
 
-    pub fn backend(&self) -> &Rc<dyn Backend> {
+    pub fn backend(&self) -> &Arc<dyn Backend> {
         &self.backend
     }
 
@@ -86,6 +91,17 @@ impl Engine {
         match &self.kind {
             EngineKind::Pjrt { backend } => Ok(backend.store()),
             _ => bail!("store() is only available on a PJRT engine"),
+        }
+    }
+
+    /// Preset metadata without opening a session (no dataset synthesis,
+    /// no teacher training). `None` on artifact-backed engines, whose
+    /// inventory lives in the manifest instead.
+    pub fn native_preset_info(&self) -> Option<&[NativePreset]> {
+        match &self.kind {
+            EngineKind::Native { presets, .. } => Some(presets),
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt { .. } => None,
         }
     }
 
@@ -113,7 +129,7 @@ impl Engine {
         match &self.kind {
             EngineKind::Native { presets, cache } => {
                 if let Some((spec, teacher, dataset)) =
-                    cache.borrow().get(model)
+                    cache.lock().expect("engine cache").get(model)
                 {
                     return Ok(Session {
                         backend: self.backend.clone(),
@@ -143,7 +159,10 @@ impl Engine {
                     &preset.train,
                 )?;
                 spec.teacher_acc = acc;
-                cache.borrow_mut().insert(
+                // lock is NOT held across training: two threads racing on
+                // the same preset both train (deterministically to the
+                // same result) and the second insert is a no-op overwrite
+                cache.lock().expect("engine cache").insert(
                     model.to_string(),
                     (spec.clone(), teacher.clone(), data.dataset.clone()),
                 );
@@ -177,9 +196,11 @@ impl Engine {
     }
 }
 
-/// Everything needed to run experiments on one model.
+/// Everything needed to run experiments on one model. `Send + Sync`
+/// (all fields are plain tensors behind an `Arc`'d backend), so whole
+/// sessions can be handed to worker threads.
 pub struct Session {
-    pub backend: Rc<dyn Backend>,
+    pub backend: Arc<dyn Backend>,
     pub spec: ModelSpec,
     pub teacher: TeacherModel,
     pub dataset: Dataset,

@@ -1,12 +1,22 @@
 //! Accuracy evaluator: batched top-1 accuracy on the eval split through
 //! the backend's stacked full-model forwards (one dispatch per batch).
+//!
+//! Batches are independent, so they fan out over the scoped thread pool
+//! (`util::threads`, sized by the CLI `--threads` flag). Results are
+//! reduced in input order and `argmax_rows` is deterministic
+//! (first-max-wins), so parallel and serial eval return identical
+//! accuracy. RRAM read wear is charged per *sample* (each sample is one
+//! MVM readout chain through every array), not per batch, and is
+//! aggregated once after the parallel section — worker threads never
+//! touch the counters.
 
-use crate::anyhow::Result;
+use crate::anyhow::{bail, Result};
 
 use crate::dataset::Dataset;
 use crate::model::{AdapterKind, AdapterSet, ModelSpec, StudentModel, TeacherModel};
 use crate::runtime::{AdapterIo, Backend};
 use crate::util::tensor::Tensor;
+use crate::util::threads::ThreadPool;
 
 pub struct Evaluator<'a> {
     backend: &'a dyn Backend,
@@ -27,18 +37,45 @@ impl<'a> Evaluator<'a> {
             .count()
     }
 
+    /// Run `fwd` on every eval batch in parallel and reduce to
+    /// `(correct, total)`. Errors if there is nothing to evaluate — a
+    /// 0/0 accuracy has no meaning and used to surface as `NaN`.
+    /// Static-batch backends (PJRT) get the tail batch dropped rather
+    /// than a shape their executables were never lowered for.
+    fn batched_accuracy<F>(&self, ds: &Dataset, fwd: F) -> Result<(usize, usize)>
+    where
+        F: Fn(&Tensor) -> Result<Tensor> + Sync,
+    {
+        let batch = self.spec.eval_batch;
+        let mut batches: Vec<(Tensor, &[usize])> =
+            ds.eval_batches(batch).collect();
+        if !self.backend.supports_ragged_eval_batch() {
+            batches.retain(|(_, y)| y.len() == batch);
+        }
+        let total: usize = batches.iter().map(|(_, y)| y.len()).sum();
+        if total == 0 {
+            bail!(
+                "empty eval split: {} has no evaluable samples \
+                 ({} in split, eval_batch {batch})",
+                self.spec.name,
+                ds.n_eval()
+            );
+        }
+        let per_batch = ThreadPool::global().try_map(&batches, |(x, y)| {
+            let rows = Dataset::rows(x)?;
+            let logits = fwd(&rows)?;
+            Ok::<usize, crate::anyhow::Error>(Self::accuracy_from_logits(
+                &logits, y,
+            ))
+        })?;
+        Ok((per_batch.iter().sum(), total))
+    }
+
     /// Teacher (digital) accuracy via `model_fwd`.
     pub fn teacher(&self, teacher: &TeacherModel, ds: &Dataset) -> Result<f64> {
-        let mut correct = 0;
-        let mut total = 0;
-        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
-            let rows = Dataset::rows(&x)?;
-            let logits =
-                self.backend.model_fwd(self.spec, &rows, &teacher.wb,
-                                       &teacher.wh)?;
-            correct += Self::accuracy_from_logits(&logits, y);
-            total += y.len();
-        }
+        let (correct, total) = self.batched_accuracy(ds, |rows| {
+            self.backend.model_fwd(self.spec, rows, &teacher.wb, &teacher.wh)
+        })?;
         Ok(correct as f64 / total as f64)
     }
 
@@ -49,14 +86,9 @@ impl<'a> Evaluator<'a> {
         wh: &Tensor,
         ds: &Dataset,
     ) -> Result<f64> {
-        let mut correct = 0;
-        let mut total = 0;
-        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
-            let rows = Dataset::rows(&x)?;
-            let logits = self.backend.model_fwd(self.spec, &rows, wb, wh)?;
-            correct += Self::accuracy_from_logits(&logits, y);
-            total += y.len();
-        }
+        let (correct, total) = self.batched_accuracy(ds, |rows| {
+            self.backend.model_fwd(self.spec, rows, wb, wh)
+        })?;
         Ok(correct as f64 / total as f64)
     }
 
@@ -68,18 +100,10 @@ impl<'a> Evaluator<'a> {
     ) -> Result<f64> {
         let blocks = student.stacked_arrays()?;
         let head = student.head_io();
-        let mut correct = 0;
-        let mut total = 0;
-        let mut n_batches = 0u64;
-        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
-            let rows = Dataset::rows(&x)?;
-            let logits =
-                self.backend.student_fwd(self.spec, &rows, &blocks, &head)?;
-            correct += Self::accuracy_from_logits(&logits, y);
-            total += y.len();
-            n_batches += 1;
-        }
-        student.count_forward_reads(n_batches);
+        let (correct, total) = self.batched_accuracy(ds, |rows| {
+            self.backend.student_fwd(self.spec, rows, &blocks, &head)
+        })?;
+        student.count_forward_reads(total as u64);
         Ok(correct as f64 / total as f64)
     }
 
@@ -100,24 +124,17 @@ impl<'a> Evaluator<'a> {
             b: adapters.head.b.tensor(),
             meff: &meffh,
         };
-        let mut correct = 0;
-        let mut total = 0;
-        let mut n_batches = 0u64;
-        for (x, y) in ds.eval_batches(self.spec.eval_batch) {
-            let rows = Dataset::rows(&x)?;
-            let logits = match adapters.kind {
+        let (correct, total) = self.batched_accuracy(ds, |rows| {
+            match adapters.kind {
                 AdapterKind::Dora => self.backend.dora_model_fwd(
-                    self.spec, &rows, &blocks, &ads, &head, head_ad,
-                )?,
+                    self.spec, rows, &blocks, &ads, &head, head_ad,
+                ),
                 AdapterKind::Lora => self.backend.lora_model_fwd(
-                    self.spec, &rows, &blocks, &ads, &head, head_ad,
-                )?,
-            };
-            correct += Self::accuracy_from_logits(&logits, y);
-            total += y.len();
-            n_batches += 1;
-        }
-        student.count_forward_reads(n_batches);
+                    self.spec, rows, &blocks, &ads, &head, head_ad,
+                ),
+            }
+        })?;
+        student.count_forward_reads(total as u64);
         Ok(correct as f64 / total as f64)
     }
 }

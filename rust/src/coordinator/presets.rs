@@ -18,7 +18,7 @@ pub struct NativePreset {
 
 /// All built-in native models, default first.
 pub fn native_presets() -> Vec<NativePreset> {
-    vec![nano(), micro()]
+    vec![nano(), micro(), small()]
 }
 
 /// `nano` — 4 residual blocks x width 16, 8 classes. The test-suite
@@ -91,6 +91,48 @@ pub fn micro() -> NativePreset {
         },
         train: TrainConfig {
             epochs: 30,
+            batch: 32,
+            lr: 2e-3,
+            init_gain: 2.2,
+            seed: 7,
+        },
+    }
+}
+
+/// `small` — 10 residual blocks x width 64, 10 classes: half the paper's
+/// m20 scale (20 x 64) and the largest hermetic preset. Impractical on
+/// the serial naive-matmul path; with the tiled kernel + parallel batch
+/// eval it trains in ~10 s and evaluates interactively, which is the
+/// point — the next step in this column is m20 itself.
+pub fn small() -> NativePreset {
+    NativePreset {
+        spec: ModelSpec {
+            name: "small".into(),
+            n_blocks: 10,
+            width: 64,
+            n_classes: 10,
+            ranks: vec![1, 2, 4, 8, 16],
+            with_lora: true,
+            teacher_acc: 0.0,
+            bundle_file: String::new(),
+            tokens: 4,
+            step_batch: 16,
+            eval_batch: 32,
+        },
+        data: SynthSpec {
+            dim: 64,
+            n_classes: 10,
+            tokens: 4,
+            n_train: 2048,
+            n_calib: 256,
+            n_eval: 512,
+            noise: 0.55,
+            token_jitter: 0.45,
+            n_dirs: 4,
+            seed: 90,
+        },
+        train: TrainConfig {
+            epochs: 15,
             batch: 32,
             lr: 2e-3,
             init_gain: 2.2,

@@ -105,22 +105,30 @@ impl Dataset {
         Ok((Tensor::stack(&parts)?, y[..n].to_vec()))
     }
 
-    /// Iterate the eval split in fixed `batch`-sample chunks (the AOT
-    /// eval artifacts are lowered at a static batch; the tail partial
-    /// batch is dropped, identically to the python-side accuracy()).
+    /// Iterate the eval split in `batch`-sample chunks. The final batch
+    /// is ragged (smaller than `batch`) when `batch` does not divide the
+    /// split — every sample is evaluated exactly once. Earlier versions
+    /// silently dropped the tail (mirroring the python-side accuracy()),
+    /// which both skewed accuracy and made splits smaller than one batch
+    /// evaluate zero samples. Static-batch executors (the AOT PJRT
+    /// artifacts) should pick an `eval_batch` dividing the split.
     pub fn eval_batches(
         &self,
         batch: usize,
     ) -> impl Iterator<Item = (Tensor, &[usize])> + '_ {
-        let n_full = self.n_eval() / batch;
-        (0..n_full).map(move |b| {
-            let mut parts = Vec::with_capacity(batch);
-            for i in b * batch..(b + 1) * batch {
+        assert!(batch > 0, "eval_batches with batch = 0");
+        let n = self.n_eval();
+        let n_batches = n.div_ceil(batch);
+        (0..n_batches).map(move |b| {
+            let start = b * batch;
+            let end = ((b + 1) * batch).min(n);
+            let mut parts = Vec::with_capacity(end - start);
+            for i in start..end {
                 parts.push(self.eval_x.subtensor(i));
             }
             (
                 Tensor::stack(&parts).expect("uniform shapes"),
-                &self.eval_y[b * batch..(b + 1) * batch],
+                &self.eval_y[start..end],
             )
         })
     }
@@ -188,13 +196,21 @@ mod tests {
     }
 
     #[test]
-    fn eval_batches_drop_tail() {
+    fn eval_batches_keep_ragged_tail() {
         let ds = Dataset::from_bundle(&fake_bundle(8, 2, 3), 10).unwrap();
-        // 16 eval samples, batch 5 -> 3 full batches
+        // 16 eval samples, batch 5 -> 3 full batches + 1-sample tail
         let batches: Vec<_> = ds.eval_batches(5).collect();
-        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.len(), 4);
         assert_eq!(batches[0].0.shape(), &[5, 2, 3]);
         assert_eq!(batches[2].1.len(), 5);
+        assert_eq!(batches[3].0.shape(), &[1, 2, 3]);
+        assert_eq!(batches[3].1.len(), 1);
+        let covered: usize = batches.iter().map(|(_, y)| y.len()).sum();
+        assert_eq!(covered, ds.n_eval());
+        // a split smaller than one batch still yields its samples
+        let tiny: Vec<_> = ds.eval_batches(100).collect();
+        assert_eq!(tiny.len(), 1);
+        assert_eq!(tiny[0].1.len(), 16);
     }
 
     #[test]

@@ -96,6 +96,9 @@ fn pct(x: f64) -> String {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // worker count for parallel eval / teacher-feature passes; 0 (the
+    // default) auto-detects from available_parallelism
+    rimc_dora::util::threads::set_threads(args.usize_or("threads", 0)?);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => cmd_info(args),
@@ -115,8 +118,10 @@ fn run(args: &Args) -> Result<()> {
 const HELP: &str = "\
 rimc — RRAM in-memory-computing calibration with DoRA (paper repro)
 
-USAGE: rimc <SUBCOMMAND> [--backend native|pjrt] [--model nano|micro] [flags]
-       (pjrt needs a `--features pjrt` build plus [--artifacts DIR])
+USAGE: rimc <SUBCOMMAND> [--backend native|pjrt] [--model nano|micro|small]
+       [--threads N] [flags]
+       (pjrt needs a `--features pjrt` build plus [--artifacts DIR];
+        --threads sizes the eval/calibration worker pool, 0 = auto)
 
 SUBCOMMANDS
   info                      backend + model inventory
@@ -134,6 +139,27 @@ SUBCOMMANDS
 fn cmd_info(args: &Args) -> Result<()> {
     let eng = engine(args)?;
     println!("backend: {}", eng.backend_name());
+    // native: report from preset metadata — opening a session would
+    // synthesize the dataset and train the teacher, which at `small`
+    // scale turns an inventory listing into tens of seconds of work
+    if let Some(presets) = eng.native_preset_info() {
+        for p in presets {
+            let s = &p.spec;
+            println!(
+                "model {}: {} blocks x width {}, {} classes, ranks {:?}, \
+                 lora={} (teacher trains on first session)",
+                s.name, s.n_blocks, s.width, s.n_classes, s.ranks, s.with_lora
+            );
+            println!(
+                "  params {}, gamma(r=2) {}, calib pool {}, eval {}",
+                s.n_params(),
+                pct(s.gamma(2)),
+                p.data.n_calib,
+                p.data.n_eval
+            );
+        }
+        return Ok(());
+    }
     for name in eng.model_names() {
         let s = eng.session(&name)?;
         println!(

@@ -173,9 +173,24 @@ pub struct StepOutput {
 /// The paper's compute surface. One method per AOT entry point family
 /// (python/compile/model.py `entry_points`), expressed over host
 /// `Tensor`s so substrates and calibration logic stay backend-agnostic.
+///
+/// `Send + Sync` is part of the contract: the evaluator and the
+/// teacher-feature pass fan batches out over a scoped thread pool
+/// (`util::threads`), sharing one `&dyn Backend` across workers. Any
+/// per-dispatch mutable state an implementation keeps (caches, stats)
+/// must sit behind a `Mutex` or an atomic.
 #[allow(clippy::too_many_arguments)]
-pub trait Backend {
+pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Whether the eval forwards accept a final batch smaller than
+    /// `spec.eval_batch`. Host-tensor backends do; AOT backends lowered
+    /// at a static batch shape (PJRT) must return `false`, and the
+    /// evaluator then drops the ragged tail instead of dispatching a
+    /// shape the executable was never compiled for.
+    fn supports_ragged_eval_batch(&self) -> bool {
+        true
+    }
 
     // ---- single-layer forwards (x: [rows, d] token rows) ------------
 

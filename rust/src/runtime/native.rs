@@ -176,9 +176,9 @@ impl Backend for NativeBackend {
             .zip_with(&st.m, |u, m| u * m)?
             .zip_with(&fwd.n, |u, n| u / n)?;
         let dw_norm = fwd.w_eff.scale_cols(&dn_over_n)?;
-        let u = x.transposed().matmul(&ds)?.zip_with(&dw_norm, |p, q| p + q)?;
+        let u = x.t_matmul(&ds)?.zip_with(&dw_norm, |p, q| p + q)?;
         let da = u.matmul(&st.b.transposed())?;
-        let db = st.a.transposed().matmul(&u)?;
+        let db = st.a.t_matmul(&u)?;
         k::adam_update(&mut st.a, &da, &mut st.ma, &mut st.va, t, lr);
         k::adam_update(&mut st.b, &db, &mut st.mb, &mut st.vb, t, lr);
         k::adam_update(&mut st.m, &dm, &mut st.mm, &mut st.vm, t, lr);
@@ -221,8 +221,8 @@ impl Backend for NativeBackend {
                 (loss, k::masked_mse_grad(&y, io.target, io.mask)?)
             }
         };
-        let da = x.transposed().matmul(&g.matmul(&st.b.transposed())?)?;
-        let db = xa.transposed().matmul(&g)?;
+        let da = x.t_matmul(&g.matmul(&st.b.transposed())?)?;
+        let db = xa.t_matmul(&g)?;
         k::adam_update(&mut st.a, &da, &mut st.ma, &mut st.va, t, lr);
         k::adam_update(&mut st.b, &db, &mut st.mb, &mut st.vb, t, lr);
         Ok(StepOutput { loss: loss as f64, colnorm: None })
@@ -253,7 +253,7 @@ impl Backend for NativeBackend {
         let loss = k::masked_cross_entropy(&logits, io.target, io.mask)?;
         // backward
         let dlogits = k::masked_cross_entropy_grad(&logits, io.target, io.mask)?;
-        let dwh = pooled.transposed().matmul(&dlogits)?;
+        let dwh = pooled.t_matmul(&dlogits)?;
         let dpooled = dlogits.matmul(&st.wh.transposed())?;
         // unpool the mean: every token row gets dpooled[sample] / tokens
         let tokens = spec.tokens;
@@ -269,7 +269,7 @@ impl Backend for NativeBackend {
         let mut dwb_parts: Vec<Tensor> = Vec::with_capacity(n_blocks);
         for l in (0..n_blocks).rev() {
             let gpre = relu_mask_grad(&dh, &pres[l])?;
-            dwb_parts.push(hs[l].transposed().matmul(&gpre)?);
+            dwb_parts.push(hs[l].t_matmul(&gpre)?);
             let w = st.wb.subtensor(l);
             dh = dh.zip_with(&gpre.matmul(&w.transposed())?, |u, v| u + v)?;
         }

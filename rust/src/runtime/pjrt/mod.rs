@@ -16,15 +16,19 @@
 //!   host-tensor `execute` path for backend uniformity.
 //! * All outputs come back as a flat `Vec<Tensor>` (the AOT side lowers
 //!   with `return_tuple=True`).
+//! * **Thread safety** — `Backend` is `Send + Sync`, so the executable
+//!   cache and runtime stats sit behind `Mutex`es (the PJRT C API itself
+//!   is thread-safe). If the `xla` crate's wrapper types are not marked
+//!   `Send`/`Sync` in the version you vendor, wrap them accordingly
+//!   before enabling this feature.
 
 mod convert;
 
 pub use convert::{literal_to_tensor, tensor_to_literal};
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::anyhow::{bail, Context, Result};
@@ -52,7 +56,7 @@ pub struct RuntimeStats {
 pub struct Executable {
     name: String,
     exe: xla::PjRtLoadedExecutable,
-    stats: Rc<RefCell<RuntimeStats>>,
+    stats: Arc<Mutex<RuntimeStats>>,
 }
 
 impl Executable {
@@ -67,7 +71,7 @@ impl Executable {
             .map(|t| tensor_to_literal(t))
             .collect::<Result<_>>()?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().expect("runtime stats");
             s.h2d_transfers += literals.len() as u64;
         }
         let t0 = Instant::now();
@@ -76,7 +80,7 @@ impl Executable {
             .execute::<xla::Literal>(&literals)
             .with_context(|| format!("execute {}", self.name))?;
         let out = self.collect_outputs(result)?;
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().expect("runtime stats");
         s.executions += 1;
         s.execute_ns += t0.elapsed().as_nanos();
         Ok(out)
@@ -84,7 +88,7 @@ impl Executable {
 
     /// Upload a host tensor once; reuse across many `execute_buffers`.
     pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().expect("runtime stats");
         s.h2d_transfers += 1;
         drop(s);
         self.exe
@@ -104,7 +108,7 @@ impl Executable {
             .exe
             .execute_b::<&xla::PjRtBuffer>(inputs)
             .with_context(|| format!("execute_b {}", self.name))?;
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().expect("runtime stats");
         s.executions += 1;
         s.execute_ns += t0.elapsed().as_nanos();
         drop(s);
@@ -118,7 +122,7 @@ impl Executable {
     /// into per-element host tensors. `return_tuple=True` executables
     /// return ONE tuple buffer from `execute_b` on this client.
     pub fn download_tuple(&self, buf: &xla::PjRtBuffer) -> Result<Vec<Tensor>> {
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().expect("runtime stats");
         s.d2h_transfers += 1;
         drop(s);
         let lit = buf.to_literal_sync()?;
@@ -130,7 +134,7 @@ impl Executable {
 
     /// Download one device buffer to a host tensor.
     pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().expect("runtime stats");
         s.d2h_transfers += 1;
         drop(s);
         let lit = buf.to_literal_sync()?;
@@ -147,7 +151,7 @@ impl Executable {
         let bufs = &result[0];
         let mut out = Vec::new();
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().expect("runtime stats");
             s.d2h_transfers += bufs.len() as u64;
         }
         if bufs.len() == 1 {
@@ -185,8 +189,8 @@ pub struct ArtifactStore {
     dir: PathBuf,
     pub manifest: Json,
     infos: BTreeMap<String, ArtifactInfo>,
-    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
-    stats: Rc<RefCell<RuntimeStats>>,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+    stats: Arc<Mutex<RuntimeStats>>,
 }
 
 impl ArtifactStore {
@@ -228,8 +232,8 @@ impl ArtifactStore {
             dir: dir.to_path_buf(),
             manifest,
             infos,
-            cache: RefCell::new(BTreeMap::new()),
-            stats: Rc::new(RefCell::new(RuntimeStats::default())),
+            cache: Mutex::new(BTreeMap::new()),
+            stats: Arc::new(Mutex::new(RuntimeStats::default())),
         })
     }
 
@@ -246,12 +250,16 @@ impl ArtifactStore {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("runtime stats").clone()
     }
 
-    /// Compile-on-first-use accessor.
-    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    /// Compile-on-first-use accessor. The cache lock is not held across
+    /// compilation: two threads racing on the same entry point both
+    /// compile and the loser's insert overwrites with an equivalent
+    /// executable.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().expect("executable cache").get(name)
+        {
             return Ok(e.clone());
         }
         let info = self
@@ -267,16 +275,19 @@ impl ArtifactStore {
             .compile(&comp)
             .map_err(|e| crate::anyhow::anyhow!("compile {name}: {e:?}"))?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().expect("runtime stats");
             s.compiles += 1;
             s.compile_ns += t0.elapsed().as_nanos();
         }
-        let exec = Rc::new(Executable {
+        let exec = Arc::new(Executable {
             name: name.to_string(),
             exe,
             stats: self.stats.clone(),
         });
-        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        self.cache
+            .lock()
+            .expect("executable cache")
+            .insert(name.to_string(), exec.clone());
         Ok(exec)
     }
 
@@ -318,6 +329,12 @@ impl PjrtBackend {
 impl Backend for PjrtBackend {
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    /// The AOT eval executables are lowered at a static batch; a ragged
+    /// tail batch would shape-mismatch at dispatch.
+    fn supports_ragged_eval_batch(&self) -> bool {
+        false
     }
 
     fn teacher_block(

@@ -1,7 +1,8 @@
 //! Self-contained substrates the offline build environment forces us to
 //! own: JSON, a seedable PRNG with normal sampling, a tensor container,
-//! the artifact-bundle binary format, a mini property-testing harness and
-//! a mini bench harness (no serde / rand / proptest / criterion available).
+//! the artifact-bundle binary format, a mini property-testing harness, a
+//! mini bench harness and a scoped thread pool (no serde / rand /
+//! proptest / criterion / rayon available).
 
 pub mod bench;
 pub mod cli;
@@ -10,3 +11,4 @@ pub mod quickcheck;
 pub mod rng;
 pub mod tensor;
 pub mod tensorfile;
+pub mod threads;

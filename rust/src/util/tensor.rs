@@ -137,12 +137,75 @@ impl Tensor {
             / n as f32)
     }
 
-    /// Row-major matrix product: `[m, k] x [k, n] -> [m, n]`.
+    /// Row-major matrix product: `[m, k] x [k, n] -> [m, n]`,
+    /// cache-blocked (the whole native backend hot path sits on this
+    /// function).
     ///
-    /// i-k-j loop order so the inner loop streams both the output row and
-    /// the rhs row contiguously (the whole native backend hot path sits
-    /// on this function).
+    /// Blocking runs over rows (`MC`), the shared dim (`KC`) and columns
+    /// (`NC`) so the micro-kernel's working set — one output row segment
+    /// plus one rhs row segment — stays in L1 while a `KC x NC` panel of
+    /// the rhs is reused from L2 across the `MC` rows of a block. Within
+    /// the micro-kernel the inner loop streams both segments
+    /// contiguously, exactly like the naive i-k-j kernel.
+    ///
+    /// Bit-for-bit contract: for every output element the additions
+    /// happen in ascending-`k` order with the same `aik == 0.0` skip as
+    /// [`Tensor::matmul_naive`], so the blocked product is bitwise
+    /// identical to the naive one (property-tested in
+    /// `tests/properties.rs`). Keep that invariant when touching the
+    /// loop nest — parallel eval determinism depends on it.
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        const MC: usize = 32;
+        const KC: usize = 64;
+        const NC: usize = 256;
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!(
+                "matmul wants 2-D operands, got {:?} x {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        if k != k2 {
+            bail!("matmul inner dim mismatch: {:?} x {:?}", self.shape, other.shape);
+        }
+        let mut out = vec![0.0f32; m * n];
+        let mut ib = 0;
+        while ib < m {
+            let i_end = (ib + MC).min(m);
+            let mut jb = 0;
+            while jb < n {
+                let j_end = (jb + NC).min(n);
+                let mut kb = 0;
+                while kb < k {
+                    let k_end = (kb + KC).min(k);
+                    for i in ib..i_end {
+                        let arow = &self.data[i * k..(i + 1) * k];
+                        let orow = &mut out[i * n + jb..i * n + j_end];
+                        for kk in kb..k_end {
+                            let aik = arow[kk];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let brow = &other.data[kk * n + jb..kk * n + j_end];
+                            for (o, &b) in orow.iter_mut().zip(brow) {
+                                *o += aik * b;
+                            }
+                        }
+                    }
+                    kb = k_end;
+                }
+                jb = j_end;
+            }
+            ib = i_end;
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Reference i-k-j matmul kernel, kept as the bit-for-bit oracle the
+    /// blocked [`Tensor::matmul`] is property-tested against.
+    pub fn matmul_naive(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 {
             bail!(
                 "matmul wants 2-D operands, got {:?} x {:?}",
@@ -166,6 +229,50 @@ impl Tensor {
                 let brow = &other.data[kk * n..(kk + 1) * n];
                 for (o, &b) in orow.iter_mut().zip(brow) {
                     *o += aik * b;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Transpose-aware product: `self^T x other`, i.e.
+    /// `[k, m]^T x [k, n] -> [m, n]`, without materializing the
+    /// transpose. The `k`-outer loop streams one row of each operand
+    /// contiguously per iteration — this is the micro-kernel behind
+    /// every `X^T @ G` in the step VJPs, which previously paid a full
+    /// `transposed()` copy per call.
+    ///
+    /// Bitwise identical to `self.transposed().matmul_naive(other)`:
+    /// per output element the additions run in ascending-`k` order with
+    /// the same zero skip (property-tested in `tests/properties.rs`).
+    pub fn t_matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!(
+                "t_matmul wants 2-D operands, got {:?} x {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        let (k, m) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        if k != k2 {
+            bail!(
+                "t_matmul inner dim mismatch: {:?}^T x {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        let mut out = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &other.data[kk * n..(kk + 1) * n];
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aki * b;
                 }
             }
         }
@@ -264,17 +371,30 @@ impl Tensor {
     }
 
     /// argmax over the last axis for a 2-D tensor -> one index per row.
+    ///
+    /// Deterministic **first-max-wins** semantics: on ties the lowest
+    /// index is returned, and `NaN` entries never win (a later value
+    /// replaces the incumbent only under a strict `>`, which is false
+    /// for any comparison involving `NaN`; an all-`NaN` row yields 0).
+    /// Serial and parallel eval therefore score identical predictions
+    /// on identical logits — never panic and never depend on iteration
+    /// or scheduling order.
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.shape.len(), 2);
         let (n, c) = (self.shape[0], self.shape[1]);
+        assert!(c > 0, "argmax_rows over zero-width rows");
         (0..n)
             .map(|i| {
                 let row = &self.data[i * c..(i + 1) * c];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(j, _)| j)
-                    .unwrap()
+                let mut best = 0;
+                let mut best_v = f32::NEG_INFINITY;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > best_v {
+                        best = j;
+                        best_v = v;
+                    }
+                }
+                best
             })
             .collect()
     }
@@ -324,6 +444,39 @@ mod tests {
     }
 
     #[test]
+    fn argmax_rows_ties_pick_first() {
+        let t = Tensor::new(
+            vec![3, 3],
+            vec![2.0, 2.0, 2.0, 1.0, 3.0, 3.0, -1.0, -5.0, -1.0],
+        )
+        .unwrap();
+        assert_eq!(t.argmax_rows(), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn argmax_rows_nan_never_wins() {
+        let nan = f32::NAN;
+        let t = Tensor::new(
+            vec![3, 3],
+            vec![nan, 1.0, 0.5, 0.5, nan, 1.0, nan, nan, nan],
+        )
+        .unwrap();
+        // NaN compares false under `>`, so the best finite value wins;
+        // an all-NaN row falls back to index 0
+        assert_eq!(t.argmax_rows(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn argmax_rows_neg_infinity_rows() {
+        let t = Tensor::new(
+            vec![1, 3],
+            vec![f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY],
+        )
+        .unwrap();
+        assert_eq!(t.argmax_rows(), vec![0]);
+    }
+
+    #[test]
     fn mse_and_stats() {
         let a = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
         let b = Tensor::from_vec(vec![1.0, 2.0, 5.0]);
@@ -342,6 +495,47 @@ mod tests {
         assert_eq!(c.shape(), &[2, 2]);
         assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
         assert!(a.matmul(&a).is_err());
+    }
+
+    #[test]
+    fn blocked_matmul_crosses_block_boundaries() {
+        // dims straddle the MC=32 / KC=64 block edges; values include
+        // zeros so the skip path runs on both kernels
+        let (m, k, n) = (33, 65, 17);
+        let mk = |len: usize, salt: usize| -> Vec<f32> {
+            (0..len)
+                .map(|i| {
+                    if (i + salt) % 7 == 0 {
+                        0.0
+                    } else {
+                        ((i * 37 + salt) % 23) as f32 - 11.0
+                    }
+                })
+                .collect()
+        };
+        let a = Tensor::new(vec![m, k], mk(m * k, 1)).unwrap();
+        let b = Tensor::new(vec![k, n], mk(k * n, 5)).unwrap();
+        let blocked = a.matmul(&b).unwrap();
+        let naive = a.matmul_naive(&b).unwrap();
+        assert_eq!(blocked.shape(), naive.shape());
+        for (x, y) in blocked.data().iter().zip(naive.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_materialized_transpose() {
+        let a = Tensor::new(vec![3, 2], vec![1.0, 2.0, 0.0, 4.0, 5.0, -6.0])
+            .unwrap();
+        let b = Tensor::new(vec![3, 2], vec![7.0, 8.0, 9.0, 10.0, 0.0, 12.0])
+            .unwrap();
+        let fused = a.t_matmul(&b).unwrap();
+        let materialized = a.transposed().matmul_naive(&b).unwrap();
+        assert_eq!(fused.shape(), &[2, 2]);
+        assert_eq!(fused.data(), materialized.data());
+        // inner-dim mismatch still rejected
+        let c = Tensor::new(vec![2, 2], vec![1.0; 4]).unwrap();
+        assert!(a.t_matmul(&c).is_err());
     }
 
     #[test]

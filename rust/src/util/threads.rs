@@ -1,0 +1,174 @@
+//! Hand-rolled scoped thread pool (no rayon in the offline build env).
+//!
+//! Built on `std::thread::scope`, so workers may borrow from the caller's
+//! stack: a pool `map` over eval batches can capture `&dyn Backend`,
+//! tensors and specs by reference with no `'static` bounds and no
+//! channels. Threads are spawned per call; every call site in this crate
+//! hands each worker milliseconds of dense linear algebra, so spawn cost
+//! (~tens of µs) is noise.
+//!
+//! Work is distributed dynamically through one shared atomic cursor
+//! (rayon-style work stealing is overkill for <100 uniform items), and
+//! results are returned **in input order** regardless of which worker
+//! produced them — parallel and serial runs are observably identical as
+//! long as `f` itself is deterministic.
+//!
+//! The process-wide default worker count is a single atomic
+//! (`set_threads` / `threads`), threaded through from the CLI `--threads`
+//! flag; 0 means "use `std::thread::available_parallelism`".
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide worker-count override; 0 = auto-detect.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default worker count (0 restores auto-detect).
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::SeqCst);
+}
+
+/// Current default worker count: the `set_threads` override, or the
+/// machine's available parallelism.
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::SeqCst) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// A fixed-width scoped pool. Cheap to construct; holds no OS resources
+/// between calls.
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> ThreadPool {
+        ThreadPool { workers: workers.max(1) }
+    }
+
+    /// Pool sized from the process-wide setting (CLI `--threads`).
+    pub fn global() -> ThreadPool {
+        ThreadPool::new(threads())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f` to every item, in parallel across up to `workers`
+    /// threads, returning results in input order. Falls back to a plain
+    /// serial loop for one worker or one item (no spawn overhead on the
+    /// degenerate paths).
+    ///
+    /// Panics in `f` are propagated to the caller after all workers stop
+    /// pulling new items.
+    pub fn map<I, T, F>(&self, items: &[I], f: F) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(&I) -> T + Sync,
+    {
+        let n = items.len();
+        if self.workers <= 1 || n <= 1 {
+            return items.iter().map(f).collect();
+        }
+        let workers = self.workers.min(n);
+        let cursor = AtomicUsize::new(0);
+        let (cursor, f) = (&cursor, &f);
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(&items[i])));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, v) in h.join().expect("pool worker panicked") {
+                    out[i] = Some(v);
+                }
+            }
+        });
+        out.into_iter()
+            .map(|v| v.expect("every index claimed exactly once"))
+            .collect()
+    }
+
+    /// Fallible `map`: runs every item, then returns the first error in
+    /// **input order** (not completion order), so failures are as
+    /// deterministic as successes.
+    pub fn try_map<I, T, E, F>(&self, items: &[I], f: F) -> Result<Vec<T>, E>
+    where
+        I: Sync,
+        T: Send,
+        E: Send,
+        F: Fn(&I) -> Result<T, E> + Sync,
+    {
+        self.map(items, f).into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_input_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let got = ThreadPool::new(4).map(&items, |&i| i * 3);
+        assert_eq!(got, items.iter().map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let items: Vec<u64> = (0..40).collect();
+        let f = |&i: &u64| i * i + 1;
+        assert_eq!(
+            ThreadPool::new(1).map(&items, f),
+            ThreadPool::new(8).map(&items, f)
+        );
+    }
+
+    #[test]
+    fn try_map_returns_first_error_in_input_order() {
+        let items: Vec<usize> = (0..64).collect();
+        let err = ThreadPool::new(4)
+            .try_map(&items, |&i| {
+                if i % 10 == 7 {
+                    Err(format!("bad {i}"))
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, "bad 7");
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let items: Vec<usize> = Vec::new();
+        assert!(ThreadPool::new(4).map(&items, |&i| i).is_empty());
+    }
+
+    #[test]
+    fn thread_setting_roundtrips() {
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        assert_eq!(ThreadPool::global().workers(), 3);
+        set_threads(0); // restore auto-detect
+        assert!(threads() >= 1);
+    }
+}

@@ -1,7 +1,8 @@
 //! Property-based tests over the hardware substrates (mini-quickcheck
 //! harness; see util::quickcheck). These pin down the coordinator
 //! invariants: routing of writes to the right memory, drift statistics,
-//! endurance monotonicity, batching coverage.
+//! endurance monotonicity, batching coverage, and the bit-for-bit
+//! equivalence of the tiled matmul kernels with the naive oracle.
 
 use rimc_dora::calib::make_batches;
 use rimc_dora::device::{constants, DriftModel, ProgramModel, WeightCoding};
@@ -209,6 +210,84 @@ fn prop_batches_cover_all_samples_exactly_once() {
                 b0.x_rows.data()[0] == 0.0 && b0.x_rows.data()[d - 1] == (d - 1) as f32,
                 "sample order broken"
             );
+            Ok(())
+        },
+    );
+}
+
+/// Matrix whose entries mix zeros (to exercise the skip path), negatives
+/// and magnitudes spread over a few orders, deterministically from dims.
+fn matmul_operand(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    Tensor::new(
+        vec![rows, cols],
+        (0..rows * cols)
+            .map(|_| {
+                if rng.below(5) == 0 {
+                    0.0
+                } else {
+                    rng.normal_scaled(0.0, 1.5) as f32
+                }
+            })
+            .collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_tiled_matmul_is_bitwise_equal_to_naive() {
+    // shapes straddle the MC=32 / KC=64 / NC=256 block edges
+    forall(
+        8,
+        40,
+        |r| (1 + r.below(45), 1 + r.below(90), 1 + r.below(280)),
+        |&(m, k, n)| {
+            let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
+            let a = matmul_operand(&mut rng, m, k);
+            let b = matmul_operand(&mut rng, k, n);
+            let tiled = a.matmul(&b).map_err(|e| e.to_string())?;
+            let naive = a.matmul_naive(&b).map_err(|e| e.to_string())?;
+            prop_assert!(
+                tiled.shape() == naive.shape(),
+                "shape {:?} vs {:?}",
+                tiled.shape(),
+                naive.shape()
+            );
+            for (i, (x, y)) in
+                tiled.data().iter().zip(naive.data()).enumerate()
+            {
+                prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{m}x{k}x{n} elem {i}: tiled {x} != naive {y}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_t_matmul_is_bitwise_equal_to_materialized_transpose() {
+    forall(
+        9,
+        40,
+        |r| (1 + r.below(40), 1 + r.below(40), 1 + r.below(40)),
+        |&(k, m, n)| {
+            let mut rng = Rng::new((k * 999_983 + m * 101 + n) as u64);
+            let a = matmul_operand(&mut rng, k, m);
+            let b = matmul_operand(&mut rng, k, n);
+            let fused = a.t_matmul(&b).map_err(|e| e.to_string())?;
+            let reference = a
+                .transposed()
+                .matmul_naive(&b)
+                .map_err(|e| e.to_string())?;
+            for (i, (x, y)) in
+                fused.data().iter().zip(reference.data()).enumerate()
+            {
+                prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{k}^T x{m}x{n} elem {i}: fused {x} != reference {y}"
+                );
+            }
             Ok(())
         },
     );
