@@ -6,7 +6,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: build test fmt clippy check artifacts clean
+.PHONY: build test fmt clippy doc check artifacts clean
 
 build:
 	cd $(CARGO_DIR) && cargo build --release
@@ -20,7 +20,11 @@ fmt:
 clippy:
 	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
 
-check: build test fmt clippy
+# Public-API docs, warnings denied (same gate as CI).
+doc:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+check: build test fmt clippy doc
 
 # AOT HLO artifacts for the optional PJRT backend (`--features pjrt`).
 # Requires python3 + jax; errors out with instructions when absent.

@@ -1,0 +1,122 @@
+//! Serving-layer throughput bench: replays the same synthetic request
+//! trace through the server twice — once with inference micro-batching
+//! enabled (requests coalesced up to the eval batch) and once
+//! dispatching one request at a time — and reports throughput, the
+//! batched/unbatched speedup, and per-lane latency percentiles.
+//!
+//! Correctness is gated, not just timed: the two replays run on
+//! identically-seeded fresh fleets, so every inference response must be
+//! bitwise identical between them; any divergence panics (and fails the
+//! CI smoke run).
+//!
+//! Flags (after `cargo bench --bench serving_throughput --`):
+//!   --smoke       nano fleet, short trace (CI gate)
+//!   --threads N   dispatch worker count (default 4)
+//!   --devices N   fleet size (default 8, smoke 4)
+//!   --requests N  trace length (default 1000, smoke 120)
+
+use rimc_dora::coordinator::Engine;
+use rimc_dora::serve::{
+    replay_collect, synth_trace, Response, ServeConfig, Server, TraceSpec,
+};
+use rimc_dora::util::cli::Args;
+use rimc_dora::util::threads;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.bool_or("smoke", false).unwrap_or(false);
+    let workers = args.usize_or("threads", 4).unwrap();
+    let devices = args.usize_or("devices", if smoke { 4 } else { 8 }).unwrap();
+    let requests =
+        args.usize_or("requests", if smoke { 120 } else { 1000 }).unwrap();
+    let model = if smoke { "nano" } else { "micro" };
+    threads::set_threads(workers);
+
+    let eng = Engine::native();
+    let session = eng.shared_session(model).unwrap();
+    let trace_spec = TraceSpec {
+        n_requests: requests,
+        n_devices: devices,
+        ..TraceSpec::default()
+    };
+    let trace = synth_trace(&trace_spec, session.dataset.n_eval());
+
+    let mut results = Vec::new();
+    let mut responses: Vec<Vec<Response>> = Vec::new();
+    for (label, max_batch) in [
+        ("one-request-at-a-time", 1),
+        ("micro-batched", session.spec.eval_batch),
+    ] {
+        // fresh fleet per run, same seeds: identical device state, so
+        // responses must match bitwise across batching modes
+        let server = Server::new(session.clone(), &ServeConfig {
+            n_devices: devices,
+            max_batch_samples: max_batch,
+            workers,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let (report, resp) = replay_collect(&server, &trace).unwrap();
+        assert_eq!(report.failed, 0, "{label}: requests failed");
+        assert_eq!(
+            report.rram_writes_in_field, 0,
+            "{label}: field traffic wrote RRAM"
+        );
+        println!(
+            "{label:24} {:8.1} req/s  inference p50 {:.3} ms  p95 {:.3} ms  \
+             ({} requests, {} samples, {:.2} s)",
+            report.throughput_rps,
+            report.inference_latency.p50_ns() / 1e6,
+            report.inference_latency.p95_ns() / 1e6,
+            report.requests,
+            report.samples_inferred,
+            report.wall_s,
+        );
+        results.push((label, report));
+        responses.push(resp);
+    }
+
+    // correctness gate: batching must not change a single prediction
+    for (i, (a, b)) in responses[0].iter().zip(&responses[1]).enumerate() {
+        match (a, b) {
+            (
+                Response::Inference { predictions: pa, correct: ca, .. },
+                Response::Inference { predictions: pb, correct: cb, .. },
+            ) => {
+                assert_eq!(
+                    (pa, ca),
+                    (pb, cb),
+                    "request {i}: micro-batched predictions diverge"
+                );
+            }
+            (Response::Inference { .. }, _) | (_, Response::Inference { .. }) => {
+                panic!("request {i}: response class diverges across modes")
+            }
+            _ => {}
+        }
+    }
+    println!("determinism: batched == unbatched predictions, bitwise");
+
+    let speedup =
+        results[1].1.throughput_rps / results[0].1.throughput_rps;
+    println!(
+        "\n## serving throughput ({model}, {devices} devices, \
+         {workers} workers)\n"
+    );
+    println!("| dispatch mode | req/s | inference p95 | speedup |");
+    println!("|---|---|---|---|");
+    for (label, r) in &results {
+        println!(
+            "| {label} | {:.1} | {:.3} ms | {:.2}x |",
+            r.throughput_rps,
+            r.inference_latency.p95_ns() / 1e6,
+            r.throughput_rps / results[0].1.throughput_rps,
+        );
+    }
+    println!(
+        "\nmicro-batching speedup: {speedup:.2}x \
+         (coalescing up to {} samples per dispatch)",
+        session.spec.eval_batch
+    );
+    threads::set_threads(0);
+}

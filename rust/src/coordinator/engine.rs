@@ -178,6 +178,14 @@ impl Engine {
         }
     }
 
+    /// `session`, shared: the unit the serving layer multiplexes a
+    /// whole device fleet over (`serve::Fleet` holds one
+    /// `Arc<Session>`; every device forward and calibration round goes
+    /// through it concurrently — `Session` is `Send + Sync`).
+    pub fn shared_session(&self, model: &str) -> Result<Arc<Session>> {
+        Ok(Arc::new(self.session(model)?))
+    }
+
     #[cfg(feature = "pjrt")]
     fn pjrt_session(&self, model: &str) -> Result<Session> {
         let store = self.store()?;

@@ -21,6 +21,45 @@ pub fn native_presets() -> Vec<NativePreset> {
     vec![nano(), micro(), small()]
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Docs-drift gate: these are the shapes README.md, DESIGN.md §3
+    /// and the `rimc` help text advertise. If a preset changes shape,
+    /// this test forces the prose to follow.
+    #[test]
+    fn preset_shapes_match_documented_inventory() {
+        let shapes: Vec<(String, usize, usize, usize)> = native_presets()
+            .iter()
+            .map(|p| {
+                (
+                    p.spec.name.clone(),
+                    p.spec.n_blocks,
+                    p.spec.width,
+                    p.spec.n_classes,
+                )
+            })
+            .collect();
+        assert_eq!(shapes, vec![
+            ("nano".to_string(), 4, 16, 8),
+            ("micro".to_string(), 6, 32, 10),
+            ("small".to_string(), 10, 64, 10),
+        ]);
+    }
+
+    /// A preset whose dataset dims disagree with its model spec would
+    /// train a teacher on the wrong feature dimension.
+    #[test]
+    fn preset_data_dims_agree_with_spec() {
+        for p in native_presets() {
+            assert_eq!(p.data.dim, p.spec.width, "{}", p.spec.name);
+            assert_eq!(p.data.n_classes, p.spec.n_classes, "{}", p.spec.name);
+            assert_eq!(p.data.tokens, p.spec.tokens, "{}", p.spec.name);
+        }
+    }
+}
+
 /// `nano` — 4 residual blocks x width 16, 8 classes. The test-suite
 /// workhorse: trains to ~0.83 eval accuracy in well under a second.
 pub fn nano() -> NativePreset {

@@ -16,9 +16,15 @@
 //!   AOT HLO artifacts lowered from the JAX/Pallas graphs in
 //!   `python/compile` through the PJRT C API.
 //!
+//! On top of the experiment harness sits a serving layer (`serve`):
+//! a fleet of independently drifting simulated devices behind a bounded
+//! two-lane request queue with inference micro-batching, multiplexing
+//! concurrent inference / calibration / drift traffic over one shared
+//! `coordinator::Engine` session (`rimc serve`).
+//!
 //! See DESIGN.md for the backend substitution map (what the paper had vs
-//! what each backend executes) and EXPERIMENTS.md for paper-vs-measured
-//! results.
+//! what each backend executes), DESIGN.md §7 for the serving model, and
+//! EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod anyhow;
 pub mod calib;
@@ -29,5 +35,6 @@ pub mod metrics;
 pub mod model;
 pub mod rram;
 pub mod runtime;
+pub mod serve;
 pub mod sram;
 pub mod util;

@@ -1,0 +1,95 @@
+//! Serving-latency accounting: nearest-rank percentiles over a set of
+//! measured request latencies. The trace replay feeds one summary per
+//! priority lane into the `rimc serve` report and the
+//! `serving_throughput` bench.
+
+/// Sorted latency samples with percentile accessors.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    /// ascending nanosecond samples
+    sorted_ns: Vec<u64>,
+}
+
+impl LatencySummary {
+    pub fn from_ns(mut samples: Vec<u64>) -> LatencySummary {
+        samples.sort_unstable();
+        LatencySummary { sorted_ns: samples }
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted_ns.is_empty()
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.sorted_ns.is_empty() {
+            return f64::NAN;
+        }
+        self.sorted_ns.iter().map(|&n| n as f64).sum::<f64>()
+            / self.sorted_ns.len() as f64
+    }
+
+    /// Nearest-rank percentile, `p` in (0, 100]. NaN when empty.
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        let n = self.sorted_ns.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+        self.sorted_ns[rank - 1] as f64
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        self.percentile_ns(50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        self.percentile_ns(95.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        self.percentile_ns(99.0)
+    }
+
+    pub fn max_ns(&self) -> f64 {
+        self.sorted_ns.last().map(|&n| n as f64).unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        // 1..=100 ns: pK is exactly K
+        let s = LatencySummary::from_ns((1..=100).rev().collect());
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.percentile_ns(50.0), 50.0);
+        assert_eq!(s.p95_ns(), 95.0);
+        assert_eq!(s.p99_ns(), 99.0);
+        assert_eq!(s.percentile_ns(100.0), 100.0);
+        assert_eq!(s.percentile_ns(1.0), 1.0);
+        assert_eq!(s.max_ns(), 100.0);
+        assert!((s.mean_ns() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let s = LatencySummary::from_ns(vec![7]);
+        assert_eq!(s.p50_ns(), 7.0);
+        assert_eq!(s.p99_ns(), 7.0);
+    }
+
+    #[test]
+    fn empty_summary_is_nan_not_panic() {
+        let s = LatencySummary::from_ns(Vec::new());
+        assert!(s.is_empty());
+        assert!(s.p50_ns().is_nan());
+        assert!(s.mean_ns().is_nan());
+        assert!(s.max_ns().is_nan());
+    }
+}

@@ -1,8 +1,13 @@
 //! Accounting layer: everything Table I and §IV-C/D/E report is computed
 //! here from measured counters + the cited constants in
-//! `device::constants`.
+//! `device::constants`. The serving layer adds request-latency
+//! percentile accounting (`latency::LatencySummary`) on top of the
+//! same wear counters.
 
+pub mod latency;
 pub mod params;
+
+pub use latency::LatencySummary;
 
 use crate::device::constants;
 

@@ -1,0 +1,308 @@
+//! Simulated device fleet: N independently drifting edge devices, each
+//! an RRAM-programmed `StudentModel` plus an optional SRAM-resident
+//! adapter, all sharing one engine `Session` (spec + teacher + dataset)
+//! and one `Backend`.
+//!
+//! A device is the serving layer's unit of state and of mutual
+//! exclusion: every request targets exactly one device, the server
+//! serializes requests per device (`Mutex<Device>` + the queue's busy
+//! flag), and devices never share mutable state — so cross-device
+//! parallelism is free and per-device execution is deterministic.
+//!
+//! The paper invariant is carried per device: field traffic (inference,
+//! calibration, drift) must issue **zero RRAM write attempts** after
+//! deployment programming. `rram_write_attempts_in_field` measures
+//! exactly that delta, and the serving tests assert it stays zero.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::anyhow::{anyhow, bail, Result};
+
+use crate::calib::CalibConfig;
+use crate::coordinator::Session;
+use crate::dataset::Dataset;
+use crate::device::DriftModel;
+use crate::model::{AdapterKind, AdapterSet, StudentModel};
+use crate::runtime::AdapterIo;
+use crate::util::tensor::Tensor;
+use crate::util::threads::ThreadPool;
+
+/// Stack the given eval-split samples into a `[n, T, d]` batch plus
+/// their labels. Shared by the dispatch path and the serial reference
+/// the determinism test compares against.
+pub fn gather_eval(
+    ds: &Dataset,
+    samples: &[usize],
+) -> Result<(Tensor, Vec<usize>)> {
+    if samples.is_empty() {
+        bail!("inference request with no samples");
+    }
+    let n = ds.n_eval();
+    let mut parts = Vec::with_capacity(samples.len());
+    let mut labels = Vec::with_capacity(samples.len());
+    for &i in samples {
+        if i >= n {
+            bail!("eval sample {i} out of range (split has {n})");
+        }
+        parts.push(ds.eval_x.subtensor(i));
+        labels.push(ds.eval_y[i]);
+    }
+    Ok((Tensor::stack(&parts)?, labels))
+}
+
+/// Point-in-time accounting snapshot of one device (trace reports).
+#[derive(Debug, Clone)]
+pub struct DeviceStats {
+    pub id: usize,
+    /// field hours on the drift clock
+    pub hours: f64,
+    pub calibrations: u64,
+    /// samples served through inference requests
+    pub inferred: u64,
+    /// of those, predicted correctly (observed serving accuracy)
+    pub correct: u64,
+    /// cumulative SRAM word writes across calibration rounds
+    pub sram_writes: u64,
+    /// RRAM write pulses since deployment — the paper says always 0
+    pub rram_writes_in_field: u64,
+    /// MVM readouts since deployment (read wear)
+    pub rram_reads: u64,
+}
+
+impl DeviceStats {
+    /// Observed accuracy over everything this device served.
+    pub fn serving_accuracy(&self) -> f64 {
+        if self.inferred == 0 {
+            return f64::NAN;
+        }
+        self.correct as f64 / self.inferred as f64
+    }
+}
+
+/// One deployed device: drifted crossbars + optional SRAM adapter.
+pub struct Device {
+    pub id: usize,
+    student: StudentModel,
+    adapters: Option<AdapterSet>,
+    hours: f64,
+    calibrations: u64,
+    inferred: u64,
+    correct: u64,
+    sram_writes: u64,
+    /// write attempts charged by deployment programming, the baseline
+    /// the in-field zero-write invariant is measured against
+    deploy_write_attempts: u64,
+    deploy_reads: u64,
+    /// per-device base seed for calibration-subset draws
+    calib_seed: u64,
+}
+
+impl Device {
+    /// Program the session's teacher into fresh crossbars with this
+    /// device's own drift physics and seed (devices drift independently).
+    pub fn deploy(
+        session: &Session,
+        id: usize,
+        drift_rel: f64,
+        seed: u64,
+    ) -> Result<Device> {
+        let student =
+            session.program_student(DriftModel::with_rel(drift_rel), seed)?;
+        let counters = student.total_counters();
+        Ok(Device {
+            id,
+            deploy_write_attempts: counters.write_attempts,
+            deploy_reads: counters.reads,
+            student,
+            adapters: None,
+            hours: 0.0,
+            calibrations: 0,
+            inferred: 0,
+            correct: 0,
+            sram_writes: 0,
+            calib_seed: seed ^ 0xca11b,
+        })
+    }
+
+    /// Forward `x [n, T, d]` through the device — crossbars only when
+    /// uncalibrated, merged-adapter forward once calibrated — and score
+    /// against `labels`. Returns per-sample predictions.
+    ///
+    /// Per-sample outputs depend only on that sample's rows (the matmul
+    /// kernels compute each output element independently in fixed-k
+    /// order, pooling is per sample), so a micro-batched forward is
+    /// bitwise identical to per-request forwards — the property the
+    /// serving determinism test pins.
+    pub fn infer(
+        &mut self,
+        session: &Session,
+        x: &Tensor,
+        labels: &[usize],
+    ) -> Result<Vec<usize>> {
+        let spec = &session.spec;
+        let n = x.shape()[0];
+        let rows = Dataset::rows(x)?;
+        let blocks = self.student.stacked_arrays()?;
+        let head = self.student.head_io();
+        let logits = match &self.adapters {
+            None => {
+                session.backend.student_fwd(spec, &rows, &blocks, &head)?
+            }
+            Some(ads) => {
+                let stacked = ads.stacked()?;
+                let meffh = ads.head.merged_meff()?;
+                let head_ad = AdapterIo {
+                    a: ads.head.a.tensor(),
+                    b: ads.head.b.tensor(),
+                    meff: &meffh,
+                };
+                match ads.kind {
+                    AdapterKind::Dora => session.backend.dora_model_fwd(
+                        spec, &rows, &blocks, &stacked, &head, head_ad,
+                    )?,
+                    AdapterKind::Lora => session.backend.lora_model_fwd(
+                        spec, &rows, &blocks, &stacked, &head, head_ad,
+                    )?,
+                }
+            }
+        };
+        self.student.count_forward_reads(n as u64);
+        let preds = logits.argmax_rows();
+        self.inferred += n as u64;
+        self.correct += preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| *p == *l)
+            .count() as u64;
+        Ok(preds)
+    }
+
+    /// One feature-calibration round on `n_samples` fresh calibration
+    /// samples; installs the resulting adapter set in device SRAM
+    /// (replacing any previous one). Returns (SRAM word writes this
+    /// round, RRAM write pulses this round — always 0).
+    pub fn calibrate(
+        &mut self,
+        session: &Session,
+        n_samples: usize,
+        cfg: &CalibConfig,
+    ) -> Result<(u64, u64)> {
+        // fresh deterministic sample draw per round: devices calibrate
+        // on what they can capture in the field, not one fixed subset
+        let seed = self.calib_seed.wrapping_add(self.calibrations);
+        let (x, y) = session.dataset.calib_subset_seeded(n_samples, seed)?;
+        let calibrator = session.feature_calibrator(cfg.clone())?;
+        let outcome =
+            calibrator.calibrate(&mut self.student, &session.teacher, &x, &y)?;
+        let sram = outcome.adapters.sram_writes();
+        let rram = outcome.cost.rram_writes;
+        self.sram_writes += sram;
+        self.adapters = Some(outcome.adapters);
+        self.calibrations += 1;
+        Ok((sram, rram))
+    }
+
+    /// Advance this device's drift clock (conductances relax in place).
+    pub fn advance(&mut self, hours: f64) {
+        self.student.advance_time(hours);
+        self.hours += hours;
+    }
+
+    pub fn adapters(&self) -> Option<&AdapterSet> {
+        self.adapters.as_ref()
+    }
+
+    /// RRAM write pulses issued after deployment programming. The
+    /// paper's claim — and the serving tests' assertion — is that this
+    /// stays 0 under any mix of field traffic.
+    pub fn rram_write_attempts_in_field(&self) -> u64 {
+        self.student.total_counters().write_attempts - self.deploy_write_attempts
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        let counters = self.student.total_counters();
+        DeviceStats {
+            id: self.id,
+            hours: self.hours,
+            calibrations: self.calibrations,
+            inferred: self.inferred,
+            correct: self.correct,
+            sram_writes: self.sram_writes,
+            rram_writes_in_field: counters.write_attempts
+                - self.deploy_write_attempts,
+            rram_reads: counters.reads - self.deploy_reads,
+        }
+    }
+}
+
+/// N deployed devices sharing one `Session`.
+pub struct Fleet {
+    session: Arc<Session>,
+    devices: Vec<Mutex<Device>>,
+}
+
+impl Fleet {
+    /// Deploy `n_devices` fresh devices at the given relative drift.
+    /// Programming is independent per device, so it fans out over the
+    /// scoped thread pool; seeds are per-device, so fleet construction
+    /// is deterministic regardless of worker count.
+    pub fn deploy(
+        session: Arc<Session>,
+        n_devices: usize,
+        drift_rel: f64,
+        seed: u64,
+    ) -> Result<Fleet> {
+        if n_devices == 0 {
+            bail!("fleet needs at least one device");
+        }
+        let ids: Vec<usize> = (0..n_devices).collect();
+        let devices = ThreadPool::global().try_map(&ids, |&id| {
+            Device::deploy(
+                &session,
+                id,
+                drift_rel,
+                seed.wrapping_add(7919 * (id as u64 + 1)),
+            )
+        })?;
+        Ok(Fleet {
+            session,
+            devices: devices.into_iter().map(Mutex::new).collect(),
+        })
+    }
+
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Exclusive access to one device (the server holds this across a
+    /// work unit; the queue's busy flag means it is never contended in
+    /// the dispatch path).
+    pub fn lock(&self, id: usize) -> Result<MutexGuard<'_, Device>> {
+        self.devices
+            .get(id)
+            .ok_or_else(|| {
+                anyhow!("device {id} out of range ({})", self.devices.len())
+            })?
+            .lock()
+            .map_err(|_| anyhow!("device {id} mutex poisoned"))
+    }
+
+    pub fn stats(&self) -> Vec<DeviceStats> {
+        self.devices
+            .iter()
+            .map(|d| d.lock().expect("device lock").stats())
+            .collect()
+    }
+
+    /// Fleet-wide RRAM write pulses since deployment (must be 0).
+    pub fn rram_write_attempts_in_field(&self) -> u64 {
+        self.devices
+            .iter()
+            .map(|d| d.lock().expect("device lock").rram_write_attempts_in_field())
+            .sum()
+    }
+}

@@ -1,0 +1,37 @@
+//! Serving layer: concurrent inference / calibration / drift traffic
+//! for a fleet of simulated RIMC edge devices, multiplexed over one
+//! shared engine `Session` — the ROADMAP's "millions of users" story in
+//! system form.
+//!
+//! The paper's deployment model (§I, Fig. 1) is a *fleet*: many edge
+//! devices whose RRAM arrays drift independently, each periodically
+//! fixed up by a cheap SRAM-only DoRA calibration — never an RRAM
+//! write. This module serves that fleet:
+//!
+//! * [`fleet`] — N devices, each its own drifted `StudentModel`
+//!   (crossbars, wear counters, drift clock) plus an optional
+//!   SRAM-resident adapter, sharing one `Session`/`Backend`.
+//! * [`queue`] — bounded submission queue with two priority lanes
+//!   (inference outranks calibration/drift maintenance, so a
+//!   multi-second calibration round never starves inference) and
+//!   micro-batching of consecutive same-device inference requests into
+//!   single backend dispatches, amortizing the tiled-matmul eval path.
+//!   Per-device program order is never reordered, which keeps served
+//!   results bitwise equal to serial per-device execution.
+//! * [`server`] — the blocking `submit`/`wait` front-end plus scoped
+//!   dispatch workers (`util::threads`).
+//! * [`trace`] — seeded synthetic request traces, replay, and the
+//!   throughput / latency-percentile / accuracy-vs-drift report behind
+//!   `rimc serve` and the `serving_throughput` bench.
+//!
+//! See DESIGN.md §7 for the serving model and its invariants.
+
+pub mod fleet;
+pub mod queue;
+pub mod server;
+pub mod trace;
+
+pub use fleet::{gather_eval, Device, DeviceStats, Fleet};
+pub use queue::{Lane, RequestKind, SubmitQueue, Ticket};
+pub use server::{Response, ServeConfig, Server};
+pub use trace::{replay, replay_collect, synth_trace, TraceReport, TraceSpec};

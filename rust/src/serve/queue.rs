@@ -1,0 +1,411 @@
+//! Bounded submission queue with priority lanes and inference
+//! micro-batching.
+//!
+//! Scheduling contract (what the determinism test leans on):
+//!
+//! * **FIFO per device.** Requests for one device execute in submission
+//!   order, full stop — a device with an in-flight work unit is *busy*
+//!   and none of its queued requests are eligible until the unit
+//!   completes. Per-device program order is what makes served results
+//!   bitwise equal to a serial per-device run.
+//! * **Priority across devices.** Among the eligible head-of-line
+//!   requests, inference outranks maintenance (calibration / drift
+//!   advance), ties broken by submission sequence. A multi-second
+//!   calibration round for device A therefore never delays inference
+//!   for device B behind it in the global queue — calibration cannot
+//!   starve inference — while within one device it cannot jump its own
+//!   program order.
+//! * **Micro-batching.** When an inference request is chosen, the run
+//!   of *consecutive* inference requests at the front of that device's
+//!   queue is coalesced into one work unit (up to `max_batch_samples`
+//!   input samples), so one backend dispatch — one crossbar-stack build,
+//!   one tiled matmul chain — serves many requests. The run stops at
+//!   the first maintenance request to preserve program order; the tail
+//!   batch is ragged (the native backend supports ragged batches).
+//! * **Bounded.** `submit` blocks while `capacity` requests are queued
+//!   (backpressure), so a fast client cannot grow the queue without
+//!   bound.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::anyhow::{bail, Result};
+use crate::calib::CalibConfig;
+
+/// Opaque id handed back by `Server::submit`; redeem with `Server::wait`.
+pub type Ticket = u64;
+
+/// What a request asks of one device.
+#[derive(Debug, Clone)]
+pub enum RequestKind {
+    /// Forward the given eval-split samples through the device (its
+    /// drifted crossbars + whatever adapter is installed in SRAM).
+    Infer { samples: Vec<usize> },
+    /// Run one feature-calibration round on `n_samples` fresh
+    /// calibration samples and install the resulting adapter in SRAM.
+    Calibrate { n_samples: usize, cfg: CalibConfig },
+    /// Advance the device's drift clock by `hours`.
+    Advance { hours: f64 },
+}
+
+/// The two priority lanes. `Inference` outranks `Maintenance`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lane {
+    Inference,
+    Maintenance,
+}
+
+impl RequestKind {
+    pub fn lane(&self) -> Lane {
+        match self {
+            RequestKind::Infer { .. } => Lane::Inference,
+            RequestKind::Calibrate { .. } | RequestKind::Advance { .. } => {
+                Lane::Maintenance
+            }
+        }
+    }
+
+    /// Input samples this request contributes to a micro-batch.
+    pub fn n_samples(&self) -> usize {
+        match self {
+            RequestKind::Infer { samples } => samples.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// One queued request.
+#[derive(Debug)]
+pub struct Pending {
+    pub ticket: Ticket,
+    /// global submission sequence (priority tie-break)
+    pub seq: u64,
+    pub kind: RequestKind,
+    pub submitted_at: Instant,
+}
+
+/// One unit of device work popped by a dispatch worker: a single
+/// maintenance request, or a coalesced run of inference requests.
+#[derive(Debug)]
+pub struct WorkUnit {
+    pub device: usize,
+    /// len > 1 only for micro-batched inference
+    pub items: Vec<Pending>,
+}
+
+/// Coalesce the run of consecutive inference requests at the front of
+/// `q` into one micro-batch of at most `max_samples` input samples.
+///
+/// The first request is always taken (an oversized single request still
+/// dispatches, as a ragged batch); later requests are added while they
+/// are inference and fit. The run stops at the first maintenance
+/// request so per-device program order survives batching.
+pub fn coalesce_inference(
+    q: &mut VecDeque<Pending>,
+    max_samples: usize,
+) -> Vec<Pending> {
+    let mut items: Vec<Pending> = Vec::new();
+    let mut total = 0usize;
+    while let Some(front) = q.front() {
+        if front.kind.lane() != Lane::Inference {
+            break;
+        }
+        let n = front.kind.n_samples();
+        if !items.is_empty() && total + n > max_samples {
+            break;
+        }
+        total += n;
+        items.push(q.pop_front().expect("front exists"));
+        if total >= max_samples {
+            break;
+        }
+    }
+    items
+}
+
+struct QueueState {
+    /// per-device FIFO of pending requests (program order)
+    per_device: Vec<VecDeque<Pending>>,
+    /// devices with an in-flight work unit
+    busy: Vec<bool>,
+    /// total queued requests (bound subject)
+    queued: usize,
+    next_seq: u64,
+    shutdown: bool,
+}
+
+/// The bounded two-lane queue `Server` dispatches from.
+pub struct SubmitQueue {
+    state: Mutex<QueueState>,
+    /// signalled when work may have become eligible
+    work: Condvar,
+    /// signalled when queue space frees up
+    space: Condvar,
+    capacity: usize,
+    max_batch_samples: usize,
+}
+
+impl SubmitQueue {
+    pub fn new(
+        n_devices: usize,
+        capacity: usize,
+        max_batch_samples: usize,
+    ) -> SubmitQueue {
+        SubmitQueue {
+            state: Mutex::new(QueueState {
+                per_device: (0..n_devices).map(|_| VecDeque::new()).collect(),
+                busy: vec![false; n_devices],
+                queued: 0,
+                next_seq: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            capacity: capacity.max(1),
+            max_batch_samples: max_batch_samples.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn max_batch_samples(&self) -> usize {
+        self.max_batch_samples
+    }
+
+    /// Currently queued (not yet popped) requests.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("queue lock").queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue a request for `device`, blocking while the queue is at
+    /// capacity. Errors after `shutdown` or for an unknown device.
+    pub fn submit(
+        &self,
+        device: usize,
+        ticket: Ticket,
+        kind: RequestKind,
+    ) -> Result<()> {
+        let mut st = self.state.lock().expect("queue lock");
+        if device >= st.per_device.len() {
+            bail!(
+                "device {device} out of range (fleet has {})",
+                st.per_device.len()
+            );
+        }
+        while st.queued >= self.capacity && !st.shutdown {
+            st = self.space.wait(st).expect("queue lock");
+        }
+        if st.shutdown {
+            bail!("submit after shutdown");
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.per_device[device].push_back(Pending {
+            ticket,
+            seq,
+            kind,
+            submitted_at: Instant::now(),
+        });
+        st.queued += 1;
+        drop(st);
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// Pop the next work unit, blocking until one is eligible. Returns
+    /// `None` once the queue is shut down and fully drained (in-flight
+    /// units may still be completing on other workers).
+    pub fn pop(&self) -> Option<WorkUnit> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            // best eligible device: non-busy, non-empty, ranked by
+            // (front lane, front seq)
+            let best = st
+                .per_device
+                .iter()
+                .enumerate()
+                .filter(|(d, q)| !st.busy[*d] && !q.is_empty())
+                .min_by_key(|(_, q)| {
+                    let front = q.front().expect("non-empty");
+                    (front.kind.lane(), front.seq)
+                })
+                .map(|(d, _)| d);
+            if let Some(d) = best {
+                let q = &mut st.per_device[d];
+                let items = if q.front().expect("non-empty").kind.lane()
+                    == Lane::Inference
+                {
+                    coalesce_inference(q, self.max_batch_samples)
+                } else {
+                    vec![q.pop_front().expect("non-empty")]
+                };
+                st.queued -= items.len();
+                st.busy[d] = true;
+                drop(st);
+                self.space.notify_all();
+                return Some(WorkUnit { device: d, items });
+            }
+            if st.shutdown && st.queued == 0 {
+                return None;
+            }
+            st = self.work.wait(st).expect("queue lock");
+        }
+    }
+
+    /// Mark `device`'s in-flight unit finished, making its next queued
+    /// request eligible.
+    pub fn complete(&self, device: usize) {
+        let mut st = self.state.lock().expect("queue lock");
+        st.busy[device] = false;
+        drop(st);
+        self.work.notify_all();
+    }
+
+    /// Stop accepting submissions; workers drain what is queued and
+    /// then `pop` returns `None`.
+    pub fn shutdown(&self) {
+        self.state.lock().expect("queue lock").shutdown = true;
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn infer(ticket: u64, seq: u64, n: usize) -> Pending {
+        Pending {
+            ticket,
+            seq,
+            kind: RequestKind::Infer { samples: (0..n).collect() },
+            submitted_at: Instant::now(),
+        }
+    }
+
+    fn advance(ticket: u64, seq: u64) -> Pending {
+        Pending {
+            ticket,
+            seq,
+            kind: RequestKind::Advance { hours: 1.0 },
+            submitted_at: Instant::now(),
+        }
+    }
+
+    fn tickets(items: &[Pending]) -> Vec<u64> {
+        items.iter().map(|p| p.ticket).collect()
+    }
+
+    #[test]
+    fn coalesce_merges_consecutive_inference_up_to_cap() {
+        let mut q: VecDeque<Pending> =
+            [infer(0, 0, 4), infer(1, 1, 4), infer(2, 2, 4), infer(3, 3, 4)]
+                .into_iter()
+                .collect();
+        let batch = coalesce_inference(&mut q, 8);
+        assert_eq!(tickets(&batch), vec![0, 1]);
+        assert_eq!(q.len(), 2, "rest stays queued");
+    }
+
+    #[test]
+    fn coalesce_keeps_ragged_tail() {
+        // 3 + 3 = 6 < cap 8, next (3) would overflow -> ragged 6-sample
+        // batch, not padded, not overfilled
+        let mut q: VecDeque<Pending> =
+            [infer(0, 0, 3), infer(1, 1, 3), infer(2, 2, 3)]
+                .into_iter()
+                .collect();
+        let batch = coalesce_inference(&mut q, 8);
+        assert_eq!(tickets(&batch), vec![0, 1]);
+        let n: usize = batch.iter().map(|p| p.kind.n_samples()).sum();
+        assert_eq!(n, 6);
+        // the leftover single request forms its own ragged batch
+        let tail = coalesce_inference(&mut q, 8);
+        assert_eq!(tickets(&tail), vec![2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn coalesce_stops_at_maintenance_to_preserve_program_order() {
+        let mut q: VecDeque<Pending> =
+            [infer(0, 0, 2), advance(1, 1), infer(2, 2, 2)]
+                .into_iter()
+                .collect();
+        let batch = coalesce_inference(&mut q, 100);
+        assert_eq!(tickets(&batch), vec![0], "must not batch across advance");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn coalesce_takes_oversized_first_request() {
+        let mut q: VecDeque<Pending> =
+            [infer(0, 0, 50), infer(1, 1, 1)].into_iter().collect();
+        let batch = coalesce_inference(&mut q, 8);
+        assert_eq!(tickets(&batch), vec![0], "oversized request dispatches alone");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn pop_prefers_inference_across_devices() {
+        let q = SubmitQueue::new(3, 64, 32);
+        // maintenance submitted FIRST, inference for other devices after
+        q.submit(0, 10, RequestKind::Calibrate {
+            n_samples: 4,
+            cfg: CalibConfig::default(),
+        })
+        .unwrap();
+        q.submit(1, 11, RequestKind::Infer { samples: vec![0, 1] }).unwrap();
+        q.submit(2, 12, RequestKind::Infer { samples: vec![2, 3] }).unwrap();
+        let u1 = q.pop().unwrap();
+        let u2 = q.pop().unwrap();
+        let u3 = q.pop().unwrap();
+        assert_eq!((u1.device, tickets(&u1.items)), (1, vec![11]));
+        assert_eq!((u2.device, tickets(&u2.items)), (2, vec![12]));
+        assert_eq!(
+            (u3.device, tickets(&u3.items)),
+            (0, vec![10]),
+            "calibration runs last even though it was submitted first"
+        );
+    }
+
+    #[test]
+    fn busy_device_holds_program_order() {
+        let q = SubmitQueue::new(2, 64, 32);
+        // device 0: calibrate then infer — the infer must NOT jump ahead
+        q.submit(0, 20, RequestKind::Calibrate {
+            n_samples: 4,
+            cfg: CalibConfig::default(),
+        })
+        .unwrap();
+        q.submit(0, 21, RequestKind::Infer { samples: vec![0] }).unwrap();
+        let u1 = q.pop().unwrap();
+        assert_eq!(tickets(&u1.items), vec![20], "program order within device");
+        // device 0 is now busy; its infer is ineligible until complete()
+        q.shutdown();
+        // only after completing the calibration does the infer surface
+        q.complete(0);
+        let u2 = q.pop().unwrap();
+        assert_eq!(tickets(&u2.items), vec![21]);
+        q.complete(0);
+        assert!(q.pop().is_none(), "drained + shutdown");
+    }
+
+    #[test]
+    fn shutdown_drains_then_ends() {
+        let q = SubmitQueue::new(1, 8, 4);
+        q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.shutdown();
+        assert!(q.submit(0, 2, RequestKind::Advance { hours: 1.0 }).is_err());
+        let u = q.pop().unwrap();
+        assert_eq!(tickets(&u.items), vec![1]);
+        q.complete(0);
+        assert!(q.pop().is_none());
+    }
+}

@@ -1,0 +1,366 @@
+//! Request-serving front-end: a blocking `submit`/`wait` API over one
+//! shared engine session, with dispatch workers pulled from the scoped
+//! thread pool (`util::threads`).
+//!
+//! Lifecycle: build a `Server` (deploys the fleet), then enter
+//! [`Server::serve`] — it spawns the dispatch workers on scoped
+//! threads, runs your client closure on the calling thread, and shuts
+//! the queue down (draining it) when the closure returns. Inside the
+//! closure, any thread with a `&Server` may `submit` requests and
+//! `wait` on tickets; responses are posted by whichever worker executed
+//! the unit.
+//!
+//! Workers execute one `WorkUnit` at a time: lock the device, run the
+//! (micro-batched) request(s), release the device via
+//! `SubmitQueue::complete`, post responses. Request validation happens
+//! at `submit` time; execution errors (which valid requests do not
+//! produce) still resolve the ticket, as `Response::Failed`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::anyhow::{bail, Result};
+
+use super::fleet::{gather_eval, Fleet};
+use super::queue::{Pending, RequestKind, SubmitQueue, Ticket, WorkUnit};
+use crate::coordinator::Session;
+use crate::model::AdapterKind;
+use crate::util::threads::{threads, ThreadPool};
+
+/// Serving-layer knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub n_devices: usize,
+    /// asymptotic relative drift programmed into every device
+    pub drift_rel: f64,
+    /// fleet deployment seed (per-device seeds derive from it)
+    pub seed: u64,
+    /// submission-queue bound (backpressure above this)
+    pub queue_capacity: usize,
+    /// micro-batch cap in input samples; 1 disables coalescing
+    pub max_batch_samples: usize,
+    /// Dispatch workers; 0 = auto (the process-wide `--threads`
+    /// setting, capped at 4). Dispatch workers *multiply* with the
+    /// compute pool: each worker executing a calibration or a batched
+    /// eval fans out again over `util::threads`, so an uncapped
+    /// auto-default would run up to `threads()^2` dense-math threads
+    /// and wreck the latency percentiles serving exists to report.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_devices: 8,
+            drift_rel: 0.2,
+            seed: 3,
+            queue_capacity: 256,
+            max_batch_samples: 32,
+            workers: 0,
+        }
+    }
+}
+
+/// What a resolved ticket redeems to.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Inference {
+        /// per-sample predicted classes, in request order
+        predictions: Vec<usize>,
+        /// how many matched the eval label
+        correct: usize,
+        latency_ns: u64,
+    },
+    Calibration {
+        sram_writes: u64,
+        rram_writes: u64,
+        latency_ns: u64,
+    },
+    Drift {
+        hours: f64,
+        latency_ns: u64,
+    },
+    /// Execution failed (never for a request that passed submit-time
+    /// validation; kept so a ticket always resolves).
+    Failed { error: String, latency_ns: u64 },
+}
+
+impl Response {
+    pub fn latency_ns(&self) -> u64 {
+        match self {
+            Response::Inference { latency_ns, .. }
+            | Response::Calibration { latency_ns, .. }
+            | Response::Drift { latency_ns, .. }
+            | Response::Failed { latency_ns, .. } => *latency_ns,
+        }
+    }
+}
+
+struct Results {
+    map: Mutex<BTreeMap<Ticket, Response>>,
+    ready: Condvar,
+}
+
+/// The serving subsystem: fleet + queue + result store.
+pub struct Server {
+    fleet: Fleet,
+    queue: SubmitQueue,
+    results: Results,
+    next_ticket: AtomicU64,
+    workers: usize,
+}
+
+impl Server {
+    /// Deploy a fleet over `session` and stand up the queue.
+    pub fn new(session: Arc<Session>, cfg: &ServeConfig) -> Result<Server> {
+        let fleet =
+            Fleet::deploy(session, cfg.n_devices, cfg.drift_rel, cfg.seed)?;
+        Ok(Server {
+            queue: SubmitQueue::new(
+                cfg.n_devices,
+                cfg.queue_capacity,
+                cfg.max_batch_samples,
+            ),
+            fleet,
+            results: Results {
+                map: Mutex::new(BTreeMap::new()),
+                ready: Condvar::new(),
+            },
+            next_ticket: AtomicU64::new(0),
+            workers: if cfg.workers == 0 {
+                threads().clamp(1, 4)
+            } else {
+                cfg.workers
+            },
+        })
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    pub fn session(&self) -> &Arc<Session> {
+        self.fleet.session()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Validate and enqueue a request for `device`; blocks while the
+    /// queue is at capacity. The ticket resolves via [`Server::wait`].
+    pub fn submit(&self, device: usize, kind: RequestKind) -> Result<Ticket> {
+        let session = self.fleet.session();
+        match &kind {
+            RequestKind::Infer { samples } => {
+                if samples.is_empty() {
+                    bail!("inference request with no samples");
+                }
+                let n = session.dataset.n_eval();
+                if let Some(&bad) = samples.iter().find(|&&s| s >= n) {
+                    bail!("eval sample {bad} out of range (split has {n})");
+                }
+            }
+            RequestKind::Calibrate { n_samples, cfg } => {
+                if *n_samples == 0 || *n_samples > session.dataset.n_calib() {
+                    bail!(
+                        "calibration wants {n_samples} samples, pool has {}",
+                        session.dataset.n_calib()
+                    );
+                }
+                if !session.spec.ranks.contains(&cfg.rank) {
+                    bail!(
+                        "rank {} not available for {} ({:?})",
+                        cfg.rank,
+                        session.spec.name,
+                        session.spec.ranks
+                    );
+                }
+                if cfg.kind == AdapterKind::Lora && !session.spec.with_lora {
+                    bail!("LoRA path not enabled for {}", session.spec.name);
+                }
+            }
+            RequestKind::Advance { hours } => {
+                if !hours.is_finite() || *hours < 0.0 {
+                    bail!("drift advance of {hours} hours");
+                }
+            }
+        }
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        self.queue.submit(device, ticket, kind)?;
+        Ok(ticket)
+    }
+
+    /// Block until `ticket` resolves; each ticket redeems exactly once.
+    pub fn wait(&self, ticket: Ticket) -> Response {
+        let mut map = self.results.map.lock().expect("results lock");
+        loop {
+            if let Some(r) = map.remove(&ticket) {
+                return r;
+            }
+            map = self.results.ready.wait(map).expect("results lock");
+        }
+    }
+
+    /// Run the serving loop: `workers` dispatch threads drain the queue
+    /// while `client` runs on the calling thread with full
+    /// `submit`/`wait` access. When `client` returns, the queue is shut
+    /// down, remaining work drains, workers join, and the client's
+    /// value is returned.
+    pub fn serve<R, F>(&self, client: F) -> R
+    where
+        F: FnOnce(&Server) -> R,
+    {
+        // shut the queue down even if the client unwinds: otherwise the
+        // scoped join would wait forever on workers blocked in pop()
+        // and a client panic would become a silent hang
+        struct ShutdownGuard<'a>(&'a SubmitQueue);
+        impl Drop for ShutdownGuard<'_> {
+            fn drop(&mut self) {
+                self.0.shutdown();
+            }
+        }
+        ThreadPool::new(self.workers).run_with(
+            |_worker| {
+                while let Some(unit) = self.queue.pop() {
+                    self.execute(unit);
+                }
+            },
+            || {
+                let _shutdown = ShutdownGuard(&self.queue);
+                client(self)
+            },
+        )
+    }
+
+    /// Execute one work unit on its (locked) device and post responses.
+    ///
+    /// Completion runs from a drop guard so that even a *panic* inside
+    /// execution frees the device and resolves every ticket as
+    /// `Failed`: a blocked `wait()` then wakes and the worker's panic
+    /// propagates through the scope join — fail fast, never a hang.
+    fn execute(&self, unit: WorkUnit) {
+        struct FinishGuard<'a> {
+            server: &'a Server,
+            device: usize,
+            items: Vec<Pending>,
+            responses: Option<Vec<(Ticket, Response)>>,
+        }
+        impl Drop for FinishGuard<'_> {
+            fn drop(&mut self) {
+                let responses = self.responses.take().unwrap_or_else(|| {
+                    self.items
+                        .iter()
+                        .map(|p| {
+                            (p.ticket, Response::Failed {
+                                error: "work unit panicked".to_string(),
+                                latency_ns: p.submitted_at.elapsed().as_nanos()
+                                    as u64,
+                            })
+                        })
+                        .collect()
+                });
+                self.server.queue.complete(self.device);
+                // avoid a double panic on a poisoned results lock while
+                // already unwinding
+                if let Ok(mut map) = self.server.results.map.lock() {
+                    map.extend(responses);
+                }
+                self.server.results.ready.notify_all();
+            }
+        }
+        let mut guard = FinishGuard {
+            server: self,
+            device: unit.device,
+            items: unit.items,
+            responses: None,
+        };
+        guard.responses = Some(match self.run_unit(guard.device, &guard.items)
+        {
+            Ok(rs) => rs,
+            Err(e) => {
+                // resolve every ticket in the failed unit
+                let msg = format!("{e:#}");
+                guard
+                    .items
+                    .iter()
+                    .map(|p| {
+                        (p.ticket, Response::Failed {
+                            error: msg.clone(),
+                            latency_ns: p.submitted_at.elapsed().as_nanos()
+                                as u64,
+                        })
+                    })
+                    .collect()
+            }
+        });
+    }
+
+    fn run_unit(
+        &self,
+        device: usize,
+        items: &[Pending],
+    ) -> Result<Vec<(Ticket, Response)>> {
+        let session = self.fleet.session().clone();
+        let mut dev = self.fleet.lock(device)?;
+
+        // maintenance units are always singletons (the queue never
+        // coalesces them)
+        if let [p] = items {
+            match &p.kind {
+                RequestKind::Calibrate { n_samples, cfg } => {
+                    let (sram, rram) =
+                        dev.calibrate(&session, *n_samples, cfg)?;
+                    return Ok(vec![(p.ticket, Response::Calibration {
+                        sram_writes: sram,
+                        rram_writes: rram,
+                        latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
+                    })]);
+                }
+                RequestKind::Advance { hours } => {
+                    dev.advance(*hours);
+                    return Ok(vec![(p.ticket, Response::Drift {
+                        hours: *hours,
+                        latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
+                    })]);
+                }
+                // single inference goes through the batched path below
+                RequestKind::Infer { .. } => {}
+            }
+        }
+
+        // inference unit (one request or a coalesced run): one stacked
+        // backend dispatch, predictions split back per request
+        let mut samples = Vec::new();
+        for p in items {
+            match &p.kind {
+                RequestKind::Infer { samples: s } => {
+                    samples.extend_from_slice(s)
+                }
+                _ => bail!("non-inference request in a micro-batch"),
+            }
+        }
+        let (x, labels) = gather_eval(&session.dataset, &samples)?;
+        let preds = dev.infer(&session, &x, &labels)?;
+        drop(dev);
+        let mut out = Vec::with_capacity(items.len());
+        let mut off = 0;
+        for p in items {
+            let n = p.kind.n_samples();
+            let part = &preds[off..off + n];
+            let correct = part
+                .iter()
+                .zip(&labels[off..off + n])
+                .filter(|(a, b)| *a == *b)
+                .count();
+            off += n;
+            out.push((p.ticket, Response::Inference {
+                predictions: part.to_vec(),
+                correct,
+                latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
+            }));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,209 @@
+//! Synthetic request traces and their replay: the `rimc serve` CLI and
+//! the `serving_throughput` bench drive the server with a seeded mix of
+//! inference, drift-advance and calibration requests, then report
+//! throughput, per-class latency percentiles and per-device
+//! accuracy-vs-drift.
+//!
+//! A trace is just `Vec<(device, RequestKind)>` in submission order —
+//! the same value feeds the threaded server replay and the serial
+//! per-device reference the determinism test compares against.
+
+use std::time::Instant;
+
+use crate::anyhow::Result;
+
+use super::fleet::DeviceStats;
+use super::queue::{Lane, RequestKind};
+use super::server::{Response, Server};
+use crate::calib::CalibConfig;
+use crate::metrics::LatencySummary;
+use crate::util::rng::Rng;
+
+/// Knobs for the synthetic request mix.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub n_requests: usize,
+    pub n_devices: usize,
+    /// inference requests carry 1..=max_infer_samples eval samples
+    pub max_infer_samples: usize,
+    /// every k-th request is a drift advance (0 disables)
+    pub advance_every: usize,
+    pub advance_hours: f64,
+    /// every k-th request is a calibration round (0 disables)
+    pub calibrate_every: usize,
+    /// calibration samples per round (the paper's 10-sample setting)
+    pub calib_samples: usize,
+    pub calib_cfg: CalibConfig,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            n_requests: 1000,
+            n_devices: 8,
+            max_infer_samples: 8,
+            advance_every: 25,
+            advance_hours: 40.0,
+            calibrate_every: 101,
+            calib_samples: 10,
+            calib_cfg: CalibConfig::default(),
+            seed: 0x7ace,
+        }
+    }
+}
+
+/// Generate a seeded trace over `n_eval` eval samples. Deterministic in
+/// the spec; device targets and sample picks are uniform.
+pub fn synth_trace(spec: &TraceSpec, n_eval: usize) -> Vec<(usize, RequestKind)> {
+    assert!(n_eval > 0, "empty eval split");
+    let mut rng = Rng::new(spec.seed);
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for i in 1..=spec.n_requests {
+        let device = rng.below(spec.n_devices);
+        let kind = if spec.calibrate_every > 0 && i % spec.calibrate_every == 0
+        {
+            RequestKind::Calibrate {
+                n_samples: spec.calib_samples,
+                cfg: spec.calib_cfg.clone(),
+            }
+        } else if spec.advance_every > 0 && i % spec.advance_every == 0 {
+            RequestKind::Advance { hours: spec.advance_hours }
+        } else {
+            let n = 1 + rng.below(spec.max_infer_samples.max(1));
+            let samples = (0..n).map(|_| rng.below(n_eval)).collect();
+            RequestKind::Infer { samples }
+        };
+        out.push((device, kind));
+    }
+    out
+}
+
+/// Everything a replay measured.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub samples_inferred: u64,
+    pub inference_latency: LatencySummary,
+    pub maintenance_latency: LatencySummary,
+    pub devices: Vec<DeviceStats>,
+    /// fleet-wide RRAM write pulses since deployment — the invariant
+    pub rram_writes_in_field: u64,
+    pub sram_writes: u64,
+    pub failed: usize,
+}
+
+/// Replay `trace` through the server's dispatch workers and collect the
+/// per-ticket responses (submission order) plus the measured report.
+pub fn replay_collect(
+    server: &Server,
+    trace: &[(usize, RequestKind)],
+) -> Result<(TraceReport, Vec<Response>)> {
+    let t0 = Instant::now();
+    let responses: Result<Vec<Response>> = server.serve(|srv| {
+        // submit everything (backpressure via the bounded queue), then
+        // redeem tickets in order; workers drain concurrently
+        let mut tickets = Vec::with_capacity(trace.len());
+        for (device, kind) in trace {
+            tickets.push(srv.submit(*device, kind.clone())?);
+        }
+        Ok(tickets.into_iter().map(|t| srv.wait(t)).collect())
+    });
+    let responses = responses?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut infer_ns = Vec::new();
+    let mut maint_ns = Vec::new();
+    let mut samples_inferred = 0u64;
+    let mut failed = 0usize;
+    for (r, (_, kind)) in responses.iter().zip(trace) {
+        match r {
+            Response::Inference { predictions, latency_ns, .. } => {
+                samples_inferred += predictions.len() as u64;
+                infer_ns.push(*latency_ns);
+            }
+            Response::Calibration { latency_ns, .. }
+            | Response::Drift { latency_ns, .. } => maint_ns.push(*latency_ns),
+            Response::Failed { latency_ns, .. } => {
+                failed += 1;
+                match kind.lane() {
+                    Lane::Inference => infer_ns.push(*latency_ns),
+                    Lane::Maintenance => maint_ns.push(*latency_ns),
+                }
+            }
+        }
+    }
+    let devices = server.fleet().stats();
+    let report = TraceReport {
+        requests: trace.len(),
+        wall_s,
+        throughput_rps: trace.len() as f64 / wall_s.max(1e-12),
+        samples_inferred,
+        inference_latency: LatencySummary::from_ns(infer_ns),
+        maintenance_latency: LatencySummary::from_ns(maint_ns),
+        rram_writes_in_field: devices
+            .iter()
+            .map(|d| d.rram_writes_in_field)
+            .sum(),
+        sram_writes: devices.iter().map(|d| d.sram_writes).sum(),
+        devices,
+        failed,
+    };
+    Ok((report, responses))
+}
+
+/// Replay without keeping per-ticket responses.
+pub fn replay(
+    server: &Server,
+    trace: &[(usize, RequestKind)],
+) -> Result<TraceReport> {
+    Ok(replay_collect(server, trace)?.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_trace_is_seeded_and_mixed() {
+        let spec = TraceSpec {
+            n_requests: 100,
+            n_devices: 4,
+            ..TraceSpec::default()
+        };
+        let a = synth_trace(&spec, 64);
+        let b = synth_trace(&spec, 64);
+        assert_eq!(a.len(), 100);
+        for ((da, ka), (db, kb)) in a.iter().zip(&b) {
+            assert_eq!(da, db);
+            assert_eq!(ka.lane(), kb.lane());
+            assert_eq!(ka.n_samples(), kb.n_samples());
+        }
+        assert!(a.iter().all(|(d, _)| *d < 4));
+        let infer = a.iter().filter(|(_, k)| k.lane() == Lane::Inference).count();
+        assert!(infer > 50, "mostly inference ({infer}/100)");
+        assert!(infer < 100, "some maintenance");
+        // sample indices stay within the eval split
+        for (_, k) in &a {
+            if let RequestKind::Infer { samples } = k {
+                assert!(!samples.is_empty());
+                assert!(samples.iter().all(|&s| s < 64));
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_lanes_yield_pure_inference() {
+        let spec = TraceSpec {
+            n_requests: 40,
+            n_devices: 2,
+            advance_every: 0,
+            calibrate_every: 0,
+            ..TraceSpec::default()
+        };
+        let t = synth_trace(&spec, 16);
+        assert!(t.iter().all(|(_, k)| k.lane() == Lane::Inference));
+    }
+}

@@ -107,6 +107,34 @@ impl ThreadPool {
             .collect()
     }
 
+    /// Run `worker(i)` on every pool thread while `main` runs on the
+    /// caller's thread; returns `main`'s value after every worker has
+    /// exited. This is the serving dispatch shape: long-lived workers
+    /// pulling from a shared queue while the caller produces work and
+    /// awaits results, with scoped borrows (no `'static` bounds, no
+    /// channels).
+    ///
+    /// `main` must arrange for the workers to return (e.g. shut the
+    /// shared queue down) before it returns, or the scope join blocks
+    /// forever. Worker panics propagate to the caller.
+    pub fn run_with<R, W, M>(&self, worker: W, main: M) -> R
+    where
+        W: Fn(usize) + Sync,
+        M: FnOnce() -> R,
+    {
+        let worker = &worker;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..self.workers)
+                .map(|i| s.spawn(move || worker(i)))
+                .collect();
+            let out = main();
+            for h in handles {
+                h.join().expect("pool worker panicked");
+            }
+            out
+        })
+    }
+
     /// Fallible `map`: runs every item, then returns the first error in
     /// **input order** (not completion order), so failures are as
     /// deterministic as successes.
@@ -161,6 +189,31 @@ mod tests {
     fn empty_input_is_fine() {
         let items: Vec<usize> = Vec::new();
         assert!(ThreadPool::new(4).map(&items, |&i| i).is_empty());
+    }
+
+    #[test]
+    fn run_with_joins_workers_and_returns_main_value() {
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        let stop = AtomicBool::new(false);
+        let polls = AtomicUsize::new(0);
+        let out = ThreadPool::new(3).run_with(
+            |_i| {
+                while !stop.load(Ordering::SeqCst) {
+                    polls.fetch_add(1, Ordering::SeqCst);
+                    std::thread::yield_now();
+                }
+            },
+            || {
+                stop.store(true, Ordering::SeqCst);
+                42
+            },
+        );
+        assert_eq!(out, 42);
+        // after run_with returns, all workers have observed stop and
+        // joined; the counter no longer moves
+        let frozen = polls.load(Ordering::SeqCst);
+        std::thread::yield_now();
+        assert_eq!(polls.load(Ordering::SeqCst), frozen);
     }
 
     #[test]

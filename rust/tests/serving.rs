@@ -1,0 +1,215 @@
+//! Serving-layer integration tests: priority ordering under contention,
+//! bounded-queue backpressure, and the headline determinism claim —
+//! threaded, micro-batched serving returns bitwise the same results as
+//! serial per-device execution, with zero RRAM write attempts from
+//! field traffic.
+
+use rimc_dora::calib::CalibConfig;
+use rimc_dora::coordinator::Engine;
+use rimc_dora::serve::{
+    gather_eval, replay_collect, synth_trace, Fleet, RequestKind, Response,
+    ServeConfig, Server, SubmitQueue, TraceSpec,
+};
+
+fn assert_send_sync<T: Send + Sync>() {}
+
+#[test]
+fn server_is_send_sync() {
+    // compile-time: the whole serving stack can be shared across the
+    // dispatch workers and any number of client threads
+    assert_send_sync::<Server>();
+    assert_send_sync::<Fleet>();
+    assert_send_sync::<SubmitQueue>();
+}
+
+/// Deterministic contention: everything queued before the first pop, so
+/// the dispatch order is exactly the scheduling contract — inference
+/// first across devices, per-device program order never violated.
+#[test]
+fn priority_ordering_under_contention() {
+    let cal = || RequestKind::Calibrate {
+        n_samples: 4,
+        cfg: CalibConfig::default(),
+    };
+    let inf = |s: usize| RequestKind::Infer { samples: vec![s] };
+    let q = SubmitQueue::new(4, 64, 8);
+    q.submit(0, 0, cal()).unwrap(); // d0: calibrate, then infer
+    q.submit(0, 1, inf(0)).unwrap();
+    q.submit(1, 2, inf(1)).unwrap(); // d1: two infers -> one micro-batch
+    q.submit(1, 3, inf(2)).unwrap();
+    q.submit(2, 4, RequestKind::Advance { hours: 5.0 }).unwrap(); // d2
+    q.submit(2, 5, inf(3)).unwrap();
+    q.submit(3, 6, inf(4)).unwrap(); // d3
+    q.shutdown();
+
+    let mut order: Vec<Vec<u64>> = Vec::new();
+    while let Some(unit) = q.pop() {
+        order.push(unit.items.iter().map(|p| p.ticket).collect());
+        q.complete(unit.device);
+    }
+    assert_eq!(order, vec![
+        vec![2, 3], // earliest eligible inference, coalesced (d1)
+        vec![6],    // next inference (d3); d0/d2 heads are maintenance
+        vec![0],    // maintenance by submission order: d0 calibration...
+        vec![1],    // ...which unblocks d0's inference (outranks d2)
+        vec![4],    // d2 advance
+        vec![5],    // d2 infer, behind its advance (program order)
+    ]);
+}
+
+/// A queue bound far below the trace length forces submit-side
+/// backpressure; everything still completes exactly once.
+#[test]
+fn bounded_queue_backpressure_completes() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let server = Server::new(session.clone(), &ServeConfig {
+        n_devices: 2,
+        workers: 2,
+        queue_capacity: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let spec = TraceSpec {
+        n_requests: 30,
+        n_devices: 2,
+        max_infer_samples: 4,
+        advance_every: 0,
+        calibrate_every: 0,
+        ..TraceSpec::default()
+    };
+    let trace = synth_trace(&spec, session.dataset.n_eval());
+    let (report, responses) = replay_collect(&server, &trace).unwrap();
+    assert_eq!(report.failed, 0);
+    assert_eq!(responses.len(), 30);
+    for (r, (_, kind)) in responses.iter().zip(&trace) {
+        match r {
+            Response::Inference { predictions, .. } => {
+                assert_eq!(predictions.len(), kind.n_samples());
+            }
+            other => panic!("pure-inference trace answered {other:?}"),
+        }
+    }
+}
+
+/// The headline test: a threaded, micro-batched replay of a mixed
+/// trace (inference + calibration + drift) is bitwise identical to
+/// executing the same trace serially, one request at a time, per
+/// device — predictions, device clocks, adapter tensors, accuracy
+/// counters — and field traffic issues zero RRAM write attempts while
+/// calibration writes SRAM.
+#[test]
+fn served_equals_serial_per_device_bitwise() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let n_devices = 4;
+    let spec = TraceSpec {
+        n_requests: 80,
+        n_devices,
+        max_infer_samples: 6,
+        advance_every: 9,
+        advance_hours: 30.0,
+        calibrate_every: 17,
+        calib_samples: 8,
+        calib_cfg: CalibConfig {
+            max_steps_per_layer: 20,
+            ..CalibConfig::default()
+        },
+        seed: 0xdead,
+    };
+    let trace = synth_trace(&spec, session.dataset.n_eval());
+
+    // threaded, micro-batched serve
+    let cfg = ServeConfig {
+        n_devices,
+        workers: 4,
+        max_batch_samples: 32,
+        queue_capacity: 16,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(session.clone(), &cfg).unwrap();
+    let (report, responses) = replay_collect(&server, &trace).unwrap();
+    assert_eq!(report.failed, 0);
+
+    // the zero-write invariant under mixed field traffic
+    assert_eq!(report.rram_writes_in_field, 0, "field traffic wrote RRAM");
+    assert!(report.sram_writes > 0, "calibrations must write SRAM");
+    assert!(
+        report.devices.iter().any(|d| d.calibrations > 0),
+        "trace exercised no calibration"
+    );
+
+    // serial per-device reference: identical fleet seeds (taken from
+    // the same config the server used), same per-device request
+    // order, one request per dispatch, no queue, no worker threads
+    let fleet =
+        Fleet::deploy(session.clone(), n_devices, cfg.drift_rel, cfg.seed)
+            .unwrap();
+    let mut serial: Vec<Option<Vec<usize>>> = Vec::with_capacity(trace.len());
+    for (d, kind) in &trace {
+        let mut dev = fleet.lock(*d).unwrap();
+        match kind {
+            RequestKind::Infer { samples } => {
+                let (x, labels) =
+                    gather_eval(&session.dataset, samples).unwrap();
+                serial.push(Some(dev.infer(&session, &x, &labels).unwrap()));
+            }
+            RequestKind::Calibrate { n_samples, cfg } => {
+                dev.calibrate(&session, *n_samples, cfg).unwrap();
+                serial.push(None);
+            }
+            RequestKind::Advance { hours } => {
+                dev.advance(*hours);
+                serial.push(None);
+            }
+        }
+    }
+
+    // per-request predictions must match bitwise
+    for (i, (resp, reference)) in responses.iter().zip(&serial).enumerate() {
+        match (resp, reference) {
+            (Response::Inference { predictions, .. }, Some(want)) => {
+                assert_eq!(predictions, want, "request {i} diverged");
+            }
+            (Response::Inference { .. }, None) => {
+                panic!("request {i}: class mismatch (served inference)")
+            }
+            (Response::Failed { error, .. }, _) => {
+                panic!("request {i} failed: {error}")
+            }
+            _ => {}
+        }
+    }
+
+    // per-device end state must match: drift clock, serving counters,
+    // wear, and the exact adapter tensors installed in SRAM
+    for d in 0..n_devices {
+        let served = server.fleet().lock(d).unwrap();
+        let want = fleet.lock(d).unwrap();
+        let (s, w) = (served.stats(), want.stats());
+        assert_eq!(s.hours, w.hours, "device {d} drift clock");
+        assert_eq!(s.inferred, w.inferred, "device {d} samples");
+        assert_eq!(s.correct, w.correct, "device {d} accuracy counter");
+        assert_eq!(s.calibrations, w.calibrations, "device {d} rounds");
+        assert_eq!(s.sram_writes, w.sram_writes, "device {d} SRAM wear");
+        assert_eq!(s.rram_reads, w.rram_reads, "device {d} read wear");
+        assert_eq!(s.rram_writes_in_field, 0, "device {d} wrote RRAM");
+        match (served.adapters(), want.adapters()) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.layers.len(), b.layers.len());
+                for (la, lb) in a.layers.iter().zip(&b.layers) {
+                    assert_eq!(la.a.tensor(), lb.a.tensor());
+                    assert_eq!(la.b.tensor(), lb.b.tensor());
+                    assert_eq!(la.m.tensor(), lb.m.tensor());
+                }
+                assert_eq!(a.head.a.tensor(), b.head.a.tensor());
+                assert_eq!(
+                    a.head.merged_meff().unwrap(),
+                    b.head.merged_meff().unwrap()
+                );
+            }
+            _ => panic!("device {d}: adapter presence diverges"),
+        }
+    }
+}
