@@ -10,6 +10,9 @@ use rimc_dora::util::bench::print_table;
 
 fn main() {
     let eng = Engine::native();
+    // train both teachers in parallel up front; the sweeps then fan out
+    // over drift seeds per row
+    eng.preload(&["nano", "micro"]).unwrap();
     let drifts = [0.0, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30];
     for model in ["nano", "micro"] {
         let t0 = Instant::now();

@@ -29,6 +29,7 @@ fn main() {
         ("micro", 4, vec![1, 10, 50, 125]),
     ];
 
+    eng.preload(&["nano", "micro"]).unwrap();
     for (model, rank, sizes) in plans {
         let t0 = Instant::now();
         let session = eng.session(model).unwrap();
@@ -39,7 +40,7 @@ fn main() {
             sizes,
             &CalibConfig::default(),
             &BackpropConfig::default(),
-            3,
+            &[3],
         )
         .unwrap();
         print_table(

@@ -11,11 +11,12 @@ use rimc_dora::util::bench::print_table;
 
 fn main() {
     let eng = Engine::native();
+    eng.preload(&["nano", "micro"]).unwrap();
     for model in ["nano", "micro"] {
         let t0 = Instant::now();
         let session = eng.session(model).unwrap();
         let rows =
-            fig5_rank_sweep(&session, 0.2, 10, &CalibConfig::default(), 3)
+            fig5_rank_sweep(&session, 0.2, 10, &CalibConfig::default(), &[3])
                 .unwrap();
         print_table(
             &format!(

@@ -2,22 +2,31 @@
 //! kernel class on the request path — single-layer forwards (the
 //! in-field inference path), the DoRA Adam step (the calibration inner
 //! loop), the backprop baseline step, the stacked full-model eval
-//! forward, the tiled-vs-naive matmul kernels, and the parallel batch
-//! eval multiplier (`--threads N` workers vs 1). Runs on the native
-//! backend, hermetically; rebuild with `--features pjrt` and use the
-//! CLI to compare against the artifact path.
+//! forward, the tiled-vs-naive matmul kernels, the serial-vs-parallel
+//! matmul size sweep, the parallel batch eval multiplier, the
+//! calibration-round throughput (layer-parallel vs serial), and an
+//! end-to-end calibrate+eval on the paper-scale `m20` preset. Runs on
+//! the native backend, hermetically; rebuild with `--features pjrt` and
+//! use the CLI to compare against the artifact path.
+//!
+//! Besides stdout, the measured configurations are written to
+//! `BENCH_runtime_hotpath.json` (op / preset / threads / wall-time /
+//! speedup) so the perf trajectory is tracked across PRs; CI
+//! schema-checks the file after the smoke runs.
 //!
 //! Flags (after `cargo bench --bench runtime_hotpath --`):
 //!   --smoke       1 iteration, no warmup, nano-scale eval (CI gate)
-//!   --threads N   worker count for the parallel-eval section (default 4)
+//!   --threads N   worker budget for the parallel sections (default 4)
 
-use rimc_dora::calib::CalibConfig;
+use std::time::Instant;
+
+use rimc_dora::calib::{CalibConfig, InputMode};
 use rimc_dora::coordinator::Engine;
 use rimc_dora::model::{AdapterKind, AdapterSet};
 use rimc_dora::runtime::{
     AdapterIo, Backend, BpState, LayerRole, NativeBackend, StepIo,
 };
-use rimc_dora::util::bench::Harness;
+use rimc_dora::util::bench::{write_bench_json, BenchRecord, Harness};
 use rimc_dora::util::cli::Args;
 use rimc_dora::util::tensor::Tensor;
 use rimc_dora::util::threads;
@@ -139,7 +148,9 @@ fn main() {
     });
 
     // -- matmul kernels (the per-batch multiplier: tiled vs naive,
-    //    fused-transpose vs materialized)
+    //    fused-transpose vs materialized); pinned to one thread so this
+    //    stays a *kernel* comparison — the parallel multiplier has its
+    //    own section below
     let (mm, mk, mn) = if smoke { (64, 64, 64) } else { (256, 256, 256) };
     let fill = |len: usize, salt: usize| -> Vec<f32> {
         (0..len)
@@ -148,6 +159,7 @@ fn main() {
     };
     let am = Tensor::new(vec![mm, mk], fill(mm * mk, 1)).unwrap();
     let bm = Tensor::new(vec![mk, mn], fill(mk * mn, 5)).unwrap();
+    threads::set_threads(1);
     h.bench(&format!("matmul {mm}x{mk}x{mn} (tiled)"), || {
         am.matmul(&bm).unwrap();
     });
@@ -160,9 +172,11 @@ fn main() {
     h.bench(&format!("transposed().matmul {mm}x{mk}x{mn}"), || {
         am.transposed().matmul(&bm).unwrap();
     });
+    threads::set_threads(0);
 
-    // -- parallel batch eval (the tentpole multiplier); micro is the
-    //    bench-scale subject, nano keeps the CI smoke run under a second
+    // -- parallel batch eval; micro is the bench-scale subject, nano
+    //    keeps the CI smoke run under a second
+    let mut records: Vec<BenchRecord> = Vec::new();
     let eval_model = if smoke { "nano" } else { "micro" };
     let esession = eng.session(eval_model).unwrap();
     let mut estudent = esession.drifted_student(0.2, 3).unwrap();
@@ -179,6 +193,54 @@ fn main() {
         },
     );
     threads::set_threads(0);
+    records.push(BenchRecord {
+        op: "student-eval".into(),
+        preset: eval_model.into(),
+        threads: 1,
+        wall_ns: t1,
+        speedup: 1.0,
+    });
+    records.push(BenchRecord {
+        op: "student-eval".into(),
+        preset: eval_model.into(),
+        threads: par_threads,
+        wall_ns: tn,
+        speedup: t1 / tn,
+    });
+
+    // -- matmul size sweep: the serial blocked kernel vs the
+    //    row-parallel one on square products (kernel-level speedup)
+    let mm_sizes: &[usize] = if smoke { &[128] } else { &[128, 256, 384] };
+    for &s in mm_sizes {
+        let a = Tensor::new(vec![s, s], fill(s * s, 9)).unwrap();
+        let b = Tensor::new(vec![s, s], fill(s * s, 13)).unwrap();
+        threads::set_threads(1);
+        let s1 = h.bench(&format!("matmul {s}x{s}x{s} (1 thread)"), || {
+            a.matmul(&b).unwrap();
+        });
+        threads::set_threads(par_threads);
+        let sn = h.bench(
+            &format!("matmul {s}x{s}x{s} ({par_threads} threads)"),
+            || {
+                a.matmul(&b).unwrap();
+            },
+        );
+        threads::set_threads(0);
+        records.push(BenchRecord {
+            op: format!("matmul{s}"),
+            preset: "-".into(),
+            threads: 1,
+            wall_ns: s1,
+            speedup: 1.0,
+        });
+        records.push(BenchRecord {
+            op: format!("matmul{s}"),
+            preset: "-".into(),
+            threads: par_threads,
+            wall_ns: sn,
+            speedup: s1 / sn,
+        });
+    }
 
     h.print_summary("backend hot paths (native)");
     println!(
@@ -186,4 +248,110 @@ fn main() {
          ({par_threads} threads vs 1)",
         t1 / tn
     );
+
+    // -- calibration-round throughput: a full feature-calibration round
+    //    in teacher-input mode, where the per-layer step loops fan out
+    //    layer-parallel on top of the row-parallel matmuls. Fixed work
+    //    per round (threshold 0 disables early exit) so serial and
+    //    parallel rounds run identical step counts.
+    let calib_model = if smoke { "nano" } else { "small" };
+    let csession = eng.session(calib_model).unwrap();
+    let mut cstudent = csession.drifted_student(0.2, 3).unwrap();
+    let (cx, cy) = csession.dataset.calib_subset(32).unwrap();
+    let ccfg = CalibConfig {
+        input_mode: InputMode::TeacherInput,
+        max_steps_per_layer: if smoke { 10 } else { 40 },
+        loss_threshold: 0.0,
+        ..CalibConfig::default()
+    };
+    let calibrator = csession.feature_calibrator(ccfg).unwrap();
+    let mut hc = Harness::new(
+        if smoke { 0 } else { 1 },
+        if smoke { 1 } else { 3 },
+    );
+    threads::set_threads(1);
+    let c1 = hc.bench(&format!("calib round [{calib_model}] (1 thread)"), || {
+        calibrator
+            .calibrate(&mut cstudent, &csession.teacher, &cx, &cy)
+            .unwrap();
+    });
+    threads::set_threads(par_threads);
+    let cn = hc.bench(
+        &format!("calib round [{calib_model}] ({par_threads} threads)"),
+        || {
+            calibrator
+                .calibrate(&mut cstudent, &csession.teacher, &cx, &cy)
+                .unwrap();
+        },
+    );
+    threads::set_threads(0);
+    records.push(BenchRecord {
+        op: "calib-round".into(),
+        preset: calib_model.into(),
+        threads: 1,
+        wall_ns: c1,
+        speedup: 1.0,
+    });
+    records.push(BenchRecord {
+        op: "calib-round".into(),
+        preset: calib_model.into(),
+        threads: par_threads,
+        wall_ns: cn,
+        speedup: c1 / cn,
+    });
+    hc.print_summary("calibration throughput (layer-parallel)");
+    println!(
+        "\ncalibration speedup [{calib_model}]: {:.2}x \
+         ({par_threads} threads vs 1)",
+        c1 / cn
+    );
+
+    // -- m20 end-to-end: the paper-scale preset must complete a
+    //    hermetic calibrate+eval (smoke-gated in CI). The zero-RRAM-
+    //    write invariant is asserted, not just reported.
+    threads::set_threads(par_threads);
+    let t0 = Instant::now();
+    let m20s = eng.session("m20").unwrap();
+    let teacher_s = t0.elapsed().as_secs_f64();
+    let mut m20student = m20s.drifted_student(0.2, 3).unwrap();
+    let ev20 = m20s.evaluator();
+    let pre = ev20.student(&mut m20student, &m20s.dataset).unwrap();
+    let (mx, my) = m20s.dataset.calib_subset(10).unwrap();
+    let cfg20 = CalibConfig {
+        max_steps_per_layer: if smoke { 60 } else { 150 },
+        ..CalibConfig::default()
+    };
+    let te = Instant::now();
+    let out20 = m20s
+        .feature_calibrator(cfg20)
+        .unwrap()
+        .calibrate(&mut m20student, &m20s.teacher, &mx, &my)
+        .unwrap();
+    let post = ev20
+        .calibrated(&mut m20student, &out20.adapters, &m20s.dataset)
+        .unwrap();
+    let e2e_ns = te.elapsed().as_nanos() as f64;
+    threads::set_threads(0);
+    assert_eq!(out20.cost.rram_writes, 0, "m20 calibration wrote RRAM");
+    assert!(
+        post >= pre - 0.10,
+        "m20 calibration regressed accuracy: pre {pre:.4} post {post:.4}"
+    );
+    println!(
+        "\nm20 end-to-end ({par_threads} threads): teacher {teacher_s:.1} s, \
+         calibrate+eval {:.2} s, accuracy {:.4} -> {:.4}",
+        e2e_ns / 1e9,
+        pre,
+        post
+    );
+    records.push(BenchRecord {
+        op: "calibrate+eval".into(),
+        preset: "m20".into(),
+        threads: par_threads,
+        wall_ns: e2e_ns,
+        speedup: 1.0,
+    });
+
+    let path = write_bench_json("runtime_hotpath", &records).unwrap();
+    println!("wrote {}", path.display());
 }

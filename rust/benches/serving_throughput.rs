@@ -19,6 +19,7 @@ use rimc_dora::coordinator::Engine;
 use rimc_dora::serve::{
     replay_collect, synth_trace, Response, ServeConfig, Server, TraceSpec,
 };
+use rimc_dora::util::bench::{write_bench_json, BenchRecord};
 use rimc_dora::util::cli::Args;
 use rimc_dora::util::threads;
 
@@ -118,5 +119,19 @@ fn main() {
          (coalescing up to {} samples per dispatch)",
         session.spec.eval_batch
     );
+
+    // machine-readable trajectory: one record per dispatch mode
+    let json_records: Vec<BenchRecord> = results
+        .iter()
+        .map(|(label, r)| BenchRecord {
+            op: format!("replay/{}", label.replace(' ', "-")),
+            preset: model.into(),
+            threads: workers,
+            wall_ns: r.wall_s * 1e9,
+            speedup: r.throughput_rps / results[0].1.throughput_rps,
+        })
+        .collect();
+    let path = write_bench_json("serving_throughput", &json_records).unwrap();
+    println!("wrote {}", path.display());
     threads::set_threads(0);
 }

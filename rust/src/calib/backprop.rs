@@ -5,6 +5,12 @@
 //! this method: we charge `total_devices` write pulses + 100 ns each per
 //! step, and physically reprogram the crossbars at the end (with
 //! write-verify noise) before evaluation.
+//!
+//! The step loop itself is sequentially dependent through the Adam
+//! state, so unlike the feature calibrator there is no layer- or
+//! batch-level fan-out here; this baseline still scales with cores
+//! because `bp_step` runs at the top of the thread budget and its
+//! full-width matmuls are row-parallel (`util::tensor`).
 
 use crate::anyhow::Result;
 

@@ -17,6 +17,15 @@
 //! accounting); RRAM arrays see reads only — never writes. This is the
 //! paper's entire point, and the cost struct returned here proves it
 //! with counters.
+//!
+//! Scheduling: the teacher-feature pass and the chain advance fan out
+//! per batch; in `TeacherInput` mode the per-layer step loops are
+//! independent and fan out per *layer* (one owned `AdapterState` per
+//! worker, fold-back in layer order); and the matmuls underneath are
+//! row-parallel. All levels draw on one shared thread budget
+//! (`util::threads::budget`) and every reduction is in input order, so
+//! parallel and serial calibration are bitwise identical
+//! (tests/parallel_calib.rs).
 
 use crate::anyhow::{bail, Result};
 
@@ -28,7 +37,7 @@ use crate::model::{
     TeacherModel,
 };
 use crate::runtime::{
-    AdapterIo, ArrayIo, Backend, LayerRole, StepIo, StepOutput,
+    AdapterIo, AdapterState, ArrayIo, Backend, LayerRole, StepIo, StepOutput,
 };
 use crate::util::tensor::Tensor;
 use crate::util::threads::ThreadPool;
@@ -131,31 +140,81 @@ impl<'a> FeatureCalibrator<'a> {
         let mut hs: Vec<Tensor> =
             batches.iter().map(|b| b.x_rows.clone()).collect();
         let mut traces = Vec::new();
-        let empty_meff = Tensor::zeros(vec![0]);
-        for l in 0..spec.n_blocks {
-            let trace = self.calibrate_layer(
-                student, &mut adapters, l, &batches, &tfeat, &hs,
-            )?;
-            traces.push(trace);
-            // advance student chain through the calibrated layer
-            let arr = student.block_io(l);
-            let la = &adapters.layers[l];
-            let meff = match self.cfg.kind {
-                AdapterKind::Dora => la.merged_meff()?,
-                AdapterKind::Lora => empty_meff.clone(),
-            };
-            let ad = AdapterIo {
-                a: la.a.tensor(),
-                b: la.b.tensor(),
-                meff: &meff,
-            };
-            hs = pool.try_map(&hs, |h| match self.cfg.kind {
-                AdapterKind::Dora => self.backend.dora_block(spec, h, &arr, ad),
-                AdapterKind::Lora => self.backend.lora_block(spec, h, &arr, ad),
-            })?;
-            // charged after the parallel section (workers never touch
-            // the wear counters)
-            student.blocks[l].count_read(n_chain_samples);
+        match self.cfg.input_mode {
+            // Sequential chaining: layer l's inputs are the calibrated
+            // chain through layers 0..l, so the step loops are
+            // inherently ordered. Parallelism here is per-batch (the
+            // chain advance) and per-kernel (row-banded matmul).
+            InputMode::Sequential => {
+                for l in 0..spec.n_blocks {
+                    let trace = self.calibrate_layer(
+                        student, &mut adapters, l, &batches, &tfeat, &hs,
+                    )?;
+                    traces.push(trace);
+                    hs = self.advance_chain(student, &adapters, l, hs)?;
+                    // charged after the parallel section (workers never
+                    // touch the wear counters)
+                    student.blocks[l].count_read(n_chain_samples);
+                }
+            }
+            // Teacher-input mode: every layer trains against teacher
+            // activations only, so the per-layer step loops are fully
+            // independent — fan them out over the pool, one owned
+            // adapter snapshot per worker, and fold back in layer order
+            // on this thread. Per-layer step counts, SRAM accounting
+            // and adapter bits are identical to the serial schedule
+            // (tests/parallel_calib.rs pins this down bitwise).
+            InputMode::TeacherInput => {
+                // jobs borrow the batch/teacher-feature tensors rather
+                // than cloning them per layer — only the per-array
+                // inputs are owned
+                let jobs: Vec<LayerJob<'_>> = (0..spec.n_blocks)
+                    .map(|l| LayerJob {
+                        l,
+                        arr: student.block_io(l),
+                        triples: batches
+                            .iter()
+                            .enumerate()
+                            .map(|(bi, b)| {
+                                let x_in = if l == 0 {
+                                    &b.x_rows
+                                } else {
+                                    &tfeat[bi][l - 1]
+                                };
+                                (x_in, &b.row_mask, &tfeat[bi][l])
+                            })
+                            .collect(),
+                    })
+                    .collect();
+                let runs = pool.try_map(&jobs, |job| {
+                    let la = &adapters.layers[job.l];
+                    self.run_layer_steps(
+                        LayerRole::Block,
+                        la.step_state(),
+                        la.t,
+                        &job.triples,
+                        &job.arr,
+                    )
+                })?;
+                for (job, run) in jobs.iter().zip(runs) {
+                    let steps = run.steps;
+                    let trace = self.apply_layer_run(
+                        &mut adapters.layers[job.l],
+                        run,
+                        &format!("block{}", job.l),
+                    )?;
+                    // one analog forward per step inside the step kernel
+                    student.blocks[job.l].count_read(steps as u64);
+                    traces.push(trace);
+                }
+                // the head still needs the calibrated student chain:
+                // advance it through every layer in order (per-batch
+                // parallel, as in sequential mode)
+                for l in 0..spec.n_blocks {
+                    hs = self.advance_chain(student, &adapters, l, hs)?;
+                    student.blocks[l].count_read(n_chain_samples);
+                }
+            }
         }
 
         // ---- 4. head
@@ -183,6 +242,9 @@ impl<'a> FeatureCalibrator<'a> {
         Ok(CalibOutcome { adapters, cost, traces })
     }
 
+    /// Sequential-mode per-layer step loop: inputs are the calibrated
+    /// student chain `hs` (the teacher-input mode builds its layer jobs
+    /// inline in `calibrate`, since its inputs need no chain).
     fn calibrate_layer(
         &self,
         student: &mut StudentModel,
@@ -193,21 +255,12 @@ impl<'a> FeatureCalibrator<'a> {
         hs: &[Tensor],
     ) -> Result<LayerTrace> {
         let arr = student.block_io(l);
-        // per-batch (x, mask, target) triples for this layer
-        let mut triples = Vec::with_capacity(batches.len());
-        for (bi, b) in batches.iter().enumerate() {
-            let x_in = match self.cfg.input_mode {
-                InputMode::Sequential => hs[bi].clone(),
-                InputMode::TeacherInput => {
-                    if l == 0 {
-                        batches[bi].x_rows.clone()
-                    } else {
-                        tfeat[bi][l - 1].clone()
-                    }
-                }
-            };
-            triples.push((x_in, b.row_mask.clone(), tfeat[bi][l].clone()));
-        }
+        // per-batch (x, mask, target) triples for this layer, borrowed
+        let triples: Vec<Triple<'_>> = batches
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| (&hs[bi], &b.row_mask, &tfeat[bi][l]))
+            .collect();
         let trace = self.run_layer_loop(
             LayerRole::Block,
             &mut adapters.layers[l],
@@ -220,6 +273,33 @@ impl<'a> FeatureCalibrator<'a> {
         Ok(trace)
     }
 
+    /// Advance the student activation chain through calibrated layer
+    /// `l` on every batch (per-batch parallel over the pool, results in
+    /// batch order). Read wear for the chain is charged by the caller.
+    fn advance_chain(
+        &self,
+        student: &StudentModel,
+        adapters: &AdapterSet,
+        l: usize,
+        hs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let arr = student.block_io(l);
+        let la = &adapters.layers[l];
+        let meff = match self.cfg.kind {
+            AdapterKind::Dora => la.merged_meff()?,
+            AdapterKind::Lora => Tensor::zeros(vec![0]),
+        };
+        let ad = AdapterIo { a: la.a.tensor(), b: la.b.tensor(), meff: &meff };
+        ThreadPool::global().try_map(&hs, |h| match self.cfg.kind {
+            AdapterKind::Dora => {
+                self.backend.dora_block(self.spec, h, &arr, ad)
+            }
+            AdapterKind::Lora => {
+                self.backend.lora_block(self.spec, h, &arr, ad)
+            }
+        })
+    }
+
     fn calibrate_head(
         &self,
         student: &mut StudentModel,
@@ -229,12 +309,10 @@ impl<'a> FeatureCalibrator<'a> {
         hs: &[Tensor],
     ) -> Result<LayerTrace> {
         let arr = student.head_io();
-        let triples: Vec<(Tensor, Tensor, Tensor)> = batches
+        let triples: Vec<Triple<'_>> = batches
             .iter()
             .enumerate()
-            .map(|(bi, b)| {
-                (hs[bi].clone(), b.sample_mask.clone(), tlogits[bi].clone())
-            })
+            .map(|(bi, b)| (&hs[bi], &b.sample_mask, &tlogits[bi]))
             .collect();
         let trace = self.run_layer_loop(
             LayerRole::Head,
@@ -256,30 +334,48 @@ impl<'a> FeatureCalibrator<'a> {
         &self,
         role: LayerRole,
         la: &mut LayerAdapter,
-        triples: &[(Tensor, Tensor, Tensor)],
+        triples: &[Triple<'_>],
         arr: &ArrayIo,
         label: &str,
     ) -> Result<LayerTrace> {
+        let run = self.run_layer_steps(role, la.step_state(), la.t, triples, arr)?;
+        self.apply_layer_run(la, run, label)
+    }
+
+    /// The pure step loop: threads `AdapterState` through the backend
+    /// step kernel until the loss threshold or step cap. Touches no
+    /// shared state (the adapter snapshot is owned, the array inputs
+    /// are borrowed read-only), which is what lets the layer-parallel
+    /// path run one of these per pool worker.
+    fn run_layer_steps(
+        &self,
+        role: LayerRole,
+        st: AdapterState,
+        t0: f64,
+        triples: &[Triple<'_>],
+        arr: &ArrayIo,
+    ) -> Result<LayerRun> {
         let is_dora = self.cfg.kind == AdapterKind::Dora;
-        let mut st = la.step_state();
+        let mut st = st;
+        let mut t = t0;
         let mut first_loss = f64::NAN;
         let mut last_loss = f64::NAN;
         let mut last_n: Option<Tensor> = None;
         let mut steps = 0usize;
         'outer: for _epoch in 0..self.cfg.max_steps_per_layer {
-            for (x, mask, target) in triples {
+            for &(x, mask, target) in triples {
                 if steps >= self.cfg.max_steps_per_layer {
                     break 'outer;
                 }
-                la.t += 1.0;
+                t += 1.0;
                 let io = StepIo { x, mask, target };
                 let StepOutput { loss, colnorm } = if is_dora {
                     self.backend.dora_step(
-                        self.spec, role, io, arr, &mut st, la.t, self.cfg.lr,
+                        self.spec, role, io, arr, &mut st, t, self.cfg.lr,
                     )?
                 } else {
                     self.backend.lora_step(
-                        self.spec, role, io, arr, &mut st, la.t, self.cfg.lr,
+                        self.spec, role, io, arr, &mut st, t, self.cfg.lr,
                     )?
                 };
                 if colnorm.is_some() {
@@ -295,31 +391,67 @@ impl<'a> FeatureCalibrator<'a> {
                 }
             }
         }
+        Ok(LayerRun { st, t, steps, first_loss, last_loss, last_n })
+    }
 
-        // fold results back into the SRAM-accounted host state; wear =
-        // one full rewrite of every parameter word per step
-        if steps > 0 {
-            la.a.charge_step_writes(steps as u64 - 1);
-            la.b.charge_step_writes(steps as u64 - 1);
-            la.a.store(st.a)?;
-            la.b.store(st.b)?;
-            la.ma = st.ma;
-            la.va = st.va;
-            la.mb = st.mb;
-            la.vb = st.vb;
+    /// Fold a finished step loop back into the SRAM-accounted adapter;
+    /// wear = one full rewrite of every parameter word per step. Runs
+    /// on the caller's thread, in layer order, so SRAM accounting and
+    /// traces are identical however the step loops were scheduled.
+    fn apply_layer_run(
+        &self,
+        la: &mut LayerAdapter,
+        run: LayerRun,
+        label: &str,
+    ) -> Result<LayerTrace> {
+        let is_dora = self.cfg.kind == AdapterKind::Dora;
+        la.t = run.t;
+        if run.steps > 0 {
+            la.a.charge_step_writes(run.steps as u64 - 1);
+            la.b.charge_step_writes(run.steps as u64 - 1);
+            la.a.store(run.st.a)?;
+            la.b.store(run.st.b)?;
+            la.ma = run.st.ma;
+            la.va = run.st.va;
+            la.mb = run.st.mb;
+            la.vb = run.st.vb;
             if is_dora {
-                la.m.charge_step_writes(steps as u64 - 1);
-                la.m.store(st.m)?;
-                la.mm = st.mm;
-                la.vm = st.vm;
-                la.last_n = last_n;
+                la.m.charge_step_writes(run.steps as u64 - 1);
+                la.m.store(run.st.m)?;
+                la.mm = run.st.mm;
+                la.vm = run.st.vm;
+                la.last_n = run.last_n;
             }
         }
         Ok(LayerTrace {
             layer: label.to_string(),
-            steps,
-            first_loss,
-            last_loss,
+            steps: run.steps,
+            first_loss: run.first_loss,
+            last_loss: run.last_loss,
         })
     }
+}
+
+/// Final state of one layer's step loop, before fold-back into the
+/// SRAM-accounted adapter.
+struct LayerRun {
+    st: AdapterState,
+    t: f64,
+    steps: usize,
+    first_loss: f64,
+    last_loss: f64,
+    last_n: Option<Tensor>,
+}
+
+/// One step minibatch for a layer loop: (input rows, mask, target),
+/// borrowed from the batch set / teacher features / activation chain.
+type Triple<'a> = (&'a Tensor, &'a Tensor, &'a Tensor);
+
+/// Everything one teacher-input layer step loop needs: the owned array
+/// inputs plus borrowed step triples — a pool worker runs it without
+/// touching the student or (mutably) the adapter set.
+struct LayerJob<'a> {
+    l: usize,
+    arr: ArrayIo,
+    triples: Vec<Triple<'a>>,
 }

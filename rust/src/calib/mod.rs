@@ -24,7 +24,9 @@ use crate::model::AdapterKind;
 /// end-to-end): layer `l` sees the *calibrated student's* own activation
 /// chain, so earlier corrections propagate.
 /// `TeacherInput` (ablation): every layer sees the teacher's activation,
-/// layers calibrate fully independently.
+/// layers calibrate fully independently — which is why this mode's step
+/// loops fan out layer-parallel over the thread pool (bitwise equal to
+/// the serial schedule; see `FeatureCalibrator`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InputMode {
     Sequential,

@@ -186,6 +186,17 @@ impl Engine {
         Ok(Arc::new(self.session(model)?))
     }
 
+    /// Warm the session cache for several models at once, fanning the
+    /// expensive first-session work (dataset synthesis + teacher
+    /// training on native engines) out over the thread pool. The
+    /// multi-model benches call this so model startup overlaps instead
+    /// of serializing; later `session()` calls hit the cache.
+    pub fn preload(&self, models: &[&str]) -> Result<()> {
+        crate::util::threads::ThreadPool::global()
+            .try_map(models, |m| self.session(m).map(|_| ()))?;
+        Ok(())
+    }
+
     #[cfg(feature = "pjrt")]
     fn pjrt_session(&self, model: &str) -> Result<Session> {
         let store = self.store()?;

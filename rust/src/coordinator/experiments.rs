@@ -1,13 +1,21 @@
 //! Experiment harness: one function per paper figure/table. Each returns
 //! structured rows; the bench targets and the CLI print them. The
 //! pass-criteria (who wins, trends) live in rust/tests/experiments.rs.
+//!
+//! Sweeps that repeat per drift seed (fig2 / fig4 / fig5) fan the seeds
+//! out over the shared thread pool: each worker programs its own
+//! student (and runs its own calibration) against the shared `Session`,
+//! and per-seed results reduce in seed order — so multi-threaded sweep
+//! rows are bitwise identical to serial ones, at `min(seeds, budget)`
+//! times the throughput.
 
-use crate::anyhow::Result;
+use crate::anyhow::{bail, Result};
 
 use super::engine::Session;
 use crate::calib::{BackpropConfig, CalibConfig};
 use crate::device::constants;
 use crate::model::AdapterKind;
+use crate::util::threads::ThreadPool;
 
 // ---------------------------------------------------------------------
 // Fig. 2 — accuracy vs relative drift, no calibration
@@ -27,15 +35,19 @@ pub fn fig2_drift_sweep(
     drifts: &[f64],
     seeds: &[u64],
 ) -> Result<Vec<Fig2Row>> {
+    if seeds.is_empty() {
+        bail!("fig2 drift sweep needs at least one drift seed");
+    }
     let ev = session.evaluator();
     let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
+    let pool = ThreadPool::global();
     let mut rows = Vec::new();
     for &rel in drifts {
-        let mut accs = Vec::new();
-        for &seed in seeds {
+        // one independent drifted student per seed, fanned out
+        let accs = pool.try_map(seeds, |&seed| {
             let mut student = session.drifted_student(rel, seed)?;
-            accs.push(ev.student(&mut student, &session.dataset)?);
-        }
+            ev.student(&mut student, &session.dataset)
+        })?;
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;
         rows.push(Fig2Row {
             rel_drift: rel,
@@ -60,6 +72,9 @@ pub struct Fig4Row {
     pub pre_calib_acc: f64,
 }
 
+/// Each row averages both methods over `seeds` (one drifted student per
+/// seed, feature-DoRA and backprop on identically-drifted copies); the
+/// per-seed runs fan out over the thread pool.
 #[allow(clippy::too_many_arguments)]
 pub fn fig4_dataset_size_sweep(
     session: &Session,
@@ -68,39 +83,47 @@ pub fn fig4_dataset_size_sweep(
     sizes: &[usize],
     calib_cfg: &CalibConfig,
     bp_cfg: &BackpropConfig,
-    seed: u64,
+    seeds: &[u64],
 ) -> Result<Vec<Fig4Row>> {
+    if seeds.is_empty() {
+        bail!("fig4 dataset-size sweep needs at least one drift seed");
+    }
     let ev = session.evaluator();
+    let pool = ThreadPool::global();
     let mut rows = Vec::new();
     for &n in sizes {
         let (x, y) = session.dataset.calib_subset(n)?;
+        let per_seed = pool.try_map(seeds, |&seed| {
+            // feature-based DoRA
+            let mut student = session.drifted_student(rel_drift, seed)?;
+            let pre = ev.student(&mut student, &session.dataset)?;
+            let cfg = CalibConfig { rank, ..calib_cfg.clone() };
+            let calibrator = session.feature_calibrator(cfg)?;
+            let outcome = calibrator.calibrate(
+                &mut student,
+                &session.teacher,
+                &x,
+                &y,
+            )?;
+            let dora_acc = ev.calibrated(
+                &mut student,
+                &outcome.adapters,
+                &session.dataset,
+            )?;
 
-        // feature-based DoRA
-        let mut student = session.drifted_student(rel_drift, seed)?;
-        let pre = ev.student(&mut student, &session.dataset)?;
-        let cfg = CalibConfig { rank, ..calib_cfg.clone() };
-        let calibrator = session.feature_calibrator(cfg)?;
-        let outcome = calibrator.calibrate(
-            &mut student,
-            &session.teacher,
-            &x,
-            &y,
-        )?;
-        let dora_acc =
-            ev.calibrated(&mut student, &outcome.adapters, &session.dataset)?;
-
-        // backprop baseline on an identically-drifted student
-        let mut student_bp = session.drifted_student(rel_drift, seed)?;
-        let bp = session.backprop_calibrator(bp_cfg.clone());
-        let bp_out = bp.calibrate(&mut student_bp, &session.teacher, &x, &y)?;
-        let bp_acc = ev.student(&mut student_bp, &session.dataset)?;
-        let _ = bp_out;
-
+            // backprop baseline on an identically-drifted student
+            let mut student_bp = session.drifted_student(rel_drift, seed)?;
+            let bp = session.backprop_calibrator(bp_cfg.clone());
+            bp.calibrate(&mut student_bp, &session.teacher, &x, &y)?;
+            let bp_acc = ev.student(&mut student_bp, &session.dataset)?;
+            Ok::<_, crate::anyhow::Error>((dora_acc, bp_acc, pre))
+        })?;
+        let k = per_seed.len() as f64;
         rows.push(Fig4Row {
             n_samples: n,
-            feature_dora_acc: dora_acc,
-            backprop_acc: bp_acc,
-            pre_calib_acc: pre,
+            feature_dora_acc: per_seed.iter().map(|r| r.0).sum::<f64>() / k,
+            backprop_acc: per_seed.iter().map(|r| r.1).sum::<f64>() / k,
+            pre_calib_acc: per_seed.iter().map(|r| r.2).sum::<f64>() / k,
         });
     }
     Ok(rows)
@@ -118,30 +141,43 @@ pub struct Fig5Row {
     pub pre_calib_acc: f64,
 }
 
+/// Accuracy per rank, averaged over `seeds` (per-seed calibrations fan
+/// out over the thread pool).
 pub fn fig5_rank_sweep(
     session: &Session,
     rel_drift: f64,
     n_samples: usize,
     calib_cfg: &CalibConfig,
-    seed: u64,
+    seeds: &[u64],
 ) -> Result<Vec<Fig5Row>> {
+    if seeds.is_empty() {
+        bail!("fig5 rank sweep needs at least one drift seed");
+    }
     let ev = session.evaluator();
     let (x, y) = session.dataset.calib_subset(n_samples)?;
+    let pool = ThreadPool::global();
     let mut rows = Vec::new();
     for &rank in &session.spec.ranks.clone() {
-        let mut student = session.drifted_student(rel_drift, seed)?;
-        let pre = ev.student(&mut student, &session.dataset)?;
-        let cfg = CalibConfig { rank, ..calib_cfg.clone() };
-        let calibrator = session.feature_calibrator(cfg)?;
-        let outcome =
-            calibrator.calibrate(&mut student, &session.teacher, &x, &y)?;
-        let acc =
-            ev.calibrated(&mut student, &outcome.adapters, &session.dataset)?;
+        let per_seed = pool.try_map(seeds, |&seed| {
+            let mut student = session.drifted_student(rel_drift, seed)?;
+            let pre = ev.student(&mut student, &session.dataset)?;
+            let cfg = CalibConfig { rank, ..calib_cfg.clone() };
+            let calibrator = session.feature_calibrator(cfg)?;
+            let outcome =
+                calibrator.calibrate(&mut student, &session.teacher, &x, &y)?;
+            let acc = ev.calibrated(
+                &mut student,
+                &outcome.adapters,
+                &session.dataset,
+            )?;
+            Ok::<_, crate::anyhow::Error>((acc, pre))
+        })?;
+        let k = per_seed.len() as f64;
         rows.push(Fig5Row {
             rank,
-            accuracy: acc,
+            accuracy: per_seed.iter().map(|r| r.0).sum::<f64>() / k,
             gamma: session.spec.gamma(rank),
-            pre_calib_acc: pre,
+            pre_calib_acc: per_seed.iter().map(|r| r.1).sum::<f64>() / k,
         });
     }
     Ok(rows)

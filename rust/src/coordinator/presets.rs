@@ -18,7 +18,7 @@ pub struct NativePreset {
 
 /// All built-in native models, default first.
 pub fn native_presets() -> Vec<NativePreset> {
-    vec![nano(), micro(), small()]
+    vec![nano(), micro(), small(), m20()]
 }
 
 #[cfg(test)]
@@ -45,6 +45,7 @@ mod tests {
             ("nano".to_string(), 4, 16, 8),
             ("micro".to_string(), 6, 32, 10),
             ("small".to_string(), 10, 64, 10),
+            ("m20".to_string(), 20, 64, 10),
         ]);
     }
 
@@ -139,10 +140,9 @@ pub fn micro() -> NativePreset {
 }
 
 /// `small` — 10 residual blocks x width 64, 10 classes: half the paper's
-/// m20 scale (20 x 64) and the largest hermetic preset. Impractical on
-/// the serial naive-matmul path; with the tiled kernel + parallel batch
-/// eval it trains in ~10 s and evaluates interactively, which is the
-/// point — the next step in this column is m20 itself.
+/// m20 scale (20 x 64). Impractical on the serial naive-matmul path;
+/// with the tiled kernel + parallel batch eval it trains in ~10 s and
+/// evaluates interactively.
 pub fn small() -> NativePreset {
     NativePreset {
         spec: ModelSpec {
@@ -172,6 +172,52 @@ pub fn small() -> NativePreset {
         },
         train: TrainConfig {
             epochs: 15,
+            batch: 32,
+            lr: 2e-3,
+            init_gain: 2.2,
+            seed: 7,
+        },
+    }
+}
+
+/// `m20` — 20 residual blocks x width 64, 10 classes: the paper-scale
+/// ResNet-20 analogue (what the PJRT artifact manifest calls m20) and
+/// the largest hermetic preset. Twice `small`'s depth, it leans on the
+/// full parallel stack — threaded matmul for the teacher, layer/seed-
+/// parallel calibration, parallel batch eval — to stay interactive;
+/// serial it is strictly a batch job. Init follows the residual
+/// `1/sqrt(d*L)` scheme, so the extra depth needs no retuning; the
+/// slightly shorter epoch budget reflects the deeper net's larger
+/// per-epoch step count at equal data.
+pub fn m20() -> NativePreset {
+    NativePreset {
+        spec: ModelSpec {
+            name: "m20".into(),
+            n_blocks: 20,
+            width: 64,
+            n_classes: 10,
+            ranks: vec![1, 2, 4, 8, 16],
+            with_lora: true,
+            teacher_acc: 0.0,
+            bundle_file: String::new(),
+            tokens: 4,
+            step_batch: 16,
+            eval_batch: 32,
+        },
+        data: SynthSpec {
+            dim: 64,
+            n_classes: 10,
+            tokens: 4,
+            n_train: 2048,
+            n_calib: 256,
+            n_eval: 512,
+            noise: 0.55,
+            token_jitter: 0.45,
+            n_dirs: 4,
+            seed: 130,
+        },
+        train: TrainConfig {
+            epochs: 12,
             batch: 32,
             lr: 2e-3,
             init_gain: 2.2,

@@ -8,7 +8,9 @@ use crate::anyhow::Result;
 
 use super::engine::Session;
 use crate::calib::CalibConfig;
+use crate::device::DriftModel;
 use crate::model::StudentModel;
+use crate::util::threads::ThreadPool;
 
 /// When to recalibrate.
 #[derive(Debug, Clone, Copy)]
@@ -105,5 +107,27 @@ impl<'s> RecalibrationScheduler<'s> {
             });
         }
         Ok(events)
+    }
+
+    /// Run one independent timeline per drift seed — each seed programs
+    /// its own student at `rel_drift` and lives through the same
+    /// checkpoint schedule — fanned out over the shared thread pool
+    /// (the fleet-study shape: how does the *distribution* of device
+    /// lifecycles look, not one device's). Event logs return in seed
+    /// order and are bitwise identical to running each timeline
+    /// serially, since timelines share nothing mutable.
+    pub fn run_seeds(
+        &self,
+        rel_drift: f64,
+        seeds: &[u64],
+        step_hours: f64,
+        checkpoints: usize,
+    ) -> Result<Vec<Vec<SchedulerEvent>>> {
+        ThreadPool::global().try_map(seeds, |&seed| {
+            let mut student = self
+                .session
+                .program_student(DriftModel::with_rel(rel_drift), seed)?;
+            self.run(&mut student, step_hours, checkpoints)
+        })
     }
 }

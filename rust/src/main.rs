@@ -92,6 +92,16 @@ fn bp_cfg(args: &Args) -> Result<BackpropConfig> {
     })
 }
 
+/// Drift seeds for the multi-seed sweeps: `--seeds N` consecutive seeds
+/// starting at `--seed` (base defaults to 3; the per-sweep default
+/// count is the caller's). The sweeps fan these out over the worker
+/// pool, one student per seed.
+fn drift_seeds(args: &Args, default_n: usize) -> Result<Vec<u64>> {
+    let base = args.u64_or("seed", 3)?;
+    let n = args.usize_or("seeds", default_n)?.max(1);
+    Ok((0..n as u64).map(|i| base + i).collect())
+}
+
 fn pct(x: f64) -> String {
     format!("{:.2}%", 100.0 * x)
 }
@@ -120,10 +130,11 @@ fn run(args: &Args) -> Result<()> {
 const HELP: &str = "\
 rimc — RRAM in-memory-computing calibration with DoRA (paper repro)
 
-USAGE: rimc <SUBCOMMAND> [--backend native|pjrt] [--model nano|micro|small]
-       [--threads N] [flags]
+USAGE: rimc <SUBCOMMAND> [--backend native|pjrt]
+       [--model nano|micro|small|m20] [--threads N] [flags]
        (pjrt needs a `--features pjrt` build plus [--artifacts DIR];
-        --threads sizes the eval/calibration worker pool, 0 = auto)
+        --threads sizes the shared worker budget for eval, calibration
+        and seed-parallel sweeps, 0 = auto)
 
 SUBCOMMANDS
   info                      backend + model inventory
@@ -131,18 +142,20 @@ SUBCOMMANDS
   calibrate [--method dora|lora|backprop] [--drift R] [--samples N]
             [--rank R] [--steps N] [--lr F] [--input-mode sequential|teacher]
   sweep drift         [--drifts 0,0.05,...] [--seeds N]        (Fig. 2)
-  sweep dataset-size  [--sizes 1,2,5,...] [--drift R] [--rank R] (Fig. 4)
-  sweep rank          [--drift R] [--samples N]                 (Fig. 5)
+  sweep dataset-size  [--sizes 1,2,5,...] [--drift R] [--rank R]
+                      [--seeds N]                               (Fig. 4)
+  sweep rank          [--drift R] [--samples N] [--seeds N]     (Fig. 5)
   sweep lora          [--drifts 0.2,0.15] [--samples N]         (Fig. 6)
   report table1       [--drift R] [--samples N] [--bp-samples N] (Table I)
   lifecycle [--policy periodic|floor] [--interval-hours H]
             [--step-hours H] [--checkpoints N]                  (Fig. 1c)
   serve     [--devices N] [--requests N] [--workers N] [--drift R]
-            [--batch SAMPLES] [--queue-cap N] [--smoke]
+            [--batch SAMPLES] [--queue-cap N] [--age-bound K] [--smoke]
             replay a synthetic inference/calibration/drift trace over a
             simulated device fleet (default: 8 devices x 1000 requests
             on `small`; --smoke shrinks to nano scale; --batch 1
-            disables inference micro-batching)";
+            disables inference micro-batching; --age-bound K promotes
+            maintenance passed over for K dispatches, 0 = strict)";
 
 #[cfg(test)]
 mod tests {
@@ -297,9 +310,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 "drifts",
                 &[0.0, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30],
             )?;
-            let n_seeds = args.usize_or("seeds", 3)?;
-            let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| 3 + i).collect();
-            let rows = fig2_drift_sweep(&session, &drifts, &seeds)?;
+            let rows =
+                fig2_drift_sweep(&session, &drifts, &drift_seeds(args, 3)?)?;
             print_table(
                 &format!("Fig. 2 — accuracy vs relative drift ({})",
                          session.spec.name),
@@ -325,7 +337,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 &sizes,
                 &calib_cfg(args)?,
                 &bp_cfg(args)?,
-                args.u64_or("seed", 3)?,
+                &drift_seeds(args, 1)?,
             )?;
             print_table(
                 &format!("Fig. 4 — accuracy vs calibration-set size ({})",
@@ -345,7 +357,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 args.f64_or("drift", 0.2)?,
                 args.usize_or("samples", 10)?,
                 &calib_cfg(args)?,
-                args.u64_or("seed", 3)?,
+                &drift_seeds(args, 1)?,
             )?;
             print_table(
                 &format!("Fig. 5 — accuracy vs rank ({})", session.spec.name),
@@ -431,6 +443,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_capacity: args.usize_or("queue-cap", 256)?,
         max_batch_samples: args
             .usize_or("batch", session.spec.eval_batch)?,
+        maintenance_age_bound: args.usize_or("age-bound", 0)?,
         workers: args.usize_or("workers", 0)?,
     };
     let spec = TraceSpec {

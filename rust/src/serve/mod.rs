@@ -13,11 +13,14 @@
 //!   SRAM-resident adapter, sharing one `Session`/`Backend`.
 //! * [`queue`] — bounded submission queue with two priority lanes
 //!   (inference outranks calibration/drift maintenance, so a
-//!   multi-second calibration round never starves inference) and
-//!   micro-batching of consecutive same-device inference requests into
-//!   single backend dispatches, amortizing the tiled-matmul eval path.
-//!   Per-device program order is never reordered, which keeps served
-//!   results bitwise equal to serial per-device execution.
+//!   multi-second calibration round never starves inference; an
+//!   optional K-dispatch aging bound promotes maintenance that has
+//!   been passed over K times, capping deferral under saturating
+//!   inference load) and micro-batching of consecutive same-device
+//!   inference requests into single backend dispatches, amortizing the
+//!   tiled-matmul eval path. Per-device program order is never
+//!   reordered, which keeps served results bitwise equal to serial
+//!   per-device execution.
 //! * [`server`] — the blocking `submit`/`wait` front-end plus scoped
 //!   dispatch workers (`util::threads`).
 //! * [`trace`] — seeded synthetic request traces, replay, and the

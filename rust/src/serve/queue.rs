@@ -15,6 +15,14 @@
 //!   for device B behind it in the global queue — calibration cannot
 //!   starve inference — while within one device it cannot jump its own
 //!   program order.
+//! * **Aging bound (optional).** Strict priority defers maintenance
+//!   *unboundedly* under saturating inference load — fine on drift
+//!   timescales, but a fleet that is never idle would then never
+//!   recalibrate. With `maintenance_age_bound = K > 0`, a head-of-line
+//!   maintenance request that has been passed over for `K` dispatches
+//!   is promoted to inference priority (ties still by submission
+//!   sequence), capping its deferral at K work units. `K = 0` (the
+//!   default) preserves strict priority exactly.
 //! * **Micro-batching.** When an inference request is chosen, the run
 //!   of *consecutive* inference requests at the front of that device's
 //!   queue is coalesced into one work unit (up to `max_batch_samples`
@@ -83,6 +91,10 @@ pub struct Pending {
     pub seq: u64,
     pub kind: RequestKind,
     pub submitted_at: Instant,
+    /// times this request sat eligible at its device's head of line and
+    /// another device's request was dispatched instead; the aging bound
+    /// promotes a maintenance request once this reaches `K`
+    pub passed_over: u64,
 }
 
 /// One unit of device work popped by a dispatch worker: a single
@@ -144,6 +156,9 @@ pub struct SubmitQueue {
     space: Condvar,
     capacity: usize,
     max_batch_samples: usize,
+    /// K-dispatch aging bound for the maintenance lane; 0 = strict
+    /// priority (maintenance can be deferred unboundedly)
+    maintenance_age_bound: usize,
 }
 
 impl SubmitQueue {
@@ -151,6 +166,7 @@ impl SubmitQueue {
         n_devices: usize,
         capacity: usize,
         max_batch_samples: usize,
+        maintenance_age_bound: usize,
     ) -> SubmitQueue {
         SubmitQueue {
             state: Mutex::new(QueueState {
@@ -164,6 +180,7 @@ impl SubmitQueue {
             space: Condvar::new(),
             capacity: capacity.max(1),
             max_batch_samples: max_batch_samples.max(1),
+            maintenance_age_bound,
         }
     }
 
@@ -173,6 +190,10 @@ impl SubmitQueue {
 
     pub fn max_batch_samples(&self) -> usize {
         self.max_batch_samples
+    }
+
+    pub fn maintenance_age_bound(&self) -> usize {
+        self.maintenance_age_bound
     }
 
     /// Currently queued (not yet popped) requests.
@@ -212,6 +233,7 @@ impl SubmitQueue {
             seq,
             kind,
             submitted_at: Instant::now(),
+            passed_over: 0,
         });
         st.queued += 1;
         drop(st);
@@ -226,7 +248,24 @@ impl SubmitQueue {
         let mut st = self.state.lock().expect("queue lock");
         loop {
             // best eligible device: non-busy, non-empty, ranked by
-            // (front lane, front seq)
+            // (front lane, front seq). With an aging bound K, a
+            // maintenance front that has been *passed over* — eligible
+            // at its head of line while another device's request was
+            // dispatched — K times ranks as inference (still tie-broken
+            // by seq, so older requests win); it dispatches as the
+            // maintenance singleton it is. A device's own backlog never
+            // ages a request: only losses in the cross-device race do.
+            let bound = self.maintenance_age_bound as u64;
+            let effective_lane = |front: &Pending| {
+                if bound > 0
+                    && front.kind.lane() == Lane::Maintenance
+                    && front.passed_over >= bound
+                {
+                    Lane::Inference
+                } else {
+                    front.kind.lane()
+                }
+            };
             let best = st
                 .per_device
                 .iter()
@@ -234,10 +273,28 @@ impl SubmitQueue {
                 .filter(|(d, q)| !st.busy[*d] && !q.is_empty())
                 .min_by_key(|(_, q)| {
                     let front = q.front().expect("non-empty");
-                    (front.kind.lane(), front.seq)
+                    (effective_lane(front), front.seq)
                 })
                 .map(|(d, _)| d);
             if let Some(d) = best {
+                // with aging on, every eligible maintenance front that
+                // lost this race ages one pass-over (split the guard so
+                // the busy read and the queue iteration borrow disjoint
+                // fields); strict priority (K = 0) skips the
+                // bookkeeping entirely
+                if bound > 0 {
+                    let inner = &mut *st;
+                    for (od, q) in inner.per_device.iter_mut().enumerate() {
+                        if od == d || inner.busy[od] {
+                            continue;
+                        }
+                        if let Some(front) = q.front_mut() {
+                            if front.kind.lane() == Lane::Maintenance {
+                                front.passed_over += 1;
+                            }
+                        }
+                    }
+                }
                 let q = &mut st.per_device[d];
                 let items = if q.front().expect("non-empty").kind.lane()
                     == Lane::Inference
@@ -287,6 +344,7 @@ mod tests {
             seq,
             kind: RequestKind::Infer { samples: (0..n).collect() },
             submitted_at: Instant::now(),
+            passed_over: 0,
         }
     }
 
@@ -296,6 +354,7 @@ mod tests {
             seq,
             kind: RequestKind::Advance { hours: 1.0 },
             submitted_at: Instant::now(),
+            passed_over: 0,
         }
     }
 
@@ -354,7 +413,7 @@ mod tests {
 
     #[test]
     fn pop_prefers_inference_across_devices() {
-        let q = SubmitQueue::new(3, 64, 32);
+        let q = SubmitQueue::new(3, 64, 32, 0);
         // maintenance submitted FIRST, inference for other devices after
         q.submit(0, 10, RequestKind::Calibrate {
             n_samples: 4,
@@ -377,7 +436,7 @@ mod tests {
 
     #[test]
     fn busy_device_holds_program_order() {
-        let q = SubmitQueue::new(2, 64, 32);
+        let q = SubmitQueue::new(2, 64, 32, 0);
         // device 0: calibrate then infer — the infer must NOT jump ahead
         q.submit(0, 20, RequestKind::Calibrate {
             n_samples: 4,
@@ -398,8 +457,90 @@ mod tests {
     }
 
     #[test]
+    fn aged_maintenance_promotes_after_k_dispatches() {
+        // K = 2: a calibration submitted first, then saturating
+        // inference across the other devices (one request per device —
+        // same-device runs would coalesce into a single dispatch).
+        // Strictly the calibration would wait forever; with the bound
+        // it jumps ahead after two dispatches.
+        let q = SubmitQueue::new(4, 64, 32, 2);
+        q.submit(0, 0, RequestKind::Calibrate {
+            n_samples: 4,
+            cfg: CalibConfig::default(),
+        })
+        .unwrap();
+        q.submit(1, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.submit(2, 2, RequestKind::Infer { samples: vec![1] }).unwrap();
+        q.submit(3, 3, RequestKind::Infer { samples: vec![2] }).unwrap();
+        // dispatch 0: age 0 < 2 — inference wins
+        let u1 = q.pop().unwrap();
+        assert_eq!((u1.device, tickets(&u1.items)), (1, vec![1]));
+        q.complete(1);
+        // dispatch 1: age 1 < 2 — inference still wins
+        let u2 = q.pop().unwrap();
+        assert_eq!((u2.device, tickets(&u2.items)), (2, vec![2]));
+        q.complete(2);
+        // dispatch 2: age 2 >= K — the calibration is promoted and its
+        // older seq beats device 3's queued inference
+        let u3 = q.pop().unwrap();
+        assert_eq!(
+            (u3.device, tickets(&u3.items)),
+            (0, vec![0]),
+            "aged maintenance must outrank younger inference"
+        );
+        q.complete(0);
+        let u4 = q.pop().unwrap();
+        assert_eq!((u4.device, tickets(&u4.items)), (3, vec![3]));
+    }
+
+    #[test]
+    fn zero_age_bound_keeps_strict_priority() {
+        // the default: maintenance defers however many dispatches pass
+        let q = SubmitQueue::new(3, 64, 32, 0);
+        q.submit(0, 0, RequestKind::Calibrate {
+            n_samples: 4,
+            cfg: CalibConfig::default(),
+        })
+        .unwrap();
+        for i in 0..5u64 {
+            let dev = 1 + (i as usize % 2);
+            q.submit(dev, 10 + i, RequestKind::Infer { samples: vec![0] })
+                .unwrap();
+            let u = q.pop().unwrap();
+            assert_eq!(
+                tickets(&u.items),
+                vec![10 + i],
+                "strict priority: inference always first"
+            );
+            q.complete(dev);
+        }
+        let last = q.pop().unwrap();
+        assert_eq!(tickets(&last.items), vec![0]);
+    }
+
+    #[test]
+    fn promoted_maintenance_still_dispatches_as_singleton() {
+        // device 0 queues calibrate-then-infer; once the calibrate is
+        // promoted the following inference must NOT coalesce with it
+        let q = SubmitQueue::new(2, 64, 32, 1);
+        q.submit(0, 0, RequestKind::Advance { hours: 1.0 }).unwrap();
+        q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.submit(1, 2, RequestKind::Infer { samples: vec![1] }).unwrap();
+        let u1 = q.pop().unwrap();
+        assert_eq!((u1.device, tickets(&u1.items)), (1, vec![2]));
+        q.complete(1);
+        let u2 = q.pop().unwrap();
+        assert_eq!(
+            (u2.device, tickets(&u2.items)),
+            (0, vec![0]),
+            "promoted advance dispatches alone"
+        );
+        assert_eq!(u2.items.len(), 1);
+    }
+
+    #[test]
     fn shutdown_drains_then_ends() {
-        let q = SubmitQueue::new(1, 8, 4);
+        let q = SubmitQueue::new(1, 8, 4, 0);
         q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
         q.shutdown();
         assert!(q.submit(0, 2, RequestKind::Advance { hours: 1.0 }).is_err());

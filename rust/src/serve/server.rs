@@ -40,12 +40,18 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// micro-batch cap in input samples; 1 disables coalescing
     pub max_batch_samples: usize,
+    /// K-dispatch aging bound for the maintenance lane: a head-of-line
+    /// maintenance request passed over for K dispatches is promoted to
+    /// inference priority, capping calibration deferral under
+    /// saturating inference load. 0 (default) = strict priority,
+    /// exactly the pre-aging behaviour.
+    pub maintenance_age_bound: usize,
     /// Dispatch workers; 0 = auto (the process-wide `--threads`
-    /// setting, capped at 4). Dispatch workers *multiply* with the
-    /// compute pool: each worker executing a calibration or a batched
-    /// eval fans out again over `util::threads`, so an uncapped
-    /// auto-default would run up to `threads()^2` dense-math threads
-    /// and wreck the latency percentiles serving exists to report.
+    /// setting, capped at 4). Each worker executing a calibration or a
+    /// batched eval fans out again over `util::threads` — workers now
+    /// *split* the shared thread budget rather than multiplying it, but
+    /// the cap still keeps dispatch concurrency from starving the
+    /// per-unit compute share.
     pub workers: usize,
 }
 
@@ -57,6 +63,7 @@ impl Default for ServeConfig {
             seed: 3,
             queue_capacity: 256,
             max_batch_samples: 32,
+            maintenance_age_bound: 0,
             workers: 0,
         }
     }
@@ -121,6 +128,7 @@ impl Server {
                 cfg.n_devices,
                 cfg.queue_capacity,
                 cfg.max_batch_samples,
+                cfg.maintenance_age_bound,
             ),
             fleet,
             results: Results {

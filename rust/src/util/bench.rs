@@ -4,8 +4,17 @@
 //! report mean/p50/p95 and ops/s, and to print the paper-table rows the
 //! fig*/table* benches regenerate. Output is plain markdown so bench logs
 //! drop straight into EXPERIMENTS.md.
+//!
+//! Perf-tracking benches additionally emit machine-readable results:
+//! [`write_bench_json`] drops a `BENCH_<name>.json` next to the bench's
+//! working directory (one [`BenchRecord`] per measured configuration),
+//! so the perf trajectory is tracked across PRs instead of lost in
+//! stdout. CI schema-checks these files after the smoke runs.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -107,6 +116,52 @@ impl Harness {
     }
 }
 
+/// One machine-readable benchmark result: what ran (`op`), on which
+/// model (`preset`, "-" for model-free kernels), at which worker count,
+/// how long one iteration took, and the speedup vs the serial baseline
+/// of the same op (1.0 when the row *is* the baseline).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub op: String,
+    pub preset: String,
+    pub threads: usize,
+    pub wall_ns: f64,
+    pub speedup: f64,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str(&self.op)),
+            ("preset", Json::str(&self.preset)),
+            ("threads", Json::num(self.threads as f64)),
+            ("wall_ns", Json::num(self.wall_ns)),
+            ("speedup", Json::num(self.speedup)),
+        ])
+    }
+}
+
+/// The `BENCH_<name>.json` document: bench name + record rows. Split
+/// from the file write so the schema is unit-testable.
+pub fn bench_json_doc(bench: &str, records: &[BenchRecord]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("records", Json::arr(records.iter().map(BenchRecord::to_json))),
+    ])
+}
+
+/// Write `BENCH_<bench>.json` into the current working directory (for
+/// `cargo bench` that is the crate root) and return the path. CI fails
+/// if the smoke runs leave this missing or malformed.
+pub fn write_bench_json(
+    bench: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<PathBuf> {
+    let path = PathBuf::from(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, format!("{}\n", bench_json_doc(bench, records)))?;
+    Ok(path)
+}
+
 /// Print a markdown table (used by the paper-figure benches).
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n## {title}\n");
@@ -139,5 +194,38 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn bench_json_doc_roundtrips_with_schema_keys() {
+        let records = vec![
+            BenchRecord {
+                op: "matmul256".into(),
+                preset: "-".into(),
+                threads: 1,
+                wall_ns: 1.5e6,
+                speedup: 1.0,
+            },
+            BenchRecord {
+                op: "calib-round".into(),
+                preset: "small".into(),
+                threads: 4,
+                wall_ns: 2.0e8,
+                speedup: 2.4,
+            },
+        ];
+        let doc = bench_json_doc("runtime_hotpath", &records);
+        // the exact keys the CI schema check requires
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.req("bench").as_str().unwrap(), "runtime_hotpath");
+        let rows = parsed.req("records").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            for key in ["op", "preset", "threads", "wall_ns", "speedup"] {
+                assert!(row.get(key).is_some(), "missing {key}");
+            }
+        }
+        assert_eq!(rows[1].req("preset").as_str().unwrap(), "small");
+        assert_eq!(rows[1].req("threads").as_usize().unwrap(), 4);
     }
 }

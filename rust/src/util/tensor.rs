@@ -8,6 +8,21 @@
 //! `map`/`zip_with`, column broadcast, token-mean pooling).
 
 use crate::anyhow::{bail, Result};
+use crate::util::threads;
+
+/// Min multiply-accumulates (`m * k * n`) before `matmul` / `t_matmul`
+/// shard output rows across the thread pool; below this the scoped-spawn
+/// cost outweighs the kernel. 2^18 MACs ≈ a 64x64x64 product.
+const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Split `m` output rows into up to `workers` contiguous bands.
+fn row_bands(m: usize, workers: usize) -> Vec<(usize, usize)> {
+    let band = m.div_ceil(workers.max(1));
+    (0..workers)
+        .map(|w| (w * band, ((w + 1) * band).min(m)))
+        .filter(|(s, e)| s < e)
+        .collect()
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -138,15 +153,9 @@ impl Tensor {
     }
 
     /// Row-major matrix product: `[m, k] x [k, n] -> [m, n]`,
-    /// cache-blocked (the whole native backend hot path sits on this
-    /// function).
-    ///
-    /// Blocking runs over rows (`MC`), the shared dim (`KC`) and columns
-    /// (`NC`) so the micro-kernel's working set — one output row segment
-    /// plus one rhs row segment — stays in L1 while a `KC x NC` panel of
-    /// the rhs is reused from L2 across the `MC` rows of a block. Within
-    /// the micro-kernel the inner loop streams both segments
-    /// contiguously, exactly like the naive i-k-j kernel.
+    /// cache-blocked and row-parallel (the whole native backend hot path
+    /// sits on this function; the blocking scheme lives on the private
+    /// `matmul_rows` kernel below).
     ///
     /// Bit-for-bit contract: for every output element the additions
     /// happen in ascending-`k` order with the same `aik == 0.0` skip as
@@ -154,10 +163,15 @@ impl Tensor {
     /// identical to the naive one (property-tested in
     /// `tests/properties.rs`). Keep that invariant when touching the
     /// loop nest — parallel eval determinism depends on it.
+    ///
+    /// Above `PAR_MIN_MACS` the output rows are sharded into
+    /// contiguous bands across the calling thread's worker budget
+    /// (`util::threads::budget`): bands are disjoint and each element's
+    /// reduction order is unchanged, so the row-parallel product is
+    /// bitwise identical too — thread count is a pure throughput knob.
+    /// Inside a busy pool worker the budget is 1 and the kernel stays
+    /// serial (no oversubscription).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
-        const MC: usize = 32;
-        const KC: usize = 64;
-        const NC: usize = 256;
         if self.shape.len() != 2 || other.shape.len() != 2 {
             bail!(
                 "matmul wants 2-D operands, got {:?} x {:?}",
@@ -170,35 +184,28 @@ impl Tensor {
         if k != k2 {
             bail!("matmul inner dim mismatch: {:?} x {:?}", self.shape, other.shape);
         }
+        let workers = threads::budget().min(m);
         let mut out = vec![0.0f32; m * n];
-        let mut ib = 0;
-        while ib < m {
-            let i_end = (ib + MC).min(m);
-            let mut jb = 0;
-            while jb < n {
-                let j_end = (jb + NC).min(n);
-                let mut kb = 0;
-                while kb < k {
-                    let k_end = (kb + KC).min(k);
-                    for i in ib..i_end {
-                        let arow = &self.data[i * k..(i + 1) * k];
-                        let orow = &mut out[i * n + jb..i * n + j_end];
-                        for kk in kb..k_end {
-                            let aik = arow[kk];
-                            if aik == 0.0 {
-                                continue;
-                            }
-                            let brow = &other.data[kk * n + jb..kk * n + j_end];
-                            for (o, &b) in orow.iter_mut().zip(brow) {
-                                *o += aik * b;
-                            }
-                        }
-                    }
-                    kb = k_end;
+        if workers > 1
+            && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
+        {
+            // each band worker writes its disjoint row range of `out`
+            // in place — no per-band allocation, no second copy. Bands
+            // are equal-sized except the tail, so `chunks_mut` yields
+            // exactly the band windows.
+            let bands = row_bands(m, workers);
+            let band_rows = bands[0].1;
+            std::thread::scope(|s| {
+                for (&(r0, r1), chunk) in
+                    bands.iter().zip(out.chunks_mut(band_rows * n))
+                {
+                    s.spawn(move || {
+                        matmul_rows(&self.data, &other.data, r0, r1, k, n, chunk)
+                    });
                 }
-                jb = j_end;
-            }
-            ib = i_end;
+            });
+        } else {
+            matmul_rows(&self.data, &other.data, 0, m, k, n, &mut out);
         }
         Tensor::new(vec![m, n], out)
     }
@@ -245,6 +252,8 @@ impl Tensor {
     /// Bitwise identical to `self.transposed().matmul_naive(other)`:
     /// per output element the additions run in ascending-`k` order with
     /// the same zero skip (property-tested in `tests/properties.rs`).
+    /// Output rows shard across the worker budget above
+    /// `PAR_MIN_MACS`, exactly like [`Tensor::matmul`].
     pub fn t_matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 {
             bail!(
@@ -262,19 +271,26 @@ impl Tensor {
                 other.shape
             );
         }
+        let workers = threads::budget().min(m);
         let mut out = vec![0.0f32; m * n];
-        for kk in 0..k {
-            let arow = &self.data[kk * m..(kk + 1) * m];
-            let brow = &other.data[kk * n..(kk + 1) * n];
-            for (i, &aki) in arow.iter().enumerate() {
-                if aki == 0.0 {
-                    continue;
+        if workers > 1
+            && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
+        {
+            let bands = row_bands(m, workers);
+            let band_rows = bands[0].1;
+            std::thread::scope(|s| {
+                for (&(r0, r1), chunk) in
+                    bands.iter().zip(out.chunks_mut(band_rows * n))
+                {
+                    s.spawn(move || {
+                        t_matmul_rows(
+                            &self.data, &other.data, r0, r1, k, m, n, chunk,
+                        )
+                    });
                 }
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += aki * b;
-                }
-            }
+            });
+        } else {
+            t_matmul_rows(&self.data, &other.data, 0, m, k, m, n, &mut out);
         }
         Tensor::new(vec![m, n], out)
     }
@@ -397,6 +413,97 @@ impl Tensor {
                 best
             })
             .collect()
+    }
+}
+
+/// Cache-blocked micro-kernel over output rows `[r0, r1)` of an
+/// `[m, k] x [k, n]` product, written into the zeroed `(r1 - r0) * n`
+/// slice `out` (the band's disjoint window of the full output, so
+/// parallel band workers write in place with no copies); the serial
+/// kernel is the `(0, m)` band.
+///
+/// Blocking runs over rows (`MC`), the shared dim (`KC`) and columns
+/// (`NC`) so the working set — one output row segment plus one rhs row
+/// segment — stays in L1 while a `KC x NC` panel of the rhs is reused
+/// from L2 across the `MC` rows of a block. Per output element the
+/// additions happen in ascending-`k` order with the naive kernel's
+/// `aik == 0.0` skip, regardless of where the band starts — which is
+/// what makes both the blocking and the row sharding bitwise no-ops.
+fn matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    const MC: usize = 32;
+    const KC: usize = 64;
+    const NC: usize = 256;
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    let mut ib = r0;
+    while ib < r1 {
+        let i_end = (ib + MC).min(r1);
+        let mut jb = 0;
+        while jb < n {
+            let j_end = (jb + NC).min(n);
+            let mut kb = 0;
+            while kb < k {
+                let k_end = (kb + KC).min(k);
+                for i in ib..i_end {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let obase = (i - r0) * n;
+                    let orow = &mut out[obase + jb..obase + j_end];
+                    for kk in kb..k_end {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + jb..kk * n + j_end];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += aik * bv;
+                        }
+                    }
+                }
+                kb = k_end;
+            }
+            jb = j_end;
+        }
+        ib = i_end;
+    }
+}
+
+/// `k`-outer transpose-aware kernel over output rows `[r0, r1)` of an
+/// `[k, m]^T x [k, n]` product (output row `i` = column `i` of `a`),
+/// written into the zeroed band window `out` like [`matmul_rows`].
+/// Streams one row of each operand contiguously per `kk`; per output
+/// element the additions run in ascending-`k` order with the zero skip,
+/// so banding is bitwise invisible here too.
+#[allow(clippy::too_many_arguments)]
+fn t_matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    for kk in 0..k {
+        let arow = &a[kk * m + r0..kk * m + r1];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &aki) in arow.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aki * bv;
+            }
+        }
     }
 }
 
@@ -536,6 +643,66 @@ mod tests {
         // inner-dim mismatch still rejected
         let c = Tensor::new(vec![2, 2], vec![1.0; 4]).unwrap();
         assert!(a.t_matmul(&c).is_err());
+    }
+
+    #[test]
+    fn row_bands_partition_contiguously() {
+        for (m, w) in [(1, 4), (7, 3), (33, 4), (100, 7), (5, 5), (4, 8)] {
+            let bands = row_bands(m, w);
+            assert_eq!(bands[0].0, 0, "{m} rows / {w} workers");
+            assert_eq!(bands.last().unwrap().1, m, "{m} rows / {w} workers");
+            for pair in bands.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0, "{m} rows / {w} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn banded_kernels_splice_to_the_full_kernel() {
+        // band boundaries at arbitrary offsets must be bitwise invisible
+        let (m, k, n) = (37, 19, 23);
+        let mk = |len: usize, salt: usize| -> Vec<f32> {
+            (0..len)
+                .map(|i| {
+                    if (i + salt) % 6 == 0 {
+                        0.0
+                    } else {
+                        ((i * 41 + salt) % 19) as f32 - 9.0
+                    }
+                })
+                .collect()
+        };
+        let a = mk(m * k, 2);
+        let b = mk(k * n, 7);
+        let mut full = vec![0.0f32; m * n];
+        matmul_rows(&a, &b, 0, m, k, n, &mut full);
+        let mut spliced = vec![0.0f32; m * n];
+        for &(r0, r1) in &row_bands(m, 5) {
+            matmul_rows(&a, &b, r0, r1, k, n, &mut spliced[r0 * n..r1 * n]);
+        }
+        for (x, y) in full.iter().zip(&spliced) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // transpose-aware kernel: a is [k, m]
+        let at = mk(k * m, 3);
+        let mut full_t = vec![0.0f32; m * n];
+        t_matmul_rows(&at, &b, 0, m, k, m, n, &mut full_t);
+        let mut spliced_t = vec![0.0f32; m * n];
+        for &(r0, r1) in &row_bands(m, 4) {
+            t_matmul_rows(
+                &at,
+                &b,
+                r0,
+                r1,
+                k,
+                m,
+                n,
+                &mut spliced_t[r0 * n..r1 * n],
+            );
+        }
+        for (x, y) in full_t.iter().zip(&spliced_t) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

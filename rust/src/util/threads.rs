@@ -16,7 +16,21 @@
 //! The process-wide default worker count is a single atomic
 //! (`set_threads` / `threads`), threaded through from the CLI `--threads`
 //! flag; 0 means "use `std::thread::available_parallelism`".
+//!
+//! **Thread budget.** Parallel sections nest — the layer-parallel
+//! calibration loop evaluates matmuls that are themselves row-parallel,
+//! and a seed-parallel sweep runs whole calibrations per worker. All
+//! levels borrow from ONE budget instead of multiplying: a pool `map`
+//! hands each worker an equal share of the calling thread's budget
+//! (`budget() / workers`, at least 1) through a thread-local, and
+//! `ThreadPool::global()` sizes itself from `budget()` rather than the
+//! raw process setting. A top-level caller therefore sees the full
+//! `--threads` width, while a worker three levels deep sees 1 and runs
+//! serial — total live compute threads stay ~`threads()` no matter how
+//! the levels compose. The budget never affects results, only how many
+//! threads produce them.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Process-wide worker-count override; 0 = auto-detect.
@@ -38,6 +52,36 @@ pub fn threads() -> usize {
     }
 }
 
+thread_local! {
+    /// Share of the worker budget handed to this thread by an enclosing
+    /// pool section; 0 = top level (fall back to `threads()`).
+    static BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Worker budget available to the calling thread: the full process-wide
+/// setting at top level, or the share an enclosing `ThreadPool::map` /
+/// `run_with` handed this worker. Kernel-level parallelism
+/// (`Tensor::matmul` row banding) keys off this, so a matmul inside a
+/// busy pool worker stays serial instead of oversubscribing.
+pub fn budget() -> usize {
+    match BUDGET.with(Cell::get) {
+        0 => threads(),
+        n => n,
+    }
+}
+
+/// Run `f` with the calling thread's budget pinned to `n` (restored on
+/// exit, also on unwind via the worker thread dying with its own
+/// thread-local).
+fn with_budget<T, F: FnOnce() -> T>(n: usize, f: F) -> T {
+    BUDGET.with(|b| {
+        let prev = b.replace(n.max(1));
+        let out = f();
+        b.set(prev);
+        out
+    })
+}
+
 /// A fixed-width scoped pool. Cheap to construct; holds no OS resources
 /// between calls.
 pub struct ThreadPool {
@@ -49,9 +93,12 @@ impl ThreadPool {
         ThreadPool { workers: workers.max(1) }
     }
 
-    /// Pool sized from the process-wide setting (CLI `--threads`).
+    /// Pool sized from the calling thread's budget: the process-wide
+    /// setting (CLI `--threads`) at top level, or the share handed down
+    /// by an enclosing pool section (no oversubscription when parallel
+    /// sections nest).
     pub fn global() -> ThreadPool {
-        ThreadPool::new(threads())
+        ThreadPool::new(budget())
     }
 
     pub fn workers(&self) -> usize {
@@ -73,9 +120,13 @@ impl ThreadPool {
     {
         let n = items.len();
         if self.workers <= 1 || n <= 1 {
+            // degenerate path runs on the caller's thread and keeps its
+            // budget, so inner levels may still parallelize
             return items.iter().map(f).collect();
         }
         let workers = self.workers.min(n);
+        // each worker inherits an equal share of this thread's budget
+        let share = (budget() / workers).max(1);
         let cursor = AtomicUsize::new(0);
         let (cursor, f) = (&cursor, &f);
         let mut out: Vec<Option<T>> = Vec::with_capacity(n);
@@ -84,15 +135,17 @@ impl ThreadPool {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     s.spawn(move || {
-                        let mut local = Vec::new();
-                        loop {
-                            let i = cursor.fetch_add(1, Ordering::Relaxed);
-                            if i >= n {
-                                break;
+                        with_budget(share, || {
+                            let mut local = Vec::new();
+                            loop {
+                                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                                if i >= n {
+                                    break;
+                                }
+                                local.push((i, f(&items[i])));
                             }
-                            local.push((i, f(&items[i])));
-                        }
-                        local
+                            local
+                        })
                     })
                 })
                 .collect();
@@ -123,9 +176,13 @@ impl ThreadPool {
         M: FnOnce() -> R,
     {
         let worker = &worker;
+        // long-lived workers (serving dispatch) split the caller's
+        // budget too: a worker running a calibration round fans out over
+        // its share instead of the full process width
+        let share = (budget() / self.workers).max(1);
         std::thread::scope(|s| {
             let handles: Vec<_> = (0..self.workers)
-                .map(|i| s.spawn(move || worker(i)))
+                .map(|i| s.spawn(move || with_budget(share, || worker(i))))
                 .collect();
             let out = main();
             for h in handles {
@@ -214,6 +271,45 @@ mod tests {
         let frozen = polls.load(Ordering::SeqCst);
         std::thread::yield_now();
         assert_eq!(polls.load(Ordering::SeqCst), frozen);
+    }
+
+    #[test]
+    fn workers_inherit_budget_shares() {
+        // a 4-worker map over a budget of 8 hands each worker 2; a
+        // nested map inside a worker sees that share, not the process
+        // width
+        let items: Vec<usize> = (0..4).collect();
+        let shares = with_budget(8, || {
+            ThreadPool::new(4).map(&items, |_| budget())
+        });
+        assert_eq!(shares, vec![2, 2, 2, 2]);
+        // nesting again divides the share down to 1 and stays there
+        let nested = with_budget(8, || {
+            ThreadPool::new(4).map(&items, |_| {
+                ThreadPool::global().map(&items, |_| budget())
+            })
+        });
+        for inner in nested {
+            for b in inner {
+                assert_eq!(b, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_map_keeps_caller_budget() {
+        let items = vec![1usize];
+        let got = with_budget(6, || {
+            ThreadPool::new(4).map(&items, |_| budget())
+        });
+        assert_eq!(got, vec![6], "single-item map must not split the budget");
+    }
+
+    #[test]
+    fn budget_restores_after_section() {
+        let before = budget();
+        with_budget(3, || assert_eq!(budget(), 3));
+        assert_eq!(budget(), before);
     }
 
     #[test]

@@ -71,7 +71,7 @@ fn fig4_feature_calibration_beats_backprop_at_small_n() {
         &[1, 10],
         &quick_cfg(),
         &quick_bp(),
-        3,
+        &[3],
     )
     .unwrap();
     for r in &rows {
@@ -93,7 +93,8 @@ fn fig4_feature_calibration_beats_backprop_at_small_n() {
 fn fig5_accuracy_grows_with_rank() {
     let eng = engine();
     let session = eng.session("m20").unwrap();
-    let rows = fig5_rank_sweep(&session, 0.2, 10, &quick_cfg(), 3).unwrap();
+    let rows =
+        fig5_rank_sweep(&session, 0.2, 10, &quick_cfg(), &[3]).unwrap();
     assert_eq!(rows.len(), 4);
     // r=8 must beat r=1; interior non-monotonicity within noise allowed
     let a1 = rows[0].accuracy;

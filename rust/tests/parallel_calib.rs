@@ -1,0 +1,189 @@
+//! Determinism tests for the parallel calibration hot path: thread
+//! count is a pure throughput knob. Layer-parallel calibration
+//! (teacher-input mode), sequential-mode calibration (batch + kernel
+//! parallelism underneath), seed-parallel sweeps and seed-parallel
+//! scheduler timelines must all be *bitwise* equal across `--threads
+//! 1/2/0` — adapter tensors, wear counters, SRAM accounting, loss
+//! traces and accuracies alike.
+//!
+//! The thread setting is process-global, so a concurrently running test
+//! could flip a run between serial and parallel scheduling; that is
+//! exactly what these tests claim must not matter.
+
+use rimc_dora::calib::{CalibConfig, InputMode};
+use rimc_dora::coordinator::{
+    fig2_drift_sweep, Engine, RecalibrationScheduler, SchedulerPolicy,
+};
+use rimc_dora::util::threads::set_threads;
+
+/// Everything observable about one calibration run, bit-exact:
+/// per-layer adapter parameter bits, loss-trace endpoints and step
+/// counts, RRAM wear, SRAM word writes, and the calibrated accuracy.
+#[derive(Debug, PartialEq)]
+struct CalibFingerprint {
+    adapter_bits: Vec<Vec<u32>>,
+    traces: Vec<(String, usize, u64, u64)>,
+    rram_reads: u64,
+    rram_write_attempts: u64,
+    sram_writes: u64,
+    accuracy_bits: u64,
+}
+
+fn run_calibration(mode: InputMode, threads: usize) -> CalibFingerprint {
+    set_threads(threads);
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let (x, y) = session.dataset.calib_subset(10).unwrap();
+    let mut student = session.drifted_student(0.2, 3).unwrap();
+    let cfg = CalibConfig {
+        input_mode: mode,
+        max_steps_per_layer: 40,
+        ..CalibConfig::default()
+    };
+    let calibrator = session.feature_calibrator(cfg).unwrap();
+    let outcome = calibrator
+        .calibrate(&mut student, &session.teacher, &x, &y)
+        .unwrap();
+    let acc = session
+        .evaluator()
+        .calibrated(&mut student, &outcome.adapters, &session.dataset)
+        .unwrap();
+    set_threads(0);
+
+    let mut adapter_bits = Vec::new();
+    for la in outcome
+        .adapters
+        .layers
+        .iter()
+        .chain(std::iter::once(&outcome.adapters.head))
+    {
+        for t in [la.a.tensor(), la.b.tensor(), la.m.tensor()] {
+            adapter_bits
+                .push(t.data().iter().map(|v| v.to_bits()).collect());
+        }
+    }
+    let counters = student.total_counters();
+    CalibFingerprint {
+        adapter_bits,
+        traces: outcome
+            .traces
+            .iter()
+            .map(|t| {
+                (
+                    t.layer.clone(),
+                    t.steps,
+                    t.first_loss.to_bits(),
+                    t.last_loss.to_bits(),
+                )
+            })
+            .collect(),
+        rram_reads: counters.reads,
+        rram_write_attempts: counters.write_attempts,
+        sram_writes: outcome.cost.sram_writes,
+        accuracy_bits: acc.to_bits(),
+    }
+}
+
+#[test]
+fn layer_parallel_calibration_is_bitwise_equal_to_serial() {
+    // teacher-input mode: the per-layer step loops fan out over the
+    // pool; serial (1), fixed-parallel (2) and auto (0) must agree on
+    // every bit
+    let serial = run_calibration(InputMode::TeacherInput, 1);
+    let two = run_calibration(InputMode::TeacherInput, 2);
+    let auto = run_calibration(InputMode::TeacherInput, 0);
+    assert_eq!(serial, two);
+    assert_eq!(serial, auto);
+    // and calibration never wrote RRAM, on any schedule
+    assert_eq!(serial.rram_write_attempts, 0);
+}
+
+#[test]
+fn sequential_calibration_is_bitwise_invariant_to_threads() {
+    // sequential mode keeps the layer loop ordered; the batch fan-out
+    // and the row-parallel matmul underneath must still be invisible
+    let serial = run_calibration(InputMode::Sequential, 1);
+    let two = run_calibration(InputMode::Sequential, 2);
+    let auto = run_calibration(InputMode::Sequential, 0);
+    assert_eq!(serial, two);
+    assert_eq!(serial, auto);
+}
+
+fn fig2_bits(threads: usize) -> Vec<(u64, u64, u64)> {
+    set_threads(threads);
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let rows =
+        fig2_drift_sweep(&session, &[0.1, 0.25], &[3, 4, 5]).unwrap();
+    set_threads(0);
+    rows.iter()
+        .map(|r| {
+            (
+                r.accuracy_mean.to_bits(),
+                r.accuracy_min.to_bits(),
+                r.accuracy_max.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn seed_parallel_sweep_is_bitwise_equal_to_serial() {
+    let serial = fig2_bits(1);
+    let two = fig2_bits(2);
+    let auto = fig2_bits(0);
+    assert_eq!(serial, two);
+    assert_eq!(serial, auto);
+}
+
+/// One scheduler event, bit-exact: (hours, acc-before, acc-after,
+/// recalibrated, sram writes, rram writes).
+type EventKey = (u64, u64, Option<u64>, bool, u64, u64);
+
+fn scheduler_events(threads: usize) -> Vec<Vec<EventKey>> {
+    set_threads(threads);
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let scheduler = RecalibrationScheduler::new(
+        &session,
+        SchedulerPolicy::Periodic { interval_hours: 100.0 },
+        CalibConfig {
+            max_steps_per_layer: 20,
+            ..CalibConfig::default()
+        },
+        8,
+    );
+    let logs = scheduler.run_seeds(0.2, &[3, 4], 50.0, 3).unwrap();
+    set_threads(0);
+    logs.iter()
+        .map(|events| {
+            events
+                .iter()
+                .map(|e| {
+                    (
+                        e.hours.to_bits(),
+                        e.accuracy_before.to_bits(),
+                        e.accuracy_after.map(f64::to_bits),
+                        e.recalibrated,
+                        e.sram_writes,
+                        e.rram_writes,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn seed_parallel_scheduler_timelines_match_serial() {
+    let serial = scheduler_events(1);
+    let two = scheduler_events(2);
+    assert_eq!(serial, two);
+    // every timeline recalibrated at the 100 h mark (checkpoint 2 of 3)
+    for events in &serial {
+        assert_eq!(events.len(), 3);
+        assert!(events.iter().any(|e| e.3), "no recalibration fired");
+        // field traffic never writes RRAM
+        assert!(events.iter().all(|e| e.5 == 0));
+    }
+}

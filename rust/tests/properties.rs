@@ -294,6 +294,66 @@ fn prop_t_matmul_is_bitwise_equal_to_materialized_transpose() {
 }
 
 #[test]
+fn prop_row_parallel_matmul_is_bitwise_equal_to_naive() {
+    // sizes at/above the parallel threshold (2^18 MACs, i.e. 64x64x64)
+    // with the budget forced >1, so the row-banded path actually runs;
+    // another test racing the global thread setting can only flip runs
+    // back to the serial path, never change results
+    rimc_dora::util::threads::set_threads(3);
+    forall(
+        11,
+        6,
+        |r| (64 + r.below(40), 64 + r.below(40), 64 + r.below(40)),
+        |&(m, k, n)| {
+            let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
+            let a = matmul_operand(&mut rng, m, k);
+            let b = matmul_operand(&mut rng, k, n);
+            let par = a.matmul(&b).map_err(|e| e.to_string())?;
+            let naive = a.matmul_naive(&b).map_err(|e| e.to_string())?;
+            for (i, (x, y)) in par.data().iter().zip(naive.data()).enumerate()
+            {
+                prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{m}x{k}x{n} elem {i}: row-parallel {x} != naive {y}"
+                );
+            }
+            Ok(())
+        },
+    );
+    rimc_dora::util::threads::set_threads(0);
+}
+
+#[test]
+fn prop_row_parallel_t_matmul_is_bitwise_equal_to_reference() {
+    rimc_dora::util::threads::set_threads(3);
+    forall(
+        12,
+        6,
+        |r| (64 + r.below(40), 64 + r.below(40), 64 + r.below(40)),
+        |&(k, m, n)| {
+            let mut rng = Rng::new((k * 999_983 + m * 101 + n) as u64);
+            let a = matmul_operand(&mut rng, k, m);
+            let b = matmul_operand(&mut rng, k, n);
+            let par = a.t_matmul(&b).map_err(|e| e.to_string())?;
+            let reference = a
+                .transposed()
+                .matmul_naive(&b)
+                .map_err(|e| e.to_string())?;
+            for (i, (x, y)) in
+                par.data().iter().zip(reference.data()).enumerate()
+            {
+                prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{k}^T x{m}x{n} elem {i}: row-parallel {x} != ref {y}"
+                );
+            }
+            Ok(())
+        },
+    );
+    rimc_dora::util::threads::set_threads(0);
+}
+
+#[test]
 fn prop_time_factor_monotone_in_time() {
     forall(
         7,

@@ -32,7 +32,7 @@ fn priority_ordering_under_contention() {
         cfg: CalibConfig::default(),
     };
     let inf = |s: usize| RequestKind::Infer { samples: vec![s] };
-    let q = SubmitQueue::new(4, 64, 8);
+    let q = SubmitQueue::new(4, 64, 8, 0);
     q.submit(0, 0, cal()).unwrap(); // d0: calibrate, then infer
     q.submit(0, 1, inf(0)).unwrap();
     q.submit(1, 2, inf(1)).unwrap(); // d1: two infers -> one micro-batch
