@@ -6,7 +6,8 @@
 
 CARGO_DIR := rust
 
-.PHONY: build test fmt clippy doc check artifacts clean
+.PHONY: build test fmt clippy doc check bench-json bench-baseline \
+        artifacts clean
 
 build:
 	cd $(CARGO_DIR) && cargo build --release
@@ -25,6 +26,25 @@ doc:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 check: build test fmt clippy doc
+
+# Run both JSON-emitting benches in smoke mode (serial + threaded, the
+# same schedule CI uses) and schema-check + regression-gate the emitted
+# BENCH_*.json against bench_baselines/ with the same script as CI.
+bench-json:
+	cd $(CARGO_DIR) && cargo bench --bench runtime_hotpath -- --smoke --threads 1
+	cd $(CARGO_DIR) && mv BENCH_runtime_hotpath.json BENCH_runtime_hotpath_serial.json
+	cd $(CARGO_DIR) && cargo bench --bench runtime_hotpath -- --smoke --threads 2
+	cd $(CARGO_DIR) && cargo bench --bench serving_throughput -- --smoke --threads 2
+	cd $(CARGO_DIR) && python3 ../tools/bench_check.py \
+	  BENCH_runtime_hotpath.json BENCH_runtime_hotpath_serial.json \
+	  BENCH_serving_throughput.json --baselines ../bench_baselines
+
+# Promote the last bench-json run's results to the committed baselines
+# (never edit those by hand — see bench_baselines/README.md).
+bench-baseline:
+	cp $(CARGO_DIR)/BENCH_runtime_hotpath.json bench_baselines/runtime_hotpath.json
+	cp $(CARGO_DIR)/BENCH_runtime_hotpath_serial.json bench_baselines/runtime_hotpath_serial.json
+	cp $(CARGO_DIR)/BENCH_serving_throughput.json bench_baselines/serving_throughput.json
 
 # AOT HLO artifacts for the optional PJRT backend (`--features pjrt`).
 # Requires python3 + jax; errors out with instructions when absent.

@@ -10,7 +10,10 @@
 //! state, so unlike the feature calibrator there is no layer- or
 //! batch-level fan-out here; this baseline still scales with cores
 //! because `bp_step` runs at the top of the thread budget and its
-//! full-width matmuls are row-parallel (`util::tensor`).
+//! full-width matmuls are row-parallel (`util::tensor`). Within one
+//! core it rides the vectorized micro-kernels: the forward products
+//! and both VJP transposes (`t_matmul` / `matmul_nt`) reduce in the
+//! canonical lane order and autovectorize.
 
 use crate::anyhow::Result;
 

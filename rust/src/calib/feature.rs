@@ -22,10 +22,12 @@
 //! per batch; in `TeacherInput` mode the per-layer step loops are
 //! independent and fan out per *layer* (one owned `AdapterState` per
 //! worker, fold-back in layer order); and the matmuls underneath are
-//! row-parallel. All levels draw on one shared thread budget
-//! (`util::threads::budget`) and every reduction is in input order, so
-//! parallel and serial calibration are bitwise identical
-//! (tests/parallel_calib.rs).
+//! row-parallel on top of the vectorized lane-fold micro-kernels (the
+//! step VJPs run entirely on `matmul` / `t_matmul` / `matmul_nt`, all
+//! reducing in `util::tensor`'s canonical order). All levels draw on
+//! one shared thread budget (`util::threads::budget`) and every
+//! reduction is in input order, so parallel and serial calibration are
+//! bitwise identical (tests/parallel_calib.rs).
 
 use crate::anyhow::{bail, Result};
 

@@ -7,7 +7,8 @@
 //! student (and runs its own calibration) against the shared `Session`,
 //! and per-seed results reduce in seed order — so multi-threaded sweep
 //! rows are bitwise identical to serial ones, at `min(seeds, budget)`
-//! times the throughput.
+//! times the throughput. fig6 has one seed but a (drift, rank) grid;
+//! its independent cells fan out the same way, reducing in grid order.
 
 use crate::anyhow::{bail, Result};
 
@@ -195,6 +196,12 @@ pub struct Fig6Row {
     pub lora_acc: f64,
 }
 
+/// One full (drift, rank) grid, both adapters per cell. The grid cells
+/// are independent (each programs its own drifted student per adapter
+/// kind), so they fan out over the thread pool — one cell per worker,
+/// rows reduced in grid order (drift-major, then rank, as the serial
+/// loops produced them), so multi-threaded grids are bitwise identical
+/// to serial ones (tests/parallel_calib.rs pins this down).
 pub fn fig6_lora_vs_dora(
     session: &Session,
     rel_drifts: &[f64],
@@ -204,41 +211,44 @@ pub fn fig6_lora_vs_dora(
 ) -> Result<Vec<Fig6Row>> {
     let ev = session.evaluator();
     let (x, y) = session.dataset.calib_subset(n_samples)?;
-    let mut rows = Vec::new();
-    for &rel in rel_drifts {
-        for &rank in &session.spec.ranks.clone() {
-            let mut acc = [0.0f64; 2];
-            for (i, kind) in
-                [AdapterKind::Dora, AdapterKind::Lora].iter().enumerate()
-            {
-                let mut student = session.drifted_student(rel, seed)?;
-                let cfg = CalibConfig {
-                    kind: *kind,
-                    rank,
-                    ..calib_cfg.clone()
-                };
-                let calibrator = session.feature_calibrator(cfg)?;
-                let outcome = calibrator.calibrate(
-                    &mut student,
-                    &session.teacher,
-                    &x,
-                    &y,
-                )?;
-                acc[i] = ev.calibrated(
-                    &mut student,
-                    &outcome.adapters,
-                    &session.dataset,
-                )?;
-            }
-            rows.push(Fig6Row {
-                rel_drift: rel,
+    let cells: Vec<(f64, usize)> = rel_drifts
+        .iter()
+        .flat_map(|&rel| {
+            session.spec.ranks.iter().map(move |&rank| (rel, rank))
+        })
+        .collect();
+    let pool = ThreadPool::global();
+    pool.try_map(&cells, |&(rel, rank)| {
+        let mut acc = [0.0f64; 2];
+        for (i, kind) in
+            [AdapterKind::Dora, AdapterKind::Lora].iter().enumerate()
+        {
+            let mut student = session.drifted_student(rel, seed)?;
+            let cfg = CalibConfig {
+                kind: *kind,
                 rank,
-                dora_acc: acc[0],
-                lora_acc: acc[1],
-            });
+                ..calib_cfg.clone()
+            };
+            let calibrator = session.feature_calibrator(cfg)?;
+            let outcome = calibrator.calibrate(
+                &mut student,
+                &session.teacher,
+                &x,
+                &y,
+            )?;
+            acc[i] = ev.calibrated(
+                &mut student,
+                &outcome.adapters,
+                &session.dataset,
+            )?;
         }
-    }
-    Ok(rows)
+        Ok(Fig6Row {
+            rel_drift: rel,
+            rank,
+            dora_acc: acc[0],
+            lora_acc: acc[1],
+        })
+    })
 }
 
 // ---------------------------------------------------------------------

@@ -17,6 +17,13 @@
 //! ```
 //! (the ADC quantizer is straight-through, so `z` contributes no extra
 //! factor; `X`, conductances and scales are non-trainable).
+//!
+//! Every `·^T` product above runs on the fused transpose-aware kernels
+//! (`Tensor::t_matmul` for `X^T @ ·`, `Tensor::matmul_nt` for
+//! `· @ B^T` / `· @ W^T`) — no transpose is ever materialized on the
+//! step path, and all of them reduce in `util::tensor`'s canonical
+//! lane order, so the VJPs inherit the vectorized kernels' bitwise
+//! schedule-invariance.
 
 use crate::anyhow::{bail, Result};
 
@@ -177,7 +184,7 @@ impl Backend for NativeBackend {
             .zip_with(&fwd.n, |u, n| u / n)?;
         let dw_norm = fwd.w_eff.scale_cols(&dn_over_n)?;
         let u = x.t_matmul(&ds)?.zip_with(&dw_norm, |p, q| p + q)?;
-        let da = u.matmul(&st.b.transposed())?;
+        let da = u.matmul_nt(&st.b)?;
         let db = st.a.t_matmul(&u)?;
         k::adam_update(&mut st.a, &da, &mut st.ma, &mut st.va, t, lr);
         k::adam_update(&mut st.b, &db, &mut st.mb, &mut st.vb, t, lr);
@@ -221,7 +228,7 @@ impl Backend for NativeBackend {
                 (loss, k::masked_mse_grad(&y, io.target, io.mask)?)
             }
         };
-        let da = x.t_matmul(&g.matmul(&st.b.transposed())?)?;
+        let da = x.t_matmul(&g.matmul_nt(&st.b)?)?;
         let db = xa.t_matmul(&g)?;
         k::adam_update(&mut st.a, &da, &mut st.ma, &mut st.va, t, lr);
         k::adam_update(&mut st.b, &db, &mut st.mb, &mut st.vb, t, lr);
@@ -254,7 +261,7 @@ impl Backend for NativeBackend {
         // backward
         let dlogits = k::masked_cross_entropy_grad(&logits, io.target, io.mask)?;
         let dwh = pooled.t_matmul(&dlogits)?;
-        let dpooled = dlogits.matmul(&st.wh.transposed())?;
+        let dpooled = dlogits.matmul_nt(&st.wh)?;
         // unpool the mean: every token row gets dpooled[sample] / tokens
         let tokens = spec.tokens;
         let (batch, d) = (dpooled.shape()[0], dpooled.shape()[1]);
@@ -271,7 +278,7 @@ impl Backend for NativeBackend {
             let gpre = relu_mask_grad(&dh, &pres[l])?;
             dwb_parts.push(hs[l].t_matmul(&gpre)?);
             let w = st.wb.subtensor(l);
-            dh = dh.zip_with(&gpre.matmul(&w.transposed())?, |u, v| u + v)?;
+            dh = dh.zip_with(&gpre.matmul_nt(&w)?, |u, v| u + v)?;
         }
         dwb_parts.reverse();
         let dwb = Tensor::stack(&dwb_parts)?;

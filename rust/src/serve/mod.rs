@@ -18,7 +18,7 @@
 //!   been passed over K times, capping deferral under saturating
 //!   inference load) and micro-batching of consecutive same-device
 //!   inference requests into single backend dispatches, amortizing the
-//!   tiled-matmul eval path. Per-device program order is never
+//!   vectorized-matmul eval path. Per-device program order is never
 //!   reordered, which keeps served results bitwise equal to serial
 //!   per-device execution.
 //! * [`server`] — the blocking `submit`/`wait` front-end plus scoped

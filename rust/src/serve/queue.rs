@@ -27,7 +27,7 @@
 //!   of *consecutive* inference requests at the front of that device's
 //!   queue is coalesced into one work unit (up to `max_batch_samples`
 //!   input samples), so one backend dispatch — one crossbar-stack build,
-//!   one tiled matmul chain — serves many requests. The run stops at
+//!   one vectorized matmul chain — serves many requests. The run stops at
 //!   the first maintenance request to preserve program order; the tail
 //!   batch is ragged (the native backend supports ragged batches).
 //! * **Bounded.** `submit` blocks while `capacity` requests are queued

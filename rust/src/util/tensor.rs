@@ -4,8 +4,24 @@
 //! optional PJRT backend converts to/from `xla::Literal`.
 //!
 //! Besides storage, this module carries the dense linear-algebra
-//! primitives the native kernels are built from (`matmul`, `transposed`,
-//! `map`/`zip_with`, column broadcast, token-mean pooling).
+//! primitives the native kernels are built from (`matmul`, `t_matmul`,
+//! `matmul_nt`, `transposed`, `map`/`zip_with`, column broadcast,
+//! token-mean pooling).
+//!
+//! # Canonical reduction order
+//!
+//! Every matrix product in this module — serial, row-parallel, packed,
+//! and the `matmul_naive` oracle alike — computes each output element
+//! with the same fixed reduction: the `k` products accumulate into
+//! [`LANES`] independent partial sums (product `kk` goes to lane
+//! `kk % LANES`, each lane summed in ascending `kk`), and the lanes
+//! fold into the result in ascending lane order (`fold_lanes`). The
+//! lanes are dependency-free, so the compiler autovectorizes the chunk
+//! loop on stable Rust (one 8 x f32 vector per accumulator set, wider
+//! still under the runtime-dispatched AVX2 copy) — while the order
+//! stays a pure function of the shapes. Thread count, banding, panel
+//! packing and ISA width are all bitwise invisible; that contract is
+//! what `tests/properties.rs` and `tests/parallel_calib.rs` pin down.
 
 use crate::anyhow::{bail, Result};
 use crate::util::threads;
@@ -14,6 +30,18 @@ use crate::util::threads;
 /// shard output rows across the thread pool; below this the scoped-spawn
 /// cost outweighs the kernel. 2^18 MACs ≈ a 64x64x64 product.
 const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Independent accumulator lanes in the canonical reduction order:
+/// product `kk` of a dot product accumulates into lane `kk % LANES`,
+/// and lanes fold in ascending index order. 8 x f32 = one 256-bit
+/// vector register, the widest ubiquitous x86 width; on narrower ISAs
+/// the same loop lowers to two 128-bit ops with identical results.
+pub const LANES: usize = 8;
+
+/// Columns per packed panel block: the inner kernel streams up to this
+/// many contiguous `k`-long B columns per pass, so a panel block
+/// (`k * PANEL_COLS` floats) stays L2-resident across the band's rows.
+const PANEL_COLS: usize = 128;
 
 /// Split `m` output rows into up to `workers` contiguous bands.
 fn row_bands(m: usize, workers: usize) -> Vec<(usize, usize)> {
@@ -153,14 +181,14 @@ impl Tensor {
     }
 
     /// Row-major matrix product: `[m, k] x [k, n] -> [m, n]`,
-    /// cache-blocked and row-parallel (the whole native backend hot path
-    /// sits on this function; the blocking scheme lives on the private
-    /// `matmul_rows` kernel below).
+    /// vectorized and row-parallel (the whole native backend hot path
+    /// sits on this function; the packed-panel micro-kernel lives on
+    /// the private `matmul_rows` below).
     ///
-    /// Bit-for-bit contract: for every output element the additions
-    /// happen in ascending-`k` order with the same `aik == 0.0` skip as
-    /// [`Tensor::matmul_naive`], so the blocked product is bitwise
-    /// identical to the naive one (property-tested in
+    /// Bit-for-bit contract: every output element is reduced in the
+    /// module's canonical lane order (see the module docs), exactly as
+    /// [`Tensor::matmul_naive`] computes it, so the vectorized product
+    /// is bitwise identical to the oracle (property-tested in
     /// `tests/properties.rs`). Keep that invariant when touching the
     /// loop nest — parallel eval determinism depends on it.
     ///
@@ -192,15 +220,38 @@ impl Tensor {
             // each band worker writes its disjoint row range of `out`
             // in place — no per-band allocation, no second copy. Bands
             // are equal-sized except the tail, so `chunks_mut` yields
-            // exactly the band windows.
+            // exactly the band windows. The rhs is packed column-major
+            // ONCE on this thread and shared read-only by every band —
+            // duplicating the strided packing pass per worker would
+            // burn memory bandwidth on identical copies. (The small-k
+            // kernel streams the row-major rhs directly, no panel.)
+            let panel = if k < LANES {
+                Vec::new()
+            } else {
+                pack_full(&other.data, k, n)
+            };
             let bands = row_bands(m, workers);
             let band_rows = bands[0].1;
             std::thread::scope(|s| {
+                let panel = &panel;
                 for (&(r0, r1), chunk) in
                     bands.iter().zip(out.chunks_mut(band_rows * n))
                 {
                     s.spawn(move || {
-                        matmul_rows(&self.data, &other.data, r0, r1, k, n, chunk)
+                        if k < LANES {
+                            small_k_matmul_rows(
+                                &self.data, &other.data, r0, r1, k, n, chunk,
+                            )
+                        } else {
+                            dot_panel_blocks(
+                                &self.data[r0 * k..r1 * k],
+                                r1 - r0,
+                                k,
+                                panel,
+                                n,
+                                chunk,
+                            )
+                        }
                     });
                 }
             });
@@ -210,8 +261,18 @@ impl Tensor {
         Tensor::new(vec![m, n], out)
     }
 
-    /// Reference i-k-j matmul kernel, kept as the bit-for-bit oracle the
-    /// blocked [`Tensor::matmul`] is property-tested against.
+    /// Reference kernel, kept as the bit-for-bit oracle the packed
+    /// [`Tensor::matmul`] is property-tested against. It spells out the
+    /// canonical reduction order in the most literal form: per output
+    /// element, walk `kk` ascending (B column-strided, no panels, no
+    /// tiling), accumulate into lane `kk % LANES`, fold lanes ascending.
+    ///
+    /// Until PR 5 the oracle (and the blocked kernel) reduced in plain
+    /// ascending-`k` order with a hard `aik == 0.0` skip; the lane-fold
+    /// order replaced it so the hot kernels can autovectorize, and the
+    /// oracle moved in lockstep — re-pinning the bitwise goldens once
+    /// rather than forfeiting the kernel == oracle == parallel
+    /// equivalence contract.
     pub fn matmul_naive(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 {
             bail!(
@@ -228,15 +289,12 @@ impl Tensor {
         let mut out = vec![0.0f32; m * n];
         for i in 0..m {
             let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
+            for j in 0..n {
+                let mut acc = [0.0f32; LANES];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    acc[kk % LANES] += aik * other.data[kk * n + j];
                 }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += aik * b;
-                }
+                out[i * n + j] = fold_lanes(acc);
             }
         }
         Tensor::new(vec![m, n], out)
@@ -244,16 +302,16 @@ impl Tensor {
 
     /// Transpose-aware product: `self^T x other`, i.e.
     /// `[k, m]^T x [k, n] -> [m, n]`, without materializing the
-    /// transpose. The `k`-outer loop streams one row of each operand
-    /// contiguously per iteration — this is the micro-kernel behind
-    /// every `X^T @ G` in the step VJPs, which previously paid a full
-    /// `transposed()` copy per call.
+    /// transpose (its band kernel packs the needed `self` columns into
+    /// a row-major panel, then runs the same packed dot micro-kernel as
+    /// [`Tensor::matmul`]) — this is the kernel behind every `X^T @ G`
+    /// in the step VJPs.
     ///
     /// Bitwise identical to `self.transposed().matmul_naive(other)`:
-    /// per output element the additions run in ascending-`k` order with
-    /// the same zero skip (property-tested in `tests/properties.rs`).
-    /// Output rows shard across the worker budget above
-    /// `PAR_MIN_MACS`, exactly like [`Tensor::matmul`].
+    /// every output element reduces in the canonical lane order
+    /// (property-tested in `tests/properties.rs`). Output rows shard
+    /// across the worker budget above `PAR_MIN_MACS`, exactly like
+    /// [`Tensor::matmul`].
     pub fn t_matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.shape.len() != 2 || other.shape.len() != 2 {
             bail!(
@@ -276,6 +334,63 @@ impl Tensor {
         if workers > 1
             && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
         {
+            // rhs packed once, shared by all bands (as in `matmul`);
+            // the lhs-column pack stays per band — those columns are
+            // disjoint per band, so no work is duplicated there
+            let panel = pack_full(&other.data, k, n);
+            let bands = row_bands(m, workers);
+            let band_rows = bands[0].1;
+            std::thread::scope(|s| {
+                let panel = &panel;
+                for (&(r0, r1), chunk) in
+                    bands.iter().zip(out.chunks_mut(band_rows * n))
+                {
+                    s.spawn(move || {
+                        let at = pack_lhs_columns(&self.data, r0, r1, k, m);
+                        dot_panel_blocks(&at, r1 - r0, k, panel, n, chunk)
+                    });
+                }
+            });
+        } else {
+            t_matmul_rows(&self.data, &other.data, 0, m, k, m, n, &mut out);
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Product against a transposed rhs: `self x other^T`, i.e.
+    /// `[m, k] x [n, k]^T -> [m, n]`, without materializing the
+    /// transpose. The rows of `other` are exactly the `k`-contiguous
+    /// columns the packed micro-kernel wants, so the rhs arrives
+    /// pre-panelled and the kernel runs on it directly — this is the
+    /// shape of every `G @ B^T` / `G @ W^T` in the step VJPs, which
+    /// previously paid a `transposed()` copy per call.
+    ///
+    /// Bitwise identical to `self.matmul_naive(&other.transposed())`:
+    /// canonical lane order per output element (property-tested in
+    /// `tests/properties.rs`). Output rows shard across the worker
+    /// budget above `PAR_MIN_MACS`, exactly like [`Tensor::matmul`].
+    pub fn matmul_nt(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!(
+                "matmul_nt wants 2-D operands, got {:?} x {:?}^T",
+                self.shape,
+                other.shape
+            );
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (other.shape[0], other.shape[1]);
+        if k != k2 {
+            bail!(
+                "matmul_nt inner dim mismatch: {:?} x {:?}^T",
+                self.shape,
+                other.shape
+            );
+        }
+        let workers = threads::budget().min(m);
+        let mut out = vec![0.0f32; m * n];
+        if workers > 1
+            && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
+        {
             let bands = row_bands(m, workers);
             let band_rows = bands[0].1;
             std::thread::scope(|s| {
@@ -283,14 +398,12 @@ impl Tensor {
                     bands.iter().zip(out.chunks_mut(band_rows * n))
                 {
                     s.spawn(move || {
-                        t_matmul_rows(
-                            &self.data, &other.data, r0, r1, k, m, n, chunk,
-                        )
+                        matmul_nt_rows(&self.data, &other.data, r0, r1, k, n, chunk)
                     });
                 }
             });
         } else {
-            t_matmul_rows(&self.data, &other.data, 0, m, k, m, n, &mut out);
+            matmul_nt_rows(&self.data, &other.data, 0, m, k, n, &mut out);
         }
         Tensor::new(vec![m, n], out)
     }
@@ -416,19 +529,230 @@ impl Tensor {
     }
 }
 
-/// Cache-blocked micro-kernel over output rows `[r0, r1)` of an
-/// `[m, k] x [k, n]` product, written into the zeroed `(r1 - r0) * n`
-/// slice `out` (the band's disjoint window of the full output, so
-/// parallel band workers write in place with no copies); the serial
-/// kernel is the `(0, m)` band.
+/// Fold the lane partials of one output element in ascending lane
+/// order — the second half of the canonical reduction order. Every
+/// matrix kernel in this module (and the oracle) funnels through this
+/// exact fold; do not "simplify" it to `iter().sum()` (same order, but
+/// keep the starting point `acc[0]`, not `0.0`: a leading `+0.0` can
+/// flip a `-0.0` result's sign bit).
+#[inline(always)]
+fn fold_lanes(acc: [f32; LANES]) -> f32 {
+    let mut s = acc[0];
+    for &v in &acc[1..] {
+        s += v;
+    }
+    s
+}
+
+/// Canonical dot product of two equal-length contiguous slices: product
+/// `kk` accumulates into lane `kk % LANES` (each lane in ascending
+/// `kk`), lanes fold ascending. The chunk loop is the autovectorization
+/// surface — eight dependency-free accumulators, no reassociation
+/// needed, so the compiler emits one 8-wide (or two 4-wide) FMA-free
+/// multiply+add per chunk without `-ffast-math`.
+#[inline(always)]
+fn lane_dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (av, bv) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            acc[l] += av[l] * bv[l];
+        }
+    }
+    for (l, (&x, &y)) in
+        ca.remainder().iter().zip(cb.remainder()).enumerate()
+    {
+        acc[l] += x * y;
+    }
+    fold_lanes(acc)
+}
+
+/// The packed dot micro-kernel: output rows `[0, rows)` of a row-major
+/// `a` (`rows x k`) against `panel` columns `[jb, j_end)` (column
+/// `j - jb` of the panel holds the rhs column `j`, `k`-contiguous),
+/// written into `out[i * n + j]`.
 ///
-/// Blocking runs over rows (`MC`), the shared dim (`KC`) and columns
-/// (`NC`) so the working set — one output row segment plus one rhs row
-/// segment — stays in L1 while a `KC x NC` panel of the rhs is reused
-/// from L2 across the `MC` rows of a block. Per output element the
-/// additions happen in ascending-`k` order with the naive kernel's
-/// `aik == 0.0` skip, regardless of where the band starts — which is
-/// what makes both the blocking and the row sharding bitwise no-ops.
+/// Columns go four at a time so four independent lane-accumulator sets
+/// are in flight per `a` row — enough add chains to hide FP latency —
+/// with the shared `a` chunk loaded once per step. Per output element
+/// the reduction is exactly `lane_dot`'s (the four-wide tile changes
+/// which elements compute *concurrently*, never the order within one),
+/// and the j-tail falls back to `lane_dot` itself.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn dot_panel_block(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    panel: &[f32],
+    jb: usize,
+    j_end: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let w = j_end - jb;
+    let chunks = k / LANES;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n + jb..i * n + j_end];
+        let mut j = 0;
+        while j + 4 <= w {
+            let p0 = &panel[j * k..(j + 1) * k];
+            let p1 = &panel[(j + 1) * k..(j + 2) * k];
+            let p2 = &panel[(j + 2) * k..(j + 3) * k];
+            let p3 = &panel[(j + 3) * k..(j + 4) * k];
+            let mut a0 = [0.0f32; LANES];
+            let mut a1 = [0.0f32; LANES];
+            let mut a2 = [0.0f32; LANES];
+            let mut a3 = [0.0f32; LANES];
+            for c in 0..chunks {
+                let base = c * LANES;
+                let av = &arow[base..base + LANES];
+                let q0 = &p0[base..base + LANES];
+                let q1 = &p1[base..base + LANES];
+                let q2 = &p2[base..base + LANES];
+                let q3 = &p3[base..base + LANES];
+                for l in 0..LANES {
+                    a0[l] += av[l] * q0[l];
+                    a1[l] += av[l] * q1[l];
+                    a2[l] += av[l] * q2[l];
+                    a3[l] += av[l] * q3[l];
+                }
+            }
+            for (l, kk) in (chunks * LANES..k).enumerate() {
+                let av = arow[kk];
+                a0[l] += av * p0[kk];
+                a1[l] += av * p1[kk];
+                a2[l] += av * p2[kk];
+                a3[l] += av * p3[kk];
+            }
+            orow[j] = fold_lanes(a0);
+            orow[j + 1] = fold_lanes(a1);
+            orow[j + 2] = fold_lanes(a2);
+            orow[j + 3] = fold_lanes(a3);
+            j += 4;
+        }
+        for jj in j..w {
+            orow[jj] = lane_dot(arow, &panel[jj * k..(jj + 1) * k]);
+        }
+    }
+}
+
+/// AVX2 copy of the packed micro-kernel: the *same* Rust code
+/// (`dot_panel_block` is `#[inline(always)]`, so it recompiles inside
+/// this `target_feature` context with 256-bit vectors). rustc applies
+/// no fp contraction or reassociation, so both copies execute the
+/// identical IEEE mul/add sequence per element — the dispatch is
+/// bitwise invisible, only faster.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn dot_panel_avx2(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    panel: &[f32],
+    jb: usize,
+    j_end: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    dot_panel_block(a, rows, k, panel, jb, j_end, n, out)
+}
+
+/// Run the packed micro-kernel with the widest ISA the host offers
+/// (runtime-detected once, cached by `is_x86_feature_detected`). The
+/// baseline build stays portable stable Rust; no target-cpu flags.
+#[allow(clippy::too_many_arguments)]
+fn dot_panel(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    panel: &[f32],
+    jb: usize,
+    j_end: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: guarded by the runtime feature check above; the
+        // function body is plain safe Rust.
+        unsafe {
+            return dot_panel_avx2(a, rows, k, panel, jb, j_end, n, out);
+        }
+    }
+    dot_panel_block(a, rows, k, panel, jb, j_end, n, out)
+}
+
+/// Copy every column of the row-major `b` (`k x n`) into a column-major
+/// panel buffer (each column `k`-contiguous). One strided pass total:
+/// the serial kernels pack right before use, and the parallel paths
+/// pack once on the spawning thread and share the result read-only
+/// across bands — never once per worker.
+fn pack_full(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let mut panel = Vec::with_capacity(k * n);
+    for j in 0..n {
+        panel.extend((0..k).map(|kk| b[kk * n + j]));
+    }
+    panel
+}
+
+/// Gather lhs columns `[r0, r1)` of a row-major `[k, m]` operand into a
+/// contiguous row-major `rows x k` buffer (row `i` = column `r0 + i`).
+/// This is `t_matmul`'s band-local pack: bands own disjoint column
+/// ranges, so unlike the rhs panel there is nothing to share.
+fn pack_lhs_columns(
+    a: &[f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    let rows = r1 - r0;
+    let mut at = vec![0.0f32; rows * k];
+    for kk in 0..k {
+        let acol = &a[kk * m + r0..kk * m + r1];
+        for (i, &v) in acol.iter().enumerate() {
+            at[i * k + kk] = v;
+        }
+    }
+    at
+}
+
+/// Run the dot micro-kernel over a fully packed column-major rhs panel,
+/// `PANEL_COLS` columns per pass so the active block stays cache-hot
+/// across the rows. `a` is a contiguous `rows x k` lhs; `out` is the
+/// `rows * n` output window.
+fn dot_panel_blocks(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    panel: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    let mut jb = 0;
+    while jb < n {
+        let j_end = (jb + PANEL_COLS).min(n);
+        dot_panel(a, rows, k, &panel[jb * k..j_end * k], jb, j_end, n, out);
+        jb = j_end;
+    }
+}
+
+/// Band kernel over output rows `[r0, r1)` of an `[m, k] x [k, n]`
+/// product, written into the `(r1 - r0) * n` slice `out` (the band's
+/// disjoint window of the full output, so parallel band workers write
+/// in place with no copies); the serial kernel is the `(0, m)` band.
+/// Packs the rhs itself — the parallel `matmul` path instead packs
+/// once and hands each band `dot_panel_blocks` directly. Every element
+/// reduces in the canonical lane order regardless of where the band
+/// starts, which is what makes both the packing and the row sharding
+/// bitwise no-ops. Products with `k < LANES` (the rank-r adapter
+/// chain) take the j-vectorized small-k form of the same order.
 fn matmul_rows(
     a: &[f32],
     b: &[f32],
@@ -438,48 +762,72 @@ fn matmul_rows(
     n: usize,
     out: &mut [f32],
 ) {
-    const MC: usize = 32;
-    const KC: usize = 64;
-    const NC: usize = 256;
+    if k < LANES {
+        small_k_matmul_rows(a, b, r0, r1, k, n, out);
+        return;
+    }
+    let panel = pack_full(b, k, n);
+    dot_panel_blocks(&a[r0 * k..r1 * k], r1 - r0, k, &panel, n, out);
+}
+
+/// Small-`k` band kernel (`k < LANES`, the `[rows, r] x [r, d]`
+/// adapter-chain shape with rank r in 1..8): every product has its own
+/// lane, so the canonical reduction degenerates to the ascending-`k`
+/// sum *followed by folding the `LANES - k` empty lanes* — one `+0.0`
+/// per empty lane, kept rather than "optimized away" because
+/// `-0.0 + 0.0 == +0.0` (IEEE), which also stops the compiler from
+/// deleting it. With the reduction this tiny, a dot formulation is all
+/// overhead; this reformulates the identical per-element operation
+/// sequence as a j-vectorized saxpy over the row-major rhs (the `=`
+/// on the first product mirrors the fold *starting from* lane 0, not
+/// from 0.0), so the compiler vectorizes over `n` instead.
+fn small_k_matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(k < LANES);
     debug_assert_eq!(out.len(), (r1 - r0) * n);
-    let mut ib = r0;
-    while ib < r1 {
-        let i_end = (ib + MC).min(r1);
-        let mut jb = 0;
-        while jb < n {
-            let j_end = (jb + NC).min(n);
-            let mut kb = 0;
-            while kb < k {
-                let k_end = (kb + KC).min(k);
-                for i in ib..i_end {
-                    let arow = &a[i * k..(i + 1) * k];
-                    let obase = (i - r0) * n;
-                    let orow = &mut out[obase + jb..obase + j_end];
-                    for kk in kb..k_end {
-                        let aik = arow[kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[kk * n + jb..kk * n + j_end];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += aik * bv;
-                        }
-                    }
+    for i in r0..r1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let obase = (i - r0) * n;
+        let orow = &mut out[obase..obase + n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            if kk == 0 {
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o = aik * bv;
                 }
-                kb = k_end;
+            } else {
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
             }
-            jb = j_end;
         }
-        ib = i_end;
+        // the empty-lane folds: the canonical fold performs k-1 real
+        // adds (done above) plus LANES-k > 0 adds of +0.0 lanes. A
+        // chain of one-or-more `x + 0.0` is bitwise equal to a single
+        // one (`-0.0 + 0.0 == +0.0` on the first; every later add is
+        // the identity, incl. NaN/inf), so one vectorized pass folds
+        // them all. For k == 0 the pre-zeroed +0.0 output stands in
+        // for lane 0 and stays +0.0 — same bits as the fold. rustc
+        // cannot delete `+ 0.0` without fast-math, so this survives.
+        for o in orow.iter_mut() {
+            *o += 0.0;
+        }
     }
 }
 
-/// `k`-outer transpose-aware kernel over output rows `[r0, r1)` of an
+/// Transpose-aware band kernel over output rows `[r0, r1)` of an
 /// `[k, m]^T x [k, n]` product (output row `i` = column `i` of `a`),
-/// written into the zeroed band window `out` like [`matmul_rows`].
-/// Streams one row of each operand contiguously per `kk`; per output
-/// element the additions run in ascending-`k` order with the zero skip,
-/// so banding is bitwise invisible here too.
+/// written into the band window `out` like [`matmul_rows`]. The band's
+/// `a` columns are gathered once into a row-major `rows x k` buffer —
+/// after which this is exactly the packed product above, canonical
+/// order and all.
 #[allow(clippy::too_many_arguments)]
 fn t_matmul_rows(
     a: &[f32],
@@ -492,19 +840,27 @@ fn t_matmul_rows(
     out: &mut [f32],
 ) {
     debug_assert_eq!(out.len(), (r1 - r0) * n);
-    for kk in 0..k {
-        let arow = &a[kk * m + r0..kk * m + r1];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for (i, &aki) in arow.iter().enumerate() {
-            if aki == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += aki * bv;
-            }
-        }
-    }
+    let at = pack_lhs_columns(a, r0, r1, k, m);
+    let panel = pack_full(b, k, n);
+    dot_panel_blocks(&at, r1 - r0, k, &panel, n, out);
+}
+
+/// Band kernel over output rows `[r0, r1)` of an `[m, k] x [n, k]^T`
+/// product: the rhs rows are already `k`-contiguous columns of the
+/// logical `[k, n]` rhs, so `b` is used as the panel directly — no
+/// packing pass at all, but the same `PANEL_COLS` blocking as every
+/// other kernel so the active block stays cache-resident across rows.
+fn matmul_nt_rows(
+    a: &[f32],
+    b: &[f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    dot_panel_blocks(&a[r0 * k..r1 * k], r1 - r0, k, b, n, out);
 }
 
 #[cfg(test)]
@@ -605,9 +961,9 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matmul_crosses_block_boundaries() {
-        // dims straddle the MC=32 / KC=64 block edges; values include
-        // zeros so the skip path runs on both kernels
+    fn packed_matmul_crosses_lane_and_tile_boundaries() {
+        // k straddles a LANES=8 chunk edge (65 = 8*8+1 tail), n leaves a
+        // j-tile tail (17 = 4*4+1); values include zeros and negatives
         let (m, k, n) = (33, 65, 17);
         let mk = |len: usize, salt: usize| -> Vec<f32> {
             (0..len)
@@ -622,12 +978,61 @@ mod tests {
         };
         let a = Tensor::new(vec![m, k], mk(m * k, 1)).unwrap();
         let b = Tensor::new(vec![k, n], mk(k * n, 5)).unwrap();
-        let blocked = a.matmul(&b).unwrap();
+        let packed = a.matmul(&b).unwrap();
         let naive = a.matmul_naive(&b).unwrap();
-        assert_eq!(blocked.shape(), naive.shape());
-        for (x, y) in blocked.data().iter().zip(naive.data()) {
+        assert_eq!(packed.shape(), naive.shape());
+        for (x, y) in packed.data().iter().zip(naive.data()) {
             assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn matmul_nt_matches_materialized_transpose() {
+        let (m, k, n) = (9, 21, 13);
+        let mk = |len: usize, salt: usize| -> Vec<f32> {
+            (0..len)
+                .map(|i| {
+                    if (i + salt) % 5 == 0 {
+                        0.0
+                    } else {
+                        ((i * 29 + salt) % 17) as f32 - 8.0
+                    }
+                })
+                .collect()
+        };
+        let a = Tensor::new(vec![m, k], mk(m * k, 4)).unwrap();
+        let b = Tensor::new(vec![n, k], mk(n * k, 11)).unwrap();
+        let fused = a.matmul_nt(&b).unwrap();
+        let reference = a.matmul_naive(&b.transposed()).unwrap();
+        assert_eq!(fused.shape(), &[m, n]);
+        for (x, y) in fused.data().iter().zip(reference.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+        // inner-dim mismatch rejected (b rows must be k long)
+        let c = Tensor::new(vec![3, k + 1], vec![1.0; 3 * (k + 1)]).unwrap();
+        assert!(a.matmul_nt(&c).is_err());
+    }
+
+    #[test]
+    fn lane_fold_is_the_canonical_order() {
+        // one 8-lane chunk plus a 3-wide tail: the oracle, the packed
+        // kernel and a hand-rolled lane walk must agree bitwise
+        let k = 11;
+        let a: Vec<f32> = (0..k).map(|i| (i as f32 - 4.5) * 0.37).collect();
+        let b: Vec<f32> = (0..k).map(|i| (i as f32 * 1.3 - 6.0) * 0.21).collect();
+        let mut acc = [0.0f32; LANES];
+        for kk in 0..k {
+            acc[kk % LANES] += a[kk] * b[kk];
+        }
+        let want = fold_lanes(acc);
+        assert_eq!(lane_dot(&a, &b).to_bits(), want.to_bits());
+        let ta = Tensor::new(vec![1, k], a).unwrap();
+        let tb = Tensor::new(vec![k, 1], b).unwrap();
+        assert_eq!(ta.matmul(&tb).unwrap().data()[0].to_bits(), want.to_bits());
+        assert_eq!(
+            ta.matmul_naive(&tb).unwrap().data()[0].to_bits(),
+            want.to_bits()
+        );
     }
 
     #[test]
@@ -701,6 +1106,17 @@ mod tests {
             );
         }
         for (x, y) in full_t.iter().zip(&spliced_t) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // nt kernel: b is [n, k] (rows pre-packed as columns)
+        let bn = mk(n * k, 11);
+        let mut full_nt = vec![0.0f32; m * n];
+        matmul_nt_rows(&a, &bn, 0, m, k, n, &mut full_nt);
+        let mut spliced_nt = vec![0.0f32; m * n];
+        for &(r0, r1) in &row_bands(m, 3) {
+            matmul_nt_rows(&a, &bn, r0, r1, k, n, &mut spliced_nt[r0 * n..r1 * n]);
+        }
+        for (x, y) in full_nt.iter().zip(&spliced_nt) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
     }

@@ -12,7 +12,8 @@
 
 use rimc_dora::calib::{CalibConfig, InputMode};
 use rimc_dora::coordinator::{
-    fig2_drift_sweep, Engine, RecalibrationScheduler, SchedulerPolicy,
+    fig2_drift_sweep, fig6_lora_vs_dora, Engine, RecalibrationScheduler,
+    SchedulerPolicy,
 };
 use rimc_dora::util::threads::set_threads;
 
@@ -132,6 +133,51 @@ fn seed_parallel_sweep_is_bitwise_equal_to_serial() {
     let serial = fig2_bits(1);
     let two = fig2_bits(2);
     let auto = fig2_bits(0);
+    assert_eq!(serial, two);
+    assert_eq!(serial, auto);
+}
+
+/// The fig6 (drift, rank) grid fans cells out over the pool; rows must
+/// come back in grid order with bit-identical accuracies on any
+/// schedule.
+fn fig6_bits(threads: usize) -> Vec<(u64, usize, u64, u64)> {
+    set_threads(threads);
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+    let cfg = CalibConfig {
+        max_steps_per_layer: 10,
+        ..CalibConfig::default()
+    };
+    let rows =
+        fig6_lora_vs_dora(&session, &[0.1, 0.25], 10, &cfg, 3).unwrap();
+    set_threads(0);
+    rows.iter()
+        .map(|r| {
+            (
+                r.rel_drift.to_bits(),
+                r.rank,
+                r.dora_acc.to_bits(),
+                r.lora_acc.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn grid_parallel_fig6_is_bitwise_equal_to_serial() {
+    let serial = fig6_bits(1);
+    let two = fig6_bits(2);
+    let auto = fig6_bits(0);
+    // grid order: drift-major, then rank, regardless of schedule
+    let eng = Engine::native();
+    let ranks = eng.session("nano").unwrap().spec.ranks.clone();
+    let want_cells: Vec<(u64, usize)> = [0.1f64, 0.25]
+        .iter()
+        .flat_map(|&rel| ranks.iter().map(move |&r| (rel.to_bits(), r)))
+        .collect();
+    let got_cells: Vec<(u64, usize)> =
+        serial.iter().map(|r| (r.0, r.1)).collect();
+    assert_eq!(got_cells, want_cells);
     assert_eq!(serial, two);
     assert_eq!(serial, auto);
 }

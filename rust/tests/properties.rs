@@ -2,7 +2,10 @@
 //! harness; see util::quickcheck). These pin down the coordinator
 //! invariants: routing of writes to the right memory, drift statistics,
 //! endurance monotonicity, batching coverage, and the bit-for-bit
-//! equivalence of the tiled matmul kernels with the naive oracle.
+//! equivalence of the vectorized lane-fold matmul kernels with the
+//! canonical-order oracle (`Tensor::matmul_naive`), including the
+//! LANES=8 chunk boundaries, the 4-column register-tile tails, and
+//! empty/single-row operands.
 
 use rimc_dora::calib::make_batches;
 use rimc_dora::device::{constants, DriftModel, ProgramModel, WeightCoding};
@@ -234,8 +237,9 @@ fn matmul_operand(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
 }
 
 #[test]
-fn prop_tiled_matmul_is_bitwise_equal_to_naive() {
-    // shapes straddle the MC=32 / KC=64 / NC=256 block edges
+fn prop_packed_matmul_is_bitwise_equal_to_naive() {
+    // shapes straddle the LANES=8 chunk, 4-column tile and
+    // PANEL_COLS=128 panel edges
     forall(
         8,
         40,
@@ -244,25 +248,86 @@ fn prop_tiled_matmul_is_bitwise_equal_to_naive() {
             let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
             let a = matmul_operand(&mut rng, m, k);
             let b = matmul_operand(&mut rng, k, n);
-            let tiled = a.matmul(&b).map_err(|e| e.to_string())?;
+            let packed = a.matmul(&b).map_err(|e| e.to_string())?;
             let naive = a.matmul_naive(&b).map_err(|e| e.to_string())?;
             prop_assert!(
-                tiled.shape() == naive.shape(),
+                packed.shape() == naive.shape(),
                 "shape {:?} vs {:?}",
-                tiled.shape(),
+                packed.shape(),
                 naive.shape()
             );
             for (i, (x, y)) in
-                tiled.data().iter().zip(naive.data()).enumerate()
+                packed.data().iter().zip(naive.data()).enumerate()
             {
                 prop_assert!(
                     x.to_bits() == y.to_bits(),
-                    "{m}x{k}x{n} elem {i}: tiled {x} != naive {y}"
+                    "{m}x{k}x{n} elem {i}: packed {x} != naive {y}"
                 );
             }
             Ok(())
         },
     );
+}
+
+/// Every kernel at every lane-boundary `k` (chunk tails of 0, 1 and
+/// LANES-1 products) crossed with j-tile tail widths, plus empty and
+/// single-row operands — the shapes where an off-by-one in the chunk
+/// or tile loop would hide from random sizes.
+#[test]
+fn prop_lane_boundary_shapes_match_oracle_bitwise() {
+    let check = |m: usize, k: usize, n: usize| {
+        let mut rng = Rng::new((m * 7919 + k * 131 + n + 1) as u64);
+        let a = matmul_operand(&mut rng, m, k);
+        let b = matmul_operand(&mut rng, k, n);
+        let naive = a.matmul_naive(&b).unwrap();
+        let packed = a.matmul(&b).unwrap();
+        for (x, y) in packed.data().iter().zip(naive.data()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "matmul {m}x{k}x{n}: {x} vs {y}"
+            );
+        }
+        // t_matmul on the transposed lhs hits the same (m, k, n)
+        let at = a.transposed();
+        let fused = at.t_matmul(&b).unwrap();
+        for (x, y) in fused.data().iter().zip(naive.data()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "t_matmul {m}x{k}x{n}: {x} vs {y}"
+            );
+        }
+        // matmul_nt on the transposed rhs likewise
+        let bt = b.transposed();
+        let nt = a.matmul_nt(&bt).unwrap();
+        for (x, y) in nt.data().iter().zip(naive.data()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "matmul_nt {m}x{k}x{n}: {x} vs {y}"
+            );
+        }
+    };
+    for &k in &[1usize, 7, 8, 9, 63, 64, 65] {
+        for &n in &[1usize, 3, 4, 5, 9] {
+            check(3, k, n);
+        }
+        check(1, k, 7); // single-row lhs
+    }
+    // empty operands: zero rows, zero cols, zero reduction — all legal
+    // tensors, all produce (possibly empty) all-zero outputs
+    let a0 = Tensor::zeros(vec![0, 5]);
+    let b5 = Tensor::zeros(vec![5, 3]);
+    assert_eq!(a0.matmul(&b5).unwrap().shape(), &[0, 3]);
+    let a25 = Tensor::zeros(vec![2, 5]);
+    let b0 = Tensor::zeros(vec![5, 0]);
+    assert_eq!(a25.matmul(&b0).unwrap().shape(), &[2, 0]);
+    let ak0 = Tensor::zeros(vec![2, 0]);
+    let bk0 = Tensor::zeros(vec![0, 3]);
+    let z = ak0.matmul(&bk0).unwrap();
+    assert_eq!(z.shape(), &[2, 3]);
+    assert!(z.data().iter().all(|v| v.to_bits() == 0.0f32.to_bits()));
 }
 
 #[test]
@@ -345,6 +410,35 @@ fn prop_row_parallel_t_matmul_is_bitwise_equal_to_reference() {
                 prop_assert!(
                     x.to_bits() == y.to_bits(),
                     "{k}^T x{m}x{n} elem {i}: row-parallel {x} != ref {y}"
+                );
+            }
+            Ok(())
+        },
+    );
+    rimc_dora::util::threads::set_threads(0);
+}
+
+#[test]
+fn prop_row_parallel_matmul_nt_is_bitwise_equal_to_reference() {
+    rimc_dora::util::threads::set_threads(3);
+    forall(
+        13,
+        6,
+        |r| (64 + r.below(40), 64 + r.below(40), 64 + r.below(40)),
+        |&(m, k, n)| {
+            let mut rng = Rng::new((m * 1_000_003 + k * 733 + n) as u64);
+            let a = matmul_operand(&mut rng, m, k);
+            let bn = matmul_operand(&mut rng, n, k);
+            let par = a.matmul_nt(&bn).map_err(|e| e.to_string())?;
+            let reference = a
+                .matmul_naive(&bn.transposed())
+                .map_err(|e| e.to_string())?;
+            for (i, (x, y)) in
+                par.data().iter().zip(reference.data()).enumerate()
+            {
+                prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{m}x{k}x{n} elem {i}: row-parallel nt {x} != ref {y}"
                 );
             }
             Ok(())

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Schema-check BENCH_<name>.json files and gate wall-time regressions
+against the committed bench_baselines/ snapshots.
+
+Usage:
+    python3 tools/bench_check.py BENCH_a.json [BENCH_b.json ...]
+        [--baselines DIR] [--max-regress 0.15] [--min-delta-ns 500000]
+
+Two phases, both of which CI and `make bench-json` run:
+
+1. **Schema**: every file must carry a `bench` name and a non-empty
+   `records` list whose rows have op / preset / threads / wall_ns /
+   speedup, with positive wall times. A bench that silently stops
+   emitting results fails here.
+
+2. **Regression gate**: for each file, the baseline
+   `<baselines>/<basename>` (same name minus the `BENCH_` prefix
+   handling — i.e. `BENCH_runtime_hotpath.json` diffs against
+   `bench_baselines/runtime_hotpath.json`) is loaded if present.
+   Records are matched on the `(op, preset, threads)` key; a matching
+   record whose wall time grew more than `--max-regress` (default 15%)
+   *and* by more than `--min-delta-ns` (absolute-noise floor, default
+   0.5 ms) fails the gate. Baseline keys missing from the new run are
+   reported as coverage warnings, never failures (benches evolve). A
+   missing baseline file, or one with an empty record list, passes
+   with a note — that is the bootstrap state; refresh with
+   `make bench-baseline` after a trusted full run.
+
+Speedup-type records (`*-simd`, `calib-vjp-mix`, parallel multipliers)
+are additionally gated in the *other* direction: if both runs carry the
+record, the new `speedup` may not fall below 70% of the baseline's —
+a vectorization or threading win silently rotting away is exactly the
+regression this trajectory exists to catch.
+"""
+import argparse
+import json
+import os
+import sys
+
+REQUIRED_KEYS = ("op", "preset", "threads", "wall_ns", "speedup")
+
+
+def fail(msg):
+    print(f"bench_check: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: unreadable or invalid JSON ({e})")
+
+
+def check_schema(path, doc):
+    if not doc.get("bench"):
+        fail(f"{path}: missing bench name")
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        fail(f"{path}: no records")
+    for r in records:
+        for key in REQUIRED_KEYS:
+            if key not in r:
+                fail(f"{path}: record missing {key}: {r}")
+        if not r["wall_ns"] > 0:
+            fail(f"{path}: non-positive wall_ns: {r}")
+    print(f"bench_check: {path}: schema ok ({len(records)} records)")
+
+
+def key_of(r):
+    return (r["op"], r["preset"], r["threads"])
+
+
+def check_regressions(path, doc, base_dir, max_regress, min_delta_ns):
+    name = os.path.basename(path)
+    if name.startswith("BENCH_"):
+        name = name[len("BENCH_"):]
+    base_path = os.path.join(base_dir, name)
+    if not os.path.exists(base_path):
+        print(f"bench_check: {path}: no baseline at {base_path} "
+              f"(bootstrap state) — recording only, nothing gated")
+        return 0
+    base = load(base_path)
+    base_records = {key_of(r): r for r in base.get("records", [])}
+    if not base_records:
+        print(f"bench_check: {path}: baseline {base_path} is empty "
+              f"(bootstrap state) — refresh with `make bench-baseline` "
+              f"after a trusted run")
+        return 0
+    new_records = {key_of(r): r for r in doc["records"]}
+    failures = 0
+    matched = 0
+    for key, br in sorted(base_records.items()):
+        nr = new_records.get(key)
+        if nr is None:
+            print(f"bench_check: {path}: WARNING: baseline key {key} "
+                  f"missing from this run (coverage drop?)")
+            continue
+        matched += 1
+        grew = nr["wall_ns"] - br["wall_ns"]
+        if (grew > br["wall_ns"] * max_regress and grew > min_delta_ns):
+            print(f"bench_check: {path}: REGRESSION {key}: wall "
+                  f"{br['wall_ns']:.0f} -> {nr['wall_ns']:.0f} ns "
+                  f"(+{100.0 * grew / br['wall_ns']:.1f}% > "
+                  f"{100.0 * max_regress:.0f}%)")
+            failures += 1
+        if br["speedup"] > 1.0 and nr["speedup"] < 0.7 * br["speedup"]:
+            print(f"bench_check: {path}: REGRESSION {key}: speedup "
+                  f"{br['speedup']:.2f}x -> {nr['speedup']:.2f}x "
+                  f"(< 70% of baseline)")
+            failures += 1
+    print(f"bench_check: {path}: {matched} baseline keys compared, "
+          f"{failures} regressions")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--baselines", default="bench_baselines")
+    ap.add_argument("--max-regress", type=float, default=0.15)
+    ap.add_argument("--min-delta-ns", type=float, default=5e5)
+    args = ap.parse_args()
+    failures = 0
+    for path in args.files:
+        doc = load(path)
+        check_schema(path, doc)
+        failures += check_regressions(
+            path, doc, args.baselines, args.max_regress, args.min_delta_ns)
+    if failures:
+        fail(f"{failures} wall-time/speedup regressions vs "
+             f"{args.baselines}/ (>{100.0 * args.max_regress:.0f}%)")
+    print("bench_check: all gates passed")
+
+
+if __name__ == "__main__":
+    main()
