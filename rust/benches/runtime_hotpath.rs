@@ -1,15 +1,19 @@
 //! Backend hot-path microbenchmarks: per-dispatch latency of every
 //! kernel class on the request path — single-layer forwards (the
 //! in-field inference path), the DoRA Adam step (the calibration inner
-//! loop), the backprop baseline step, the stacked full-model eval
-//! forward, the vectorized-vs-PR-4-scalar matmul kernels (SIMD speedup
-//! at fixed thread count), the serial-vs-parallel matmul size sweep,
-//! the parallel batch eval multiplier, the calibration-round
-//! throughput (layer-parallel vs serial) with a scalar-vs-vector
-//! VJP-shape mix, and end-to-end calibrate+eval gates on the
-//! paper-scale `m20` and `m50` presets. Runs on the native backend,
-//! hermetically; rebuild with `--features pjrt` and use the CLI to
-//! compare against the artifact path.
+//! loop), the backprop baseline step, the steady-state allocation
+//! count of the warmed-up step loop (asserted zero via a counting
+//! global allocator), the arena-vs-fresh-allocation step speedup, the
+//! stacked full-model eval forward, the vectorized-vs-PR-4-scalar
+//! matmul kernels (SIMD speedup at fixed thread count), the
+//! serial-vs-parallel matmul size sweep, the parallel batch eval
+//! multiplier, the calibration-round throughput (layer-parallel vs
+//! serial) with a scalar-vs-vector VJP-shape mix, a skewed-load
+//! scheduling regression (cost-weighted vs input-order claiming), and
+//! end-to-end calibrate+eval gates on the paper-scale `m20`, `m50`
+//! and `m100` presets. Runs on the native backend, hermetically;
+//! rebuild with `--features pjrt` and use the CLI to compare against
+//! the artifact path.
 //!
 //! Besides stdout, the measured configurations are written to
 //! `BENCH_runtime_hotpath.json` (op / preset / threads / wall-time /
@@ -31,7 +35,16 @@ use rimc_dora::runtime::{
 use rimc_dora::util::bench::{write_bench_json, BenchRecord, Harness};
 use rimc_dora::util::cli::Args;
 use rimc_dora::util::tensor::Tensor;
-use rimc_dora::util::threads;
+use rimc_dora::util::threads::{self, ThreadPool};
+use rimc_dora::util::{allocmon, arena};
+
+// The whole point of the arenas is that the steady-state step loop
+// performs zero heap allocations — installing the counting allocator
+// in this binary is what turns that from a claim into an assert. The
+// library never installs it; counting is one relaxed atomic add per
+// allocation event, invisible next to the kernels being measured.
+#[global_allocator]
+static GLOBAL: allocmon::CountingAlloc = allocmon::CountingAlloc;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -138,6 +151,142 @@ fn main() {
             .unwrap();
     });
 
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // -- steady-state allocation freedom (the arenas gate). Hand-rolled
+    //    windows instead of `Harness::bench`: the harness itself
+    //    allocates (name strings, the samples vec) and would pollute
+    //    the counter. Serial on purpose — spawning scoped workers
+    //    allocates thread stacks, which is a per-*section* cost, not a
+    //    per-*step* one; the parallel paths are covered by the
+    //    determinism tests instead. Min over windows: the first window
+    //    may still grow a free-list backbone or the allocator's own
+    //    caches, but a warmed-up loop must reach exactly zero.
+    threads::set_threads(1);
+    for _ in 0..32 {
+        t += 1.0;
+        backend
+            .dora_step(
+                spec,
+                LayerRole::Block,
+                StepIo { x: &x, mask: &mask, target: &target },
+                &arr,
+                &mut st,
+                t,
+                cfg.lr,
+            )
+            .unwrap();
+    }
+    arena::reset_counters();
+    let steps_per_window = 16u64;
+    let mut min_allocs = u64::MAX;
+    for _ in 0..3 {
+        let a0 = allocmon::allocations();
+        for _ in 0..steps_per_window {
+            t += 1.0;
+            backend
+                .dora_step(
+                    spec,
+                    LayerRole::Block,
+                    StepIo { x: &x, mask: &mask, target: &target },
+                    &arr,
+                    &mut st,
+                    t,
+                    cfg.lr,
+                )
+                .unwrap();
+        }
+        min_allocs = min_allocs.min(allocmon::allocations() - a0);
+    }
+    let (hits, misses) = arena::counters();
+    println!(
+        "\nsteady-state dora_step allocations: {min_allocs} over \
+         {steps_per_window} warmed-up steps (min of 3 windows; arena \
+         checkouts {hits} hit / {misses} miss)"
+    );
+    // the assert IS the record here — an allocation count gated to
+    // exactly zero has no trajectory worth a JSON row (and the schema
+    // check rightly rejects wall_ns == 0)
+    assert_eq!(
+        min_allocs, 0,
+        "warmed-up dora_step loop allocated: a hot-path buffer is \
+         bypassing the workspace arena (util::arena / DESIGN.md §6)"
+    );
+    // bp_step is report-only: its whole-network pass keeps Vec<Tensor>
+    // activation containers whose backbones are rebuilt per step, so
+    // "zero" is not the contract there — the trajectory still belongs
+    // in the log to catch regressions of the arena-backed majority
+    let b0 = allocmon::allocations();
+    for _ in 0..4 {
+        tb += 1.0;
+        backend
+            .bp_step(
+                spec,
+                StepIo { x: &x, mask: &sample_mask, target: &y_onehot },
+                &mut bp,
+                tb,
+                2e-4,
+            )
+            .unwrap();
+    }
+    println!(
+        "bp_step allocations (report-only): {:.1}/step",
+        (allocmon::allocations() - b0) as f64 / 4.0
+    );
+
+    // -- arena vs fresh allocation: the same warmed-up step loop with
+    //    the pool disabled is the honest measurement of what the
+    //    arenas buy per step (`set_enabled(false)` degrades every
+    //    checkout to `Vec::with_capacity` and every recycle to a drop)
+    let mut ha = Harness::new(
+        if smoke { 2 } else { 8 },
+        if smoke { 8 } else { 50 },
+    );
+    let arena_ns = ha.bench("dora_step (workspace arena)", || {
+        t += 1.0;
+        backend
+            .dora_step(
+                spec,
+                LayerRole::Block,
+                StepIo { x: &x, mask: &mask, target: &target },
+                &arr,
+                &mut st,
+                t,
+                cfg.lr,
+            )
+            .unwrap();
+    });
+    arena::set_enabled(false);
+    let malloc_ns = ha.bench("dora_step (fresh allocation)", || {
+        t += 1.0;
+        backend
+            .dora_step(
+                spec,
+                LayerRole::Block,
+                StepIo { x: &x, mask: &mask, target: &target },
+                &arr,
+                &mut st,
+                t,
+                cfg.lr,
+            )
+            .unwrap();
+    });
+    arena::set_enabled(true);
+    threads::set_threads(0);
+    ha.print_summary("allocation-free step loop (arena vs malloc)");
+    println!(
+        "\narena speedup on dora_step: {:.2}x (fresh allocation vs \
+         workspace arena, 1 thread)",
+        malloc_ns / arena_ns
+    );
+    records.push(BenchRecord {
+        op: "dora-step-arena".into(),
+        preset: "nano".into(),
+        threads: 1,
+        wall_ns: arena_ns,
+        speedup: malloc_ns / arena_ns,
+    });
+
     // -- full-model eval (the sweep inner loop)
     let eval_rows = spec.eval_rows();
     let xe = Tensor::new(
@@ -196,7 +345,6 @@ fn main() {
 
     // -- parallel batch eval; micro is the bench-scale subject, nano
     //    keeps the CI smoke run under a second
-    let mut records: Vec<BenchRecord> = Vec::new();
     let eval_model = if smoke { "nano" } else { "micro" };
     let esession = eng.session(eval_model).unwrap();
     let mut estudent = esession.drifted_student(0.2, 3).unwrap();
@@ -466,16 +614,75 @@ fn main() {
         vjp_scalar / vjp_vec
     );
 
-    // -- m20 / m50 end-to-end: the paper-scale presets must complete a
-    //    hermetic calibrate+eval (smoke-gated in CI). The zero-RRAM-
-    //    write invariant is asserted, not just reported. m50 rides the
-    //    vectorized kernel — on the PR-4 scalar kernel it was strictly
-    //    a batch job. Teachers for both presets train concurrently.
+    // -- skewed-load scheduling: a work list whose two heavy items sit
+    //    at the *end* is the worst case for input-order claiming (a
+    //    worker picks up a heavy item when the queue is nearly drained
+    //    and the rest of the pool idles behind it). Cost-weighted
+    //    claiming (`map_weighted`, LPT order) starts the heavy items
+    //    first, so it must match or beat input-order claiming at any
+    //    multi-threaded width — asserted with a noise margin, and only
+    //    at `par_threads >= 2` where the schedules actually differ.
+    if par_threads > 1 {
+        let mut sizes = vec![48usize; 10];
+        sizes.extend([160, 192]);
+        let jobs: Vec<Tensor> = sizes
+            .iter()
+            .map(|&s| Tensor::new(vec![s, s], fill(s * s, s)).unwrap())
+            .collect();
+        // cost of s x s x s is s^3; saturating: the weights are only a
+        // claim order, not arithmetic
+        let weights: Vec<u64> =
+            sizes.iter().map(|&s| (s * s * s) as u64).collect();
+        let mut hs = Harness::new(
+            if smoke { 1 } else { 5 },
+            if smoke { 3 } else { 20 },
+        );
+        threads::set_threads(par_threads);
+        // constructed after set_threads: the pool snapshots the budget
+        let pool = ThreadPool::global();
+        let unweighted_ns =
+            hs.bench("skewed jobs (input-order claiming)", || {
+                pool.map(&jobs, |j| j.matmul(j).unwrap());
+            });
+        let weighted_ns =
+            hs.bench("skewed jobs (cost-weighted claiming)", || {
+                pool.map_weighted(&jobs, &weights, |j| j.matmul(j).unwrap());
+            });
+        threads::set_threads(0);
+        hs.print_summary("skewed-load scheduling (weighted vs input order)");
+        println!(
+            "\ncost-weighted claiming speedup on skewed jobs: {:.2}x \
+             ({par_threads} threads)",
+            unweighted_ns / weighted_ns
+        );
+        assert!(
+            weighted_ns <= unweighted_ns * 1.25,
+            "cost-weighted claiming lost to input-order claiming on a \
+             tail-heavy work list ({weighted_ns:.0} ns vs \
+             {unweighted_ns:.0} ns): the LPT claim order in \
+             threads::map_weighted has regressed"
+        );
+        records.push(BenchRecord {
+            op: "skewed-bands".into(),
+            preset: "-".into(),
+            threads: par_threads,
+            wall_ns: weighted_ns,
+            speedup: unweighted_ns / weighted_ns,
+        });
+    }
+
+    // -- m20 / m50 / m100 end-to-end: the paper-scale presets must
+    //    complete a hermetic calibrate+eval (smoke-gated in CI). The
+    //    zero-RRAM-write invariant is asserted, not just reported. m50
+    //    rides the vectorized kernel — on the PR-4 scalar kernel it was
+    //    strictly a batch job — and m100 rides the allocation-free hot
+    //    loop and cost-weighted claiming the same way. Teachers for all
+    //    three presets train concurrently.
     threads::set_threads(par_threads);
     let t0 = Instant::now();
-    eng.preload(&["m20", "m50"]).unwrap();
+    eng.preload(&["m20", "m50", "m100"]).unwrap();
     let teacher_s = t0.elapsed().as_secs_f64();
-    for model in ["m20", "m50"] {
+    for model in ["m20", "m50", "m100"] {
         let ms = eng.session(model).unwrap();
         let mut mstudent = ms.drifted_student(0.2, 3).unwrap();
         let ev = ms.evaluator();
@@ -516,7 +723,14 @@ fn main() {
         });
     }
     threads::set_threads(0);
-    println!("(m20 + m50 teachers trained concurrently in {teacher_s:.1} s)");
+    println!(
+        "(m20 + m50 + m100 teachers trained concurrently in \
+         {teacher_s:.1} s)"
+    );
+    let (hits, misses) = arena::counters();
+    println!(
+        "arena checkouts over the whole run: {hits} hit / {misses} miss"
+    );
 
     let path = write_bench_json("runtime_hotpath", &records).unwrap();
     println!("wrote {}", path.display());

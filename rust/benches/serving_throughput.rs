@@ -121,7 +121,7 @@ fn main() {
     );
 
     // machine-readable trajectory: one record per dispatch mode
-    let json_records: Vec<BenchRecord> = results
+    let mut json_records: Vec<BenchRecord> = results
         .iter()
         .map(|(label, r)| BenchRecord {
             op: format!("replay/{}", label.replace(' ', "-")),
@@ -131,6 +131,33 @@ fn main() {
             speedup: r.throughput_rps / results[0].1.throughput_rps,
         })
         .collect();
+    // ... plus per-lane latency percentiles for the micro-batched run
+    // (the production dispatch mode). `wall_ns` carries the percentile
+    // itself and `speedup` is a constant 1.0 — bench_check gates these
+    // `latency-*` keys on wall time with its looser tail threshold. A
+    // lane a short trace never exercised is skipped, not recorded as a
+    // zero the schema check would (rightly) reject.
+    let batched = &results[1].1;
+    for (lane, summary) in [
+        ("inference", &batched.inference_latency),
+        ("maintenance", &batched.maintenance_latency),
+    ] {
+        if summary.is_empty() {
+            println!("note: {lane} lane idle in this trace — no latency records");
+            continue;
+        }
+        for (pct, ns) in
+            [("p50", summary.p50_ns()), ("p99", summary.p99_ns())]
+        {
+            json_records.push(BenchRecord {
+                op: format!("latency-{pct}-{lane}"),
+                preset: model.into(),
+                threads: workers,
+                wall_ns: ns,
+                speedup: 1.0,
+            });
+        }
+    }
     let path = write_bench_json("serving_throughput", &json_records).unwrap();
     println!("wrote {}", path.display());
     threads::set_threads(0);

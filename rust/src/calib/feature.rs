@@ -188,7 +188,21 @@ impl<'a> FeatureCalibrator<'a> {
                             .collect(),
                     })
                     .collect();
-                let runs = pool.try_map(&jobs, |job| {
+                // claim heavy layers first: a layer's step cost scales
+                // with the elements it pushes through the VJP per step,
+                // so total input size is a sound relative weight (and
+                // with today's uniform layer widths degenerates to the
+                // plain input order — the weighting costs nothing)
+                let weights: Vec<u64> = jobs
+                    .iter()
+                    .map(|job| {
+                        job.triples
+                            .iter()
+                            .map(|(x, _, _)| x.len() as u64)
+                            .sum()
+                    })
+                    .collect();
+                let runs = pool.try_map_weighted(&jobs, &weights, |job| {
                     let la = &adapters.layers[job.l];
                     self.run_layer_steps(
                         LayerRole::Block,

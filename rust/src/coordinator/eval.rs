@@ -61,13 +61,21 @@ impl<'a> Evaluator<'a> {
                 ds.n_eval()
             );
         }
-        let per_batch = ThreadPool::global().try_map(&batches, |(x, y)| {
-            let rows = Dataset::rows(x)?;
-            let logits = fwd(&rows)?;
-            Ok::<usize, crate::anyhow::Error>(Self::accuracy_from_logits(
-                &logits, y,
-            ))
-        })?;
+        // weight by rows so the ragged tail batch (the lightest item)
+        // is claimed last instead of wherever the cursor lands
+        let weights: Vec<u64> =
+            batches.iter().map(|(_, y)| y.len() as u64).collect();
+        let per_batch = ThreadPool::global().try_map_weighted(
+            &batches,
+            &weights,
+            |(x, y)| {
+                let rows = Dataset::rows(x)?;
+                let logits = fwd(&rows)?;
+                Ok::<usize, crate::anyhow::Error>(Self::accuracy_from_logits(
+                    &logits, y,
+                ))
+            },
+        )?;
         Ok((per_batch.iter().sum(), total))
     }
 

@@ -42,13 +42,22 @@ pub fn fig2_drift_sweep(
     let ev = session.evaluator();
     let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
     let pool = ThreadPool::global();
+    // flatten the (drift, seed) grid into one fan-out so the pool spans
+    // drifts too — the old drift-serial loop capped parallelism at
+    // `seeds.len()` and re-paid the join barrier per drift row
+    let cells: Vec<(f64, u64)> = drifts
+        .iter()
+        .flat_map(|&rel| seeds.iter().map(move |&seed| (rel, seed)))
+        .collect();
+    let accs = pool.try_map(&cells, |&(rel, seed)| {
+        let mut student = session.drifted_student(rel, seed)?;
+        ev.student(&mut student, &session.dataset)
+    })?;
     let mut rows = Vec::new();
-    for &rel in drifts {
-        // one independent drifted student per seed, fanned out
-        let accs = pool.try_map(seeds, |&seed| {
-            let mut student = session.drifted_student(rel, seed)?;
-            ev.student(&mut student, &session.dataset)
-        })?;
+    for (di, &rel) in drifts.iter().enumerate() {
+        // cells are drift-major, so row `di` owns one seed-ordered
+        // chunk — identical aggregation order to the serial loop
+        let accs = &accs[di * seeds.len()..(di + 1) * seeds.len()];
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;
         rows.push(Fig2Row {
             rel_drift: rel,
@@ -218,7 +227,15 @@ pub fn fig6_lora_vs_dora(
         })
         .collect();
     let pool = ThreadPool::global();
-    pool.try_map(&cells, |&(rel, rank)| {
+    // a cell's step cost is the fixed d x d crossbar work plus the
+    // rank-proportional adapter chain, so high-rank cells are the heavy
+    // ones — claim them first (LPT) instead of letting a rank-16 cell
+    // land last on a nearly-drained queue
+    let weights: Vec<u64> = cells
+        .iter()
+        .map(|&(_, rank)| (session.spec.width + rank) as u64)
+        .collect();
+    pool.try_map_weighted(&cells, &weights, |&(rel, rank)| {
         let mut acc = [0.0f64; 2];
         for (i, kind) in
             [AdapterKind::Dora, AdapterKind::Lora].iter().enumerate()

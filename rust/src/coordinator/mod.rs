@@ -11,7 +11,9 @@ mod scheduler;
 
 pub use engine::{Engine, Session};
 pub use eval::Evaluator;
-pub use presets::{m20, m50, micro, nano, native_presets, small, NativePreset};
+pub use presets::{
+    m100, m20, m50, micro, nano, native_presets, small, NativePreset,
+};
 pub use experiments::{
     fig2_drift_sweep, fig4_dataset_size_sweep, fig5_rank_sweep,
     fig6_lora_vs_dora, table1_rows, Fig2Row, Fig4Row, Fig5Row, Fig6Row,

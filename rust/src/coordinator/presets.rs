@@ -18,7 +18,7 @@ pub struct NativePreset {
 
 /// All built-in native models, default first.
 pub fn native_presets() -> Vec<NativePreset> {
-    vec![nano(), micro(), small(), m20(), m50()]
+    vec![nano(), micro(), small(), m20(), m50(), m100()]
 }
 
 #[cfg(test)]
@@ -47,6 +47,7 @@ mod tests {
             ("small".to_string(), 10, 64, 10),
             ("m20".to_string(), 20, 64, 10),
             ("m50".to_string(), 50, 64, 10),
+            ("m100".to_string(), 100, 64, 10),
         ]);
     }
 
@@ -228,8 +229,8 @@ pub fn m20() -> NativePreset {
 }
 
 /// `m50` — 50 residual blocks x width 64, 10 classes: the paper-scale
-/// ResNet-50 analogue (the PJRT artifact manifest's m50) and the
-/// largest hermetic preset. 2.5x `m20`'s depth, it needs the whole
+/// ResNet-50 analogue (the PJRT artifact manifest's m50). 2.5x
+/// `m20`'s depth, it needs the whole
 /// performance stack — the vectorized lane-fold matmul micro-kernel
 /// under row/layer/seed parallelism — to stay interactive; on the PR-4
 /// scalar kernel it was strictly a batch job (which is why it ships
@@ -264,6 +265,53 @@ pub fn m50() -> NativePreset {
             token_jitter: 0.45,
             n_dirs: 4,
             seed: 170,
+        },
+        train: TrainConfig {
+            epochs: 12,
+            batch: 32,
+            lr: 2e-3,
+            init_gain: 2.2,
+            seed: 7,
+        },
+    }
+}
+
+/// `m100` — 100 residual blocks x width 64, 10 classes: twice `m50`'s
+/// depth and the largest hermetic preset, unlocked by the PR-6
+/// allocation-free hot loop. At this depth per-step malloc traffic and
+/// tail-band stragglers dominated wall time; the workspace arenas keep
+/// steady-state steps at zero heap allocations and the cost-weighted
+/// chunked scheduler keeps 100 unequal layer jobs packed onto the pool.
+/// Init stays the residual `1/sqrt(d*L)` scheme, so the m50
+/// hyper-parameters carry over unchanged; the preset is gated
+/// end-to-end (train + calibrate + eval, zero field RRAM writes) in
+/// `runtime_hotpath --smoke`.
+pub fn m100() -> NativePreset {
+    NativePreset {
+        spec: ModelSpec {
+            name: "m100".into(),
+            n_blocks: 100,
+            width: 64,
+            n_classes: 10,
+            ranks: vec![1, 2, 4, 8, 16],
+            with_lora: true,
+            teacher_acc: 0.0,
+            bundle_file: String::new(),
+            tokens: 4,
+            step_batch: 16,
+            eval_batch: 32,
+        },
+        data: SynthSpec {
+            dim: 64,
+            n_classes: 10,
+            tokens: 4,
+            n_train: 2048,
+            n_calib: 256,
+            n_eval: 512,
+            noise: 0.55,
+            token_jitter: 0.45,
+            n_dirs: 4,
+            seed: 210,
         },
         train: TrainConfig {
             epochs: 12,

@@ -131,7 +131,7 @@ const HELP: &str = "\
 rimc — RRAM in-memory-computing calibration with DoRA (paper repro)
 
 USAGE: rimc <SUBCOMMAND> [--backend native|pjrt]
-       [--model nano|micro|small|m20|m50] [--threads N] [flags]
+       [--model nano|micro|small|m20|m50|m100] [--threads N] [flags]
        (pjrt needs a `--features pjrt` build plus [--artifacts DIR];
         --threads sizes the shared worker budget for eval, calibration
         and seed-parallel sweeps, 0 = auto)

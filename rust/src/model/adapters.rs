@@ -78,12 +78,12 @@ impl LayerAdapter {
         };
         Ok(LayerAdapter {
             kind,
-            ma: Tensor::zeros(a.shape().to_vec()),
-            va: Tensor::zeros(a.shape().to_vec()),
-            mb: Tensor::zeros(b.shape().to_vec()),
-            vb: Tensor::zeros(b.shape().to_vec()),
-            mm: Tensor::zeros(m.shape().to_vec()),
-            vm: Tensor::zeros(m.shape().to_vec()),
+            ma: Tensor::zeros(a.shape()),
+            va: Tensor::zeros(a.shape()),
+            mb: Tensor::zeros(b.shape()),
+            vb: Tensor::zeros(b.shape()),
+            mm: Tensor::zeros(m.shape()),
+            vm: Tensor::zeros(m.shape()),
             a: SramBuffer::new(&format!("{layer_name}.A"), a),
             b: SramBuffer::new(&format!("{layer_name}.B"), b),
             m: SramBuffer::new(&format!("{layer_name}.M"), m),

@@ -17,6 +17,7 @@
 
 use crate::anyhow::{bail, Result};
 
+use crate::util::arena;
 use crate::util::tensor::Tensor;
 
 /// Hardware ADC resolution baked into every artifact
@@ -83,7 +84,7 @@ pub fn dora_colnorm(w_eff: &Tensor) -> Result<Tensor> {
         bail!("dora_colnorm wants 2-D, got {:?}", w_eff.shape());
     }
     let (d, k) = (w_eff.shape()[0], w_eff.shape()[1]);
-    let mut sums = vec![NORM_EPS; k];
+    let mut sums = arena::take_filled(k, NORM_EPS);
     for i in 0..d {
         let row = &w_eff.data()[i * k..(i + 1) * k];
         for (s, &w) in sums.iter_mut().zip(row) {
@@ -218,7 +219,7 @@ pub fn masked_mse_grad(
     check_masked(pred, target, mask, "masked_mse_grad")?;
     let k = pred.shape()[1];
     let denom = (mask.data().iter().sum::<f32>() * k as f32).max(1.0);
-    let mut out = Vec::with_capacity(pred.len());
+    let mut out = arena::take_cap(pred.len());
     for (i, &m) in mask.data().iter().enumerate() {
         let p = &pred.data()[i * k..(i + 1) * k];
         let t = &target.data()[i * k..(i + 1) * k];
@@ -226,7 +227,7 @@ pub fn masked_mse_grad(
             out.push(2.0 * (pv - tv) * m / denom);
         }
     }
-    Tensor::new(pred.shape().to_vec(), out)
+    Tensor::new(pred.shape(), out)
 }
 
 /// Masked softmax cross-entropy with one-hot f32 labels
@@ -262,7 +263,7 @@ pub fn masked_cross_entropy_grad(
     check_masked(logits, y_onehot, mask, "masked_cross_entropy_grad")?;
     let c = logits.shape()[1];
     let denom = mask.data().iter().sum::<f32>().max(1.0);
-    let mut out = Vec::with_capacity(logits.len());
+    let mut out = arena::take_cap(logits.len());
     for (i, &m) in mask.data().iter().enumerate() {
         let row = &logits.data()[i * c..(i + 1) * c];
         let y = &y_onehot.data()[i * c..(i + 1) * c];
@@ -273,7 +274,7 @@ pub fn masked_cross_entropy_grad(
             out.push((sm - yy) * m / denom);
         }
     }
-    Tensor::new(logits.shape().to_vec(), out)
+    Tensor::new(logits.shape(), out)
 }
 
 /// One in-place Adam update (model.py `_adam_update`, beta1=.9,

@@ -151,10 +151,10 @@ impl BpState {
     /// Zero-moment state around a weight snapshot.
     pub fn new(wb: Tensor, wh: Tensor) -> BpState {
         BpState {
-            mwb: Tensor::zeros(wb.shape().to_vec()),
-            vwb: Tensor::zeros(wb.shape().to_vec()),
-            mwh: Tensor::zeros(wh.shape().to_vec()),
-            vwh: Tensor::zeros(wh.shape().to_vec()),
+            mwb: Tensor::zeros(wb.shape()),
+            vwb: Tensor::zeros(wb.shape()),
+            mwh: Tensor::zeros(wh.shape()),
+            vwh: Tensor::zeros(wh.shape()),
             wb,
             wh,
         }

@@ -33,6 +33,7 @@ use super::{
     StackedAdapters, StackedArrays, StepIo, StepOutput,
 };
 use crate::model::ModelSpec;
+use crate::util::arena;
 use crate::util::tensor::Tensor;
 
 /// Pure-Rust execution backend (zero-sized; all state flows through
@@ -52,7 +53,7 @@ fn column_dot(a: &Tensor, b: &Tensor) -> Result<Tensor> {
         bail!("column_dot shapes {:?} vs {:?}", a.shape(), b.shape());
     }
     let (rows, kk) = (a.shape()[0], a.shape()[1]);
-    let mut out = vec![0.0f32; kk];
+    let mut out = arena::take_zeroed(kk);
     for i in 0..rows {
         let ar = &a.data()[i * kk..(i + 1) * kk];
         let br = &b.data()[i * kk..(i + 1) * kk];
@@ -265,14 +266,14 @@ impl Backend for NativeBackend {
         // unpool the mean: every token row gets dpooled[sample] / tokens
         let tokens = spec.tokens;
         let (batch, d) = (dpooled.shape()[0], dpooled.shape()[1]);
-        let mut dh_data = Vec::with_capacity(batch * tokens * d);
+        let mut dh_data = arena::take_cap(batch * tokens * d);
         for s in 0..batch {
             let row = &dpooled.data()[s * d..(s + 1) * d];
             for _ in 0..tokens {
                 dh_data.extend(row.iter().map(|&v| v / tokens as f32));
             }
         }
-        let mut dh = Tensor::new(vec![batch * tokens, d], dh_data)?;
+        let mut dh = Tensor::new([batch * tokens, d], dh_data)?;
         let mut dwb_parts: Vec<Tensor> = Vec::with_capacity(n_blocks);
         for l in (0..n_blocks).rev() {
             let gpre = relu_mask_grad(&dh, &pres[l])?;

@@ -1,0 +1,57 @@
+//! Counting global allocator: a zero-overhead-when-unused shim over the
+//! system allocator that counts allocation events, so benches can
+//! *assert* the steady-state hot loop is allocation-free instead of
+//! eyeballing profiler output.
+//!
+//! Install it per binary (the library never installs it):
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: rimc_dora::util::allocmon::CountingAlloc =
+//!     rimc_dora::util::allocmon::CountingAlloc;
+//! ```
+//!
+//! `allocations()` counts `alloc` / `alloc_zeroed` / `realloc` calls
+//! (deallocations are free and uncounted). The bench smoke brackets a
+//! window of warmed-up DoRA steps with two reads and asserts the delta
+//! is zero — the "zero allocs per step after warmup" gate from the
+//! arenas work.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Total allocation events since process start (monotone; sample twice
+/// and subtract for a window count).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}

@@ -4,6 +4,8 @@
 //! mini bench harness and a scoped thread pool (no serde / rand /
 //! proptest / criterion / rayon available).
 
+pub mod allocmon;
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod json;

@@ -22,9 +22,21 @@
 //! stays a pure function of the shapes. Thread count, banding, panel
 //! packing and ISA width are all bitwise invisible; that contract is
 //! what `tests/properties.rs` and `tests/parallel_calib.rs` pin down.
+//!
+//! # Steady-state allocation freedom
+//!
+//! Shapes are inline fixed-capacity values ([`Shape`], rank <= 4) and
+//! every data buffer — outputs, packed panels, map/zip results — checks
+//! out of the [`crate::util::arena`] pool and returns on `Tensor` drop.
+//! After a warmup pass the hot loop performs zero heap allocations
+//! (counter-asserted in the `runtime_hotpath` bench); reuse is bitwise
+//! invisible because checked-out buffers are never read before being
+//! written.
 
 use crate::anyhow::{bail, Result};
-use crate::util::threads;
+use crate::util::{arena, threads};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Min multiply-accumulates (`m * k * n`) before `matmul` / `t_matmul`
 /// shard output rows across the thread pool; below this the scoped-spawn
@@ -52,14 +64,181 @@ fn row_bands(m: usize, workers: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
-#[derive(Debug, Clone, PartialEq)]
+/// Bands per worker under guided self-scheduling: enough spare chunks
+/// that a worker stalled on a slow band (cache pressure, noisy
+/// neighbor, skewed row cost) leaves work for the others to claim,
+/// without shrinking bands so far the claim traffic shows up.
+const BAND_OVERSUB: usize = 4;
+
+/// Smallest band worth claiming: below this the atomic claim plus the
+/// panel-block ramp-up costs more than the rows themselves.
+const MIN_BAND_ROWS: usize = 4;
+
+/// Over-decomposed band list for dynamic claiming: ~`BAND_OVERSUB`
+/// contiguous bands per worker, each at least `MIN_BAND_ROWS` rows.
+/// Replaces the fixed one-band-per-worker partition, whose wall clock
+/// was the *slowest* band even when siblings sat idle.
+fn chunked_bands(m: usize, workers: usize) -> Vec<(usize, usize)> {
+    let target = (workers.max(1) * BAND_OVERSUB).max(1);
+    let rows = m.div_ceil(target).max(MIN_BAND_ROWS).min(m.max(1));
+    row_bands(m, m.div_ceil(rows))
+}
+
+/// Run `kernel(r0, r1, band_out)` over the chunked bands of an
+/// `m`-row, `n`-col output, claimed dynamically by up to `workers`
+/// scoped threads.
+///
+/// Each band's disjoint window of `out` is pre-split (`split_at_mut`)
+/// into a claim slot; workers pull the next unclaimed band through one
+/// shared atomic cursor until the list is dry — a fast worker simply
+/// claims more bands, so skewed band costs no longer stall the join on
+/// the slowest fixed partition. Which worker computes a band can never
+/// matter: bands are disjoint, each output element still reduces in the
+/// canonical lane order, and the windows splice back into `out` by
+/// construction — claiming order is bitwise invisible (pinned by
+/// `tests/properties.rs` and the arena/threads determinism suites).
+fn run_banded<F>(m: usize, n: usize, workers: usize, out: &mut [f32], kernel: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), m * n);
+    let bands = chunked_bands(m, workers);
+    if workers <= 1 || bands.len() <= 1 {
+        kernel(0, m, out);
+        return;
+    }
+    let mut slots: Vec<Mutex<Option<(usize, usize, &mut [f32])>>> =
+        Vec::with_capacity(bands.len());
+    let mut rest = out;
+    for &(r0, r1) in &bands {
+        let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+        slots.push(Mutex::new(Some((r0, r1, chunk))));
+        rest = tail;
+    }
+    let cursor = AtomicUsize::new(0);
+    let nb = slots.len();
+    let (slots, cursor, kernel) = (&slots, &cursor, &kernel);
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(nb) {
+            s.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= nb {
+                    break;
+                }
+                let (r0, r1, chunk) = slots[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("band claimed exactly once");
+                kernel(r0, r1, chunk);
+            });
+        }
+    });
+}
+
+/// Maximum tensor rank the inline shape supports (the deepest shape in
+/// the model is the stacked `[L, d, d]` weight cube plus one).
+pub const MAX_RANK: usize = 4;
+
+/// Inline fixed-capacity shape: a `Copy` value replacing the old
+/// `Vec<usize>`, so constructing a tensor allocates nothing for its
+/// shape. Derefs to `&[usize]`, so shape code reads exactly as before
+/// (`shape[0]`, `shape.len()`, `shape.iter()`, slice `Debug` output).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    dims: [usize; MAX_RANK],
+    rank: u8,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Shape {
+        assert!(
+            dims.len() <= MAX_RANK,
+            "tensor rank {} exceeds MAX_RANK {MAX_RANK}",
+            dims.len()
+        );
+        let mut d = [0usize; MAX_RANK];
+        d[..dims.len()].copy_from_slice(dims);
+        Shape { dims: d, rank: dims.len() as u8 }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims[..self.rank as usize]
+    }
+}
+
+impl std::ops::Deref for Shape {
+    type Target = [usize];
+    fn deref(&self) -> &[usize] {
+        self.dims()
+    }
+}
+
+impl std::fmt::Debug for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.dims().fmt(f)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(dims: &[usize]) -> Shape {
+        Shape::new(dims)
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(dims: Vec<usize>) -> Shape {
+        Shape::new(&dims)
+    }
+}
+
+impl From<&Vec<usize>> for Shape {
+    fn from(dims: &Vec<usize>) -> Shape {
+        Shape::new(dims)
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for Shape {
+    fn from(dims: [usize; N]) -> Shape {
+        Shape::new(&dims)
+    }
+}
+
+impl<const N: usize> From<&[usize; N]> for Shape {
+    fn from(dims: &[usize; N]) -> Shape {
+        Shape::new(dims)
+    }
+}
+
+#[derive(Debug, PartialEq)]
 pub struct Tensor {
-    shape: Vec<usize>,
+    shape: Shape,
     data: Vec<f32>,
 }
 
+/// Cloning checks the data buffer out of the arena (the derived impl
+/// would be a fresh heap allocation per call — `step_state` clones
+/// every adapter tensor each step, so that path must recycle too).
+impl Clone for Tensor {
+    fn clone(&self) -> Tensor {
+        let mut data = arena::take_cap(self.data.len());
+        data.extend_from_slice(&self.data);
+        Tensor { shape: self.shape, data }
+    }
+}
+
+/// Dropping a tensor returns its buffer to the arena — the "return"
+/// half of the workspace contract, so step-local temporaries recycle
+/// without any call-site changes.
+impl Drop for Tensor {
+    fn drop(&mut self) {
+        arena::recycle(std::mem::take(&mut self.data));
+    }
+}
+
 impl Tensor {
-    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+    pub fn new(shape: impl Into<Shape>, data: Vec<f32>) -> Result<Tensor> {
+        let shape = shape.into();
         let n: usize = shape.iter().product();
         if n != data.len() {
             bail!("shape {shape:?} wants {n} elems, got {}", data.len());
@@ -67,26 +246,30 @@ impl Tensor {
         Ok(Tensor { shape, data })
     }
 
-    pub fn zeros(shape: Vec<usize>) -> Tensor {
+    pub fn zeros(shape: impl Into<Shape>) -> Tensor {
+        let shape = shape.into();
         let n = shape.iter().product();
-        Tensor { shape, data: vec![0.0; n] }
+        Tensor { shape, data: arena::take_zeroed(n) }
     }
 
-    pub fn filled(shape: Vec<usize>, v: f32) -> Tensor {
+    pub fn filled(shape: impl Into<Shape>, v: f32) -> Tensor {
+        let shape = shape.into();
         let n = shape.iter().product();
-        Tensor { shape, data: vec![v; n] }
+        Tensor { shape, data: arena::take_filled(n, v) }
     }
 
     pub fn scalar1(v: f32) -> Tensor {
-        Tensor { shape: vec![1], data: vec![v] }
+        let mut data = arena::take_cap(1);
+        data.push(v);
+        Tensor { shape: Shape::new(&[1]), data }
     }
 
     pub fn from_vec(data: Vec<f32>) -> Tensor {
-        Tensor { shape: vec![data.len()], data }
+        Tensor { shape: Shape::new(&[data.len()]), data }
     }
 
     pub fn shape(&self) -> &[usize] {
-        &self.shape
+        self.shape.dims()
     }
 
     pub fn len(&self) -> usize {
@@ -105,12 +288,15 @@ impl Tensor {
         &mut self.data
     }
 
-    pub fn into_data(self) -> Vec<f32> {
-        self.data
+    pub fn into_data(mut self) -> Vec<f32> {
+        // `Tensor: Drop` forbids moving the field out; take it and let
+        // the drop recycle the empty (capacity-0, not pooled) leftover
+        std::mem::take(&mut self.data)
     }
 
     /// Reinterpret with a new shape of identical element count.
-    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Tensor> {
+    pub fn reshaped(mut self, shape: impl Into<Shape>) -> Result<Tensor> {
+        let shape = shape.into();
         let n: usize = shape.iter().product();
         if n != self.data.len() {
             bail!("reshape {:?} -> {shape:?} mismatch", self.shape);
@@ -130,10 +316,9 @@ impl Tensor {
     pub fn subtensor(&self, i: usize) -> Tensor {
         assert!(!self.shape.is_empty() && i < self.shape[0]);
         let stride: usize = self.shape[1..].iter().product();
-        Tensor {
-            shape: self.shape[1..].to_vec(),
-            data: self.data[i * stride..(i + 1) * stride].to_vec(),
-        }
+        let mut data = arena::take_cap(stride);
+        data.extend_from_slice(&self.data[i * stride..(i + 1) * stride]);
+        Tensor { shape: Shape::new(&self.shape[1..]), data }
     }
 
     /// Stack equal-shape tensors along a new leading axis.
@@ -141,16 +326,21 @@ impl Tensor {
         if parts.is_empty() {
             bail!("stack of zero tensors");
         }
-        let inner = parts[0].shape.clone();
-        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        let inner = parts[0].shape;
+        if inner.len() >= MAX_RANK {
+            bail!("stack would exceed MAX_RANK {MAX_RANK}: {inner:?}");
+        }
+        let mut data = arena::take_cap(parts.len() * parts[0].len());
         for p in parts {
             if p.shape != inner {
                 bail!("stack shape mismatch: {:?} vs {inner:?}", p.shape);
             }
             data.extend_from_slice(&p.data);
         }
-        let mut shape = vec![parts.len()];
-        shape.extend_from_slice(&inner);
+        let mut dims = [0usize; MAX_RANK];
+        dims[0] = parts.len();
+        dims[1..=inner.len()].copy_from_slice(&inner);
+        let shape = Shape { dims, rank: inner.rank + 1 };
         Ok(Tensor { shape, data })
     }
 
@@ -213,52 +403,42 @@ impl Tensor {
             bail!("matmul inner dim mismatch: {:?} x {:?}", self.shape, other.shape);
         }
         let workers = threads::budget().min(m);
-        let mut out = vec![0.0f32; m * n];
+        let mut out = arena::take_zeroed(m * n);
         if workers > 1
             && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
         {
-            // each band worker writes its disjoint row range of `out`
-            // in place — no per-band allocation, no second copy. Bands
-            // are equal-sized except the tail, so `chunks_mut` yields
-            // exactly the band windows. The rhs is packed column-major
-            // ONCE on this thread and shared read-only by every band —
-            // duplicating the strided packing pass per worker would
-            // burn memory bandwidth on identical copies. (The small-k
-            // kernel streams the row-major rhs directly, no panel.)
-            let panel = if k < LANES {
-                Vec::new()
+            // band workers claim chunked row bands dynamically
+            // (`run_banded`) and write their disjoint windows of `out`
+            // in place — no per-band allocation, no second copy. The
+            // rhs is packed column-major ONCE on this thread and shared
+            // read-only by every band — duplicating the strided packing
+            // pass per worker would burn memory bandwidth on identical
+            // copies. (The small-k kernel streams the row-major rhs
+            // directly, no panel.)
+            if k < LANES {
+                run_banded(m, n, workers, &mut out, |r0, r1, chunk| {
+                    small_k_matmul_rows(
+                        &self.data, &other.data, r0, r1, k, n, chunk,
+                    )
+                });
             } else {
-                pack_full(&other.data, k, n)
-            };
-            let bands = row_bands(m, workers);
-            let band_rows = bands[0].1;
-            std::thread::scope(|s| {
-                let panel = &panel;
-                for (&(r0, r1), chunk) in
-                    bands.iter().zip(out.chunks_mut(band_rows * n))
-                {
-                    s.spawn(move || {
-                        if k < LANES {
-                            small_k_matmul_rows(
-                                &self.data, &other.data, r0, r1, k, n, chunk,
-                            )
-                        } else {
-                            dot_panel_blocks(
-                                &self.data[r0 * k..r1 * k],
-                                r1 - r0,
-                                k,
-                                panel,
-                                n,
-                                chunk,
-                            )
-                        }
-                    });
-                }
-            });
+                let panel = pack_full(&other.data, k, n);
+                run_banded(m, n, workers, &mut out, |r0, r1, chunk| {
+                    dot_panel_blocks(
+                        &self.data[r0 * k..r1 * k],
+                        r1 - r0,
+                        k,
+                        &panel,
+                        n,
+                        chunk,
+                    )
+                });
+                arena::recycle(panel);
+            }
         } else {
             matmul_rows(&self.data, &other.data, 0, m, k, n, &mut out);
         }
-        Tensor::new(vec![m, n], out)
+        Tensor::new([m, n], out)
     }
 
     /// Reference kernel, kept as the bit-for-bit oracle the packed
@@ -286,7 +466,7 @@ impl Tensor {
         if k != k2 {
             bail!("matmul inner dim mismatch: {:?} x {:?}", self.shape, other.shape);
         }
-        let mut out = vec![0.0f32; m * n];
+        let mut out = arena::take_zeroed(m * n);
         for i in 0..m {
             let arow = &self.data[i * k..(i + 1) * k];
             for j in 0..n {
@@ -297,7 +477,7 @@ impl Tensor {
                 out[i * n + j] = fold_lanes(acc);
             }
         }
-        Tensor::new(vec![m, n], out)
+        Tensor::new([m, n], out)
     }
 
     /// Transpose-aware product: `self^T x other`, i.e.
@@ -330,7 +510,7 @@ impl Tensor {
             );
         }
         let workers = threads::budget().min(m);
-        let mut out = vec![0.0f32; m * n];
+        let mut out = arena::take_zeroed(m * n);
         if workers > 1
             && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
         {
@@ -338,23 +518,16 @@ impl Tensor {
             // the lhs-column pack stays per band — those columns are
             // disjoint per band, so no work is duplicated there
             let panel = pack_full(&other.data, k, n);
-            let bands = row_bands(m, workers);
-            let band_rows = bands[0].1;
-            std::thread::scope(|s| {
-                let panel = &panel;
-                for (&(r0, r1), chunk) in
-                    bands.iter().zip(out.chunks_mut(band_rows * n))
-                {
-                    s.spawn(move || {
-                        let at = pack_lhs_columns(&self.data, r0, r1, k, m);
-                        dot_panel_blocks(&at, r1 - r0, k, panel, n, chunk)
-                    });
-                }
+            run_banded(m, n, workers, &mut out, |r0, r1, chunk| {
+                let at = pack_lhs_columns(&self.data, r0, r1, k, m);
+                dot_panel_blocks(&at, r1 - r0, k, &panel, n, chunk);
+                arena::recycle(at);
             });
+            arena::recycle(panel);
         } else {
             t_matmul_rows(&self.data, &other.data, 0, m, k, m, n, &mut out);
         }
-        Tensor::new(vec![m, n], out)
+        Tensor::new([m, n], out)
     }
 
     /// Product against a transposed rhs: `self x other^T`, i.e.
@@ -387,46 +560,37 @@ impl Tensor {
             );
         }
         let workers = threads::budget().min(m);
-        let mut out = vec![0.0f32; m * n];
+        let mut out = arena::take_zeroed(m * n);
         if workers > 1
             && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS
         {
-            let bands = row_bands(m, workers);
-            let band_rows = bands[0].1;
-            std::thread::scope(|s| {
-                for (&(r0, r1), chunk) in
-                    bands.iter().zip(out.chunks_mut(band_rows * n))
-                {
-                    s.spawn(move || {
-                        matmul_nt_rows(&self.data, &other.data, r0, r1, k, n, chunk)
-                    });
-                }
+            run_banded(m, n, workers, &mut out, |r0, r1, chunk| {
+                matmul_nt_rows(&self.data, &other.data, r0, r1, k, n, chunk)
             });
         } else {
             matmul_nt_rows(&self.data, &other.data, 0, m, k, n, &mut out);
         }
-        Tensor::new(vec![m, n], out)
+        Tensor::new([m, n], out)
     }
 
     /// 2-D transpose.
     pub fn transposed(&self) -> Tensor {
         assert_eq!(self.shape.len(), 2, "transpose wants 2-D");
         let (m, n) = (self.shape[0], self.shape[1]);
-        let mut out = vec![0.0f32; m * n];
+        let mut out = arena::take_zeroed(m * n);
         for i in 0..m {
             for j in 0..n {
                 out[j * m + i] = self.data[i * n + j];
             }
         }
-        Tensor { shape: vec![n, m], data: out }
+        Tensor { shape: Shape::new(&[n, m]), data: out }
     }
 
     /// Elementwise map.
     pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
-        Tensor {
-            shape: self.shape.clone(),
-            data: self.data.iter().map(|&v| f(v)).collect(),
-        }
+        let mut data = arena::take_cap(self.data.len());
+        data.extend(self.data.iter().map(|&v| f(v)));
+        Tensor { shape: self.shape, data }
     }
 
     /// Elementwise combine with an equal-shape tensor.
@@ -438,15 +602,11 @@ impl Tensor {
         if self.shape != other.shape {
             bail!("zip shape mismatch: {:?} vs {:?}", self.shape, other.shape);
         }
-        Ok(Tensor {
-            shape: self.shape.clone(),
-            data: self
-                .data
-                .iter()
-                .zip(&other.data)
-                .map(|(&a, &b)| f(a, b))
-                .collect(),
-        })
+        let mut data = arena::take_cap(self.data.len());
+        data.extend(
+            self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)),
+        );
+        Ok(Tensor { shape: self.shape, data })
     }
 
     /// Broadcast-multiply each row of a `[m, k]` tensor by a `[k]` vector
@@ -461,13 +621,13 @@ impl Tensor {
             );
         }
         let (m, k) = (self.shape[0], self.shape[1]);
-        let mut out = Vec::with_capacity(m * k);
+        let mut out = arena::take_cap(m * k);
         for i in 0..m {
             for j in 0..k {
                 out.push(self.data[i * k + j] * v.data[j]);
             }
         }
-        Tensor::new(vec![m, k], out)
+        Tensor::new([m, k], out)
     }
 
     /// Mean over the token axis: `[batch * tokens, d] -> [batch, d]`
@@ -482,7 +642,7 @@ impl Tensor {
         }
         let (rows, d) = (self.shape[0], self.shape[1]);
         let batch = rows / tokens;
-        let mut out = vec![0.0f32; batch * d];
+        let mut out = arena::take_zeroed(batch * d);
         for b in 0..batch {
             let dst = &mut out[b * d..(b + 1) * d];
             for t in 0..tokens {
@@ -496,7 +656,7 @@ impl Tensor {
                 *o *= inv;
             }
         }
-        Tensor::new(vec![batch, d], out)
+        Tensor::new([batch, d], out)
     }
 
     /// argmax over the last axis for a 2-D tensor -> one index per row.
@@ -692,8 +852,10 @@ fn dot_panel(
 /// the serial kernels pack right before use, and the parallel paths
 /// pack once on the spawning thread and share the result read-only
 /// across bands — never once per worker.
+/// The returned panel is arena-checked-out; callers recycle it after
+/// the kernel pass.
 fn pack_full(b: &[f32], k: usize, n: usize) -> Vec<f32> {
-    let mut panel = Vec::with_capacity(k * n);
+    let mut panel = arena::take_cap(k * n);
     for j in 0..n {
         panel.extend((0..k).map(|kk| b[kk * n + j]));
     }
@@ -712,7 +874,7 @@ fn pack_lhs_columns(
     m: usize,
 ) -> Vec<f32> {
     let rows = r1 - r0;
-    let mut at = vec![0.0f32; rows * k];
+    let mut at = arena::take_zeroed(rows * k);
     for kk in 0..k {
         let acol = &a[kk * m + r0..kk * m + r1];
         for (i, &v) in acol.iter().enumerate() {
@@ -768,6 +930,7 @@ fn matmul_rows(
     }
     let panel = pack_full(b, k, n);
     dot_panel_blocks(&a[r0 * k..r1 * k], r1 - r0, k, &panel, n, out);
+    arena::recycle(panel);
 }
 
 /// Small-`k` band kernel (`k < LANES`, the `[rows, r] x [r, d]`
@@ -843,6 +1006,8 @@ fn t_matmul_rows(
     let at = pack_lhs_columns(a, r0, r1, k, m);
     let panel = pack_full(b, k, n);
     dot_panel_blocks(&at, r1 - r0, k, &panel, n, out);
+    arena::recycle(at);
+    arena::recycle(panel);
 }
 
 /// Band kernel over output rows `[r0, r1)` of an `[m, k] x [n, k]^T`
@@ -1060,6 +1225,100 @@ mod tests {
                 assert_eq!(pair[0].1, pair[1].0, "{m} rows / {w} workers");
             }
         }
+    }
+
+    #[test]
+    fn chunked_bands_partition_and_oversubscribe() {
+        for (m, w) in [(1, 4), (7, 3), (33, 4), (100, 7), (512, 4), (4, 8)] {
+            let bands = chunked_bands(m, w);
+            assert_eq!(bands[0].0, 0, "{m} rows / {w} workers");
+            assert_eq!(bands.last().unwrap().1, m, "{m} rows / {w} workers");
+            for pair in bands.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0, "{m} rows / {w} workers");
+            }
+            // every band except the tail has at least MIN_BAND_ROWS
+            for &(r0, r1) in &bands[..bands.len() - 1] {
+                assert!(r1 - r0 >= MIN_BAND_ROWS.min(m));
+            }
+        }
+        // large outputs really over-decompose: more bands than workers
+        assert!(chunked_bands(512, 4).len() > 4);
+    }
+
+    #[test]
+    fn run_banded_matches_serial_kernel() {
+        // dynamic claiming must splice to the exact serial result
+        let (m, k, n) = (67, 19, 23);
+        let a: Vec<f32> =
+            (0..m * k).map(|i| ((i * 13) % 17) as f32 - 8.0).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|i| ((i * 7) % 11) as f32 - 5.0).collect();
+        let mut serial = vec![0.0f32; m * n];
+        matmul_rows(&a, &b, 0, m, k, n, &mut serial);
+        for workers in [2, 3, 8] {
+            let mut par = vec![0.0f32; m * n];
+            run_banded(m, n, workers, &mut par, |r0, r1, chunk| {
+                matmul_rows(&a, &b, r0, r1, k, n, chunk)
+            });
+            for (x, y) in serial.iter().zip(&par) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_is_slice_like_and_bounded() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[1], 3);
+        assert_eq!(&s[1..], &[3, 4]);
+        assert_eq!(format!("{s:?}"), "[2, 3, 4]");
+        assert_eq!(Shape::from(vec![2, 3, 4]), s);
+        assert_eq!(Shape::from([2usize, 3, 4]), s);
+        let r = std::panic::catch_unwind(|| Shape::new(&[1, 2, 3, 4, 5]));
+        assert!(r.is_err(), "rank 5 must be rejected");
+    }
+
+    #[test]
+    fn arena_reuse_is_bitwise_invisible_to_matmul() {
+        // toggling the flag is correctness-safe, but the arena's own
+        // warm-pool tests are not robust to a concurrent disable —
+        // serialize on the shared flag lock
+        let _g = crate::util::arena::TEST_FLAG_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        // same product, arena warm vs fresh-allocation reference path
+        let (m, k, n) = (21, 33, 17);
+        let a = Tensor::new(
+            [m, k],
+            (0..m * k).map(|i| ((i * 31) % 13) as f32 - 6.0).collect(),
+        )
+        .unwrap();
+        let b = Tensor::new(
+            [k, n],
+            (0..k * n).map(|i| ((i * 23) % 19) as f32 - 9.0).collect(),
+        )
+        .unwrap();
+        let warm = {
+            let _ = a.matmul(&b).unwrap(); // populate the pool
+            a.matmul(&b).unwrap()
+        };
+        crate::util::arena::set_enabled(false);
+        let fresh = a.matmul(&b).unwrap();
+        crate::util::arena::set_enabled(true);
+        for (x, y) in warm.data().iter().zip(fresh.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn clone_and_into_data_roundtrip_through_the_arena() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect())
+            .unwrap();
+        let c = t.clone();
+        assert_eq!(t, c);
+        let data = c.into_data();
+        assert_eq!(data, t.data());
     }
 
     #[test]

@@ -118,6 +118,57 @@ impl ThreadPool {
         T: Send,
         F: Fn(&I) -> T + Sync,
     {
+        self.map_claiming(items, None, f)
+    }
+
+    /// [`map`](ThreadPool::map) with a per-item cost estimate: workers
+    /// claim items **heaviest first** (longest-processing-time-first
+    /// guided self-scheduling), so one expensive item no longer lands
+    /// at the tail of some worker's share while its siblings sit idle —
+    /// the skewed-cost stall of the old fixed partition. Weights are
+    /// relative (any monotone cost proxy works: rows, MACs, rank) and
+    /// influence only the claiming order, never the results: outputs
+    /// still return in **input order**, so weighted and unweighted maps
+    /// are bitwise interchangeable for deterministic `f`.
+    pub fn map_weighted<I, T, F>(
+        &self,
+        items: &[I],
+        weights: &[u64],
+        f: F,
+    ) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(&I) -> T + Sync,
+    {
+        assert_eq!(
+            items.len(),
+            weights.len(),
+            "map_weighted wants one weight per item"
+        );
+        // claim order: descending weight, ascending index on ties —
+        // a pure function of the weights, so the schedule itself is
+        // deterministic (which worker runs an item still is not, and
+        // must not matter)
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+        self.map_claiming(items, Some(&order), f)
+    }
+
+    /// Shared body of `map` / `map_weighted`: workers pull claim-list
+    /// positions through one atomic cursor (`order` = None is the
+    /// identity claim order) and results fold back by original index.
+    fn map_claiming<I, T, F>(
+        &self,
+        items: &[I],
+        order: Option<&[usize]>,
+        f: F,
+    ) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(&I) -> T + Sync,
+    {
         let n = items.len();
         if self.workers <= 1 || n <= 1 {
             // degenerate path runs on the caller's thread and keeps its
@@ -138,10 +189,11 @@ impl ThreadPool {
                         with_budget(share, || {
                             let mut local = Vec::new();
                             loop {
-                                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                                if i >= n {
+                                let c = cursor.fetch_add(1, Ordering::Relaxed);
+                                if c >= n {
                                     break;
                                 }
+                                let i = order.map_or(c, |o| o[c]);
                                 local.push((i, f(&items[i])));
                             }
                             local
@@ -204,6 +256,23 @@ impl ThreadPool {
     {
         self.map(items, f).into_iter().collect()
     }
+
+    /// Fallible [`map_weighted`](ThreadPool::map_weighted): heaviest
+    /// items claimed first, first error returned in **input order**.
+    pub fn try_map_weighted<I, T, E, F>(
+        &self,
+        items: &[I],
+        weights: &[u64],
+        f: F,
+    ) -> Result<Vec<T>, E>
+    where
+        I: Sync,
+        T: Send,
+        E: Send,
+        F: Fn(&I) -> Result<T, E> + Sync,
+    {
+        self.map_weighted(items, weights, f).into_iter().collect()
+    }
 }
 
 #[cfg(test)]
@@ -246,6 +315,49 @@ mod tests {
     fn empty_input_is_fine() {
         let items: Vec<usize> = Vec::new();
         assert!(ThreadPool::new(4).map(&items, |&i| i).is_empty());
+        assert!(ThreadPool::new(4)
+            .map_weighted(&items, &[], |&i| i)
+            .is_empty());
+    }
+
+    #[test]
+    fn weighted_map_matches_unweighted_in_input_order() {
+        let items: Vec<usize> = (0..61).collect();
+        // deliberately skewed costs, ties included
+        let weights: Vec<u64> =
+            items.iter().map(|&i| ((i * 7) % 5) as u64).collect();
+        let plain = ThreadPool::new(4).map(&items, |&i| i * 3);
+        for workers in [1, 3, 8] {
+            let weighted = ThreadPool::new(workers)
+                .map_weighted(&items, &weights, |&i| i * 3);
+            assert_eq!(weighted, plain, "{workers} workers");
+        }
+    }
+
+    #[test]
+    fn try_map_weighted_returns_first_error_in_input_order() {
+        let items: Vec<usize> = (0..64).collect();
+        // make the failing items the *lightest*, so they are claimed
+        // last — the reported error must still be the input-order first
+        let weights: Vec<u64> =
+            items.iter().map(|&i| if i % 10 == 7 { 0 } else { 100 }).collect();
+        let err = ThreadPool::new(4)
+            .try_map_weighted(&items, &weights, |&i| {
+                if i % 10 == 7 {
+                    Err(format!("bad {i}"))
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, "bad 7");
+    }
+
+    #[test]
+    #[should_panic(expected = "one weight per item")]
+    fn weighted_map_rejects_length_mismatch() {
+        let items: Vec<usize> = (0..4).collect();
+        ThreadPool::new(2).map_weighted(&items, &[1, 2], |&i| i);
     }
 
     #[test]
