@@ -6,8 +6,8 @@
 
 CARGO_DIR := rust
 
-.PHONY: build test fmt clippy doc check bench-json bench-baseline \
-        artifacts clean
+.PHONY: build test fmt clippy lint miri doc check bench-json \
+        bench-baseline artifacts clean
 
 build:
 	cd $(CARGO_DIR) && cargo build --release
@@ -21,11 +21,32 @@ fmt:
 clippy:
 	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
 
+# Static invariant pass (rimc-lint R1-R7, DESIGN.md §8) over rust/src +
+# rust/benches, plus its fixture self-test, plus the pinned clippy gate
+# when a cargo toolchain is present. The python pass needs no Rust
+# toolchain at all, so `make lint` is useful even on a bare box.
+lint:
+	python3 tools/rimc_lint.py
+	python3 tools/test_rimc_lint.py
+	@if command -v cargo >/dev/null 2>&1; then \
+	  cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings; \
+	else \
+	  echo "lint: cargo not found; skipped clippy (static pass ran)"; \
+	fi
+
+# Dynamic UB/data-race backstop for the R5 surface: nightly Miri over
+# the unsafe + concurrency core's unit tests (arena, thread pool,
+# submit queue). Needs `rustup +nightly component add miri`; CI runs
+# this on a schedule, best-effort.
+miri:
+	cd $(CARGO_DIR) && cargo +nightly miri test --lib -- \
+	  util::arena util::threads serve::queue
+
 # Public-API docs, warnings denied (same gate as CI).
 doc:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
-check: build test fmt clippy doc
+check: lint build test fmt clippy doc
 
 # Run both JSON-emitting benches in smoke mode (serial + threaded, the
 # same schedule CI uses) and schema-check + regression-gate the emitted

@@ -31,6 +31,16 @@ pub struct BackpropCalibrator<'a> {
     cfg: BackpropConfig,
 }
 
+impl std::fmt::Debug for BackpropCalibrator<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BackpropCalibrator")
+            .field("backend", &self.backend.name())
+            .field("cfg", &self.cfg)
+            .finish_non_exhaustive()
+    }
+}
+
+#[derive(Debug)]
 pub struct BackpropOutcome {
     /// retrained weights (deployed to RRAM by `calibrate`)
     pub wb: Tensor,

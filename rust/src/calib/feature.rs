@@ -50,6 +50,15 @@ pub struct FeatureCalibrator<'a> {
     cfg: CalibConfig,
 }
 
+impl std::fmt::Debug for FeatureCalibrator<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FeatureCalibrator")
+            .field("backend", &self.backend.name())
+            .field("cfg", &self.cfg)
+            .finish_non_exhaustive()
+    }
+}
+
 /// Per-layer convergence record (loss trajectory endpoints).
 #[derive(Debug, Clone)]
 pub struct LayerTrace {
@@ -59,6 +68,7 @@ pub struct LayerTrace {
     pub last_loss: f64,
 }
 
+#[derive(Debug)]
 pub struct CalibOutcome {
     pub adapters: AdapterSet,
     pub cost: CalibrationCost,

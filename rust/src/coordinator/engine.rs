@@ -15,6 +15,8 @@
 //! threads at once.
 
 use std::collections::BTreeMap;
+// lint:allow(R2) -- session-cache Mutex on the open/setup path only;
+// never touched inside calibration or evaluation loops
 use std::sync::{Arc, Mutex};
 
 #[cfg(feature = "pjrt")]
@@ -47,6 +49,14 @@ enum EngineKind {
 pub struct Engine {
     backend: Arc<dyn Backend>,
     kind: EngineKind,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("backend", &self.backend.name())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Engine {
@@ -223,6 +233,15 @@ pub struct Session {
     pub spec: ModelSpec,
     pub teacher: TeacherModel,
     pub dataset: Dataset,
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("backend", &self.backend.name())
+            .field("spec", &self.spec)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Session {

@@ -23,6 +23,15 @@ pub struct Evaluator<'a> {
     spec: &'a ModelSpec,
 }
 
+impl std::fmt::Debug for Evaluator<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Evaluator")
+            .field("backend", &self.backend.name())
+            .field("spec", self.spec)
+            .finish()
+    }
+}
+
 impl<'a> Evaluator<'a> {
     pub fn new(backend: &'a dyn Backend, spec: &'a ModelSpec) -> Self {
         Evaluator { backend, spec }

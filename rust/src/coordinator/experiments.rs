@@ -16,6 +16,7 @@ use super::engine::Session;
 use crate::calib::{BackpropConfig, CalibConfig};
 use crate::device::constants;
 use crate::model::AdapterKind;
+use crate::util::stats;
 use crate::util::threads::ThreadPool;
 
 // ---------------------------------------------------------------------
@@ -58,12 +59,13 @@ pub fn fig2_drift_sweep(
         // cells are drift-major, so row `di` owns one seed-ordered
         // chunk — identical aggregation order to the serial loop
         let accs = &accs[di * seeds.len()..(di + 1) * seeds.len()];
-        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
         rows.push(Fig2Row {
             rel_drift: rel,
-            accuracy_mean: mean,
-            accuracy_min: accs.iter().cloned().fold(f64::INFINITY, f64::min),
-            accuracy_max: accs.iter().cloned().fold(0.0, f64::max),
+            accuracy_mean: stats::mean(accs.iter().copied()),
+            accuracy_min: stats::min_from(f64::INFINITY, accs.iter().copied()),
+            // 0.0 seed kept from the original fold — accuracies are
+            // non-negative, and changing it would move historical rows
+            accuracy_max: stats::max_from(0.0, accs.iter().copied()),
             teacher_acc,
         });
     }
@@ -128,12 +130,11 @@ pub fn fig4_dataset_size_sweep(
             let bp_acc = ev.student(&mut student_bp, &session.dataset)?;
             Ok::<_, crate::anyhow::Error>((dora_acc, bp_acc, pre))
         })?;
-        let k = per_seed.len() as f64;
         rows.push(Fig4Row {
             n_samples: n,
-            feature_dora_acc: per_seed.iter().map(|r| r.0).sum::<f64>() / k,
-            backprop_acc: per_seed.iter().map(|r| r.1).sum::<f64>() / k,
-            pre_calib_acc: per_seed.iter().map(|r| r.2).sum::<f64>() / k,
+            feature_dora_acc: stats::mean(per_seed.iter().map(|r| r.0)),
+            backprop_acc: stats::mean(per_seed.iter().map(|r| r.1)),
+            pre_calib_acc: stats::mean(per_seed.iter().map(|r| r.2)),
         });
     }
     Ok(rows)
@@ -182,12 +183,11 @@ pub fn fig5_rank_sweep(
             )?;
             Ok::<_, crate::anyhow::Error>((acc, pre))
         })?;
-        let k = per_seed.len() as f64;
         rows.push(Fig5Row {
             rank,
-            accuracy: per_seed.iter().map(|r| r.0).sum::<f64>() / k,
+            accuracy: stats::mean(per_seed.iter().map(|r| r.0)),
             gamma: session.spec.gamma(rank),
-            pre_calib_acc: per_seed.iter().map(|r| r.1).sum::<f64>() / k,
+            pre_calib_acc: stats::mean(per_seed.iter().map(|r| r.1)),
         });
     }
     Ok(rows)

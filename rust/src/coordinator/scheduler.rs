@@ -39,6 +39,16 @@ pub struct RecalibrationScheduler<'s> {
     n_calib_samples: usize,
 }
 
+impl std::fmt::Debug for RecalibrationScheduler<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RecalibrationScheduler")
+            .field("session", self.session)
+            .field("policy", &self.policy)
+            .field("n_calib_samples", &self.n_calib_samples)
+            .finish_non_exhaustive()
+    }
+}
+
 impl<'s> RecalibrationScheduler<'s> {
     pub fn new(
         session: &'s Session,

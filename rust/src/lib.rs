@@ -26,6 +26,15 @@
 //! what each backend executes), DESIGN.md §7 for the serving model, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+// Backstop for rimc-lint R5: inside an `unsafe fn`, each unsafe
+// operation still needs its own `unsafe {}` block (and its own
+// `// SAFETY:` justification) instead of inheriting one blanket scope.
+#![deny(unsafe_op_in_unsafe_fn)]
+// Every public type should print something useful in test failures and
+// `{:?}` diagnostics. warn (not deny) so a new type never breaks
+// tier-1; the lint CI job surfaces the warning.
+#![warn(missing_debug_implementations)]
+
 pub mod anyhow;
 pub mod calib;
 pub mod coordinator;

@@ -155,7 +155,10 @@ SUBCOMMANDS
             simulated device fleet (default: 8 devices x 1000 requests
             on `small`; --smoke shrinks to nano scale; --batch 1
             disables inference micro-batching; --age-bound K promotes
-            maintenance passed over for K dispatches, 0 = strict)";
+            maintenance passed over for K dispatches, 0 = strict)
+
+DEV GATES  `make lint` — rimc-lint static invariants R1-R7 (DESIGN.md
+           §8) + clippy; `make miri` — UB backstop (arena/threads/queue)";
 
 #[cfg(test)]
 mod tests {

@@ -28,8 +28,7 @@ impl LatencySummary {
         if self.sorted_ns.is_empty() {
             return f64::NAN;
         }
-        self.sorted_ns.iter().map(|&n| n as f64).sum::<f64>()
-            / self.sorted_ns.len() as f64
+        crate::util::stats::mean(self.sorted_ns.iter().map(|&n| n as f64))
     }
 
     /// Nearest-rank percentile, `p` in (0, 100]. NaN when empty.

@@ -42,7 +42,7 @@ pub fn network_gamma(layers: &[LayerDims], r: usize) -> f64 {
 /// the paper evaluates Eq. 7 per layer and averages, rather than summing
 /// parameters; both are reported by the Table-I bench.
 pub fn network_gamma_mean(layers: &[LayerDims], r: usize) -> f64 {
-    layers.iter().map(|l| l.gamma(r)).sum::<f64>() / layers.len() as f64
+    crate::util::stats::mean(layers.iter().map(|l| l.gamma(r)))
 }
 
 fn conv3x3(c_in: usize, c_out: usize) -> LayerDims {

@@ -20,6 +20,7 @@ pub enum AdapterKind {
 }
 
 /// Adapters + optimizer state for one layer (block or head).
+#[derive(Debug)]
 pub struct LayerAdapter {
     pub kind: AdapterKind,
     pub a: SramBuffer,
@@ -66,6 +67,11 @@ impl LayerAdapter {
                 for i in 0..d {
                     for (j, n) in norms.iter_mut().enumerate() {
                         let w = wr.at2(i, j);
+                        // lint:allow(R1) -- init-time fold in fixed
+                        // i-ascending order; NOT interchangeable with
+                        // kernels::dora_colnorm, which seeds NORM_EPS
+                        // into the accumulator instead of adding 1e-8
+                        // after (different bits)
                         *n += w * w;
                     }
                 }
@@ -142,6 +148,7 @@ impl LayerAdapter {
 }
 
 /// Full adapter state: one `LayerAdapter` per block + one for the head.
+#[derive(Debug)]
 pub struct AdapterSet {
     pub kind: AdapterKind,
     pub rank: usize,

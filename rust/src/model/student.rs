@@ -11,6 +11,7 @@ use crate::rram::{ArrayCounters, Crossbar};
 use crate::runtime::{ArrayIo, StackedArrays};
 use crate::util::tensor::Tensor;
 
+#[derive(Debug)]
 pub struct StudentModel {
     pub blocks: Vec<Crossbar>,
     pub head: Crossbar,

@@ -253,6 +253,8 @@ impl Crossbar {
             let (tp, tn) = self.coding.encode(w as f64);
             let ep = self.gp_t[i] - tp;
             let en = self.gn_t[i] - tn;
+            // lint:allow(R1) -- diagnostic-only RMS, serial i-ascending
+            // fold over one crossbar; never on a result path
             sq += ((ep - en) / ws).powi(2);
         }
         (sq / ideal.len() as f64).sqrt()

@@ -97,6 +97,26 @@ pub fn dora_colnorm(w_eff: &Tensor) -> Result<Tensor> {
     Ok(Tensor::from_vec(sums))
 }
 
+/// `sum_rows(a o b)` per column -> `[k]`: the VJP reduction behind `dM`
+/// and the norm-path gradient. Row-major accumulation into
+/// zero-initialized per-column slots — the same i-ascending order for
+/// every thread count, like every other fold in this file.
+pub fn column_dot(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape() != b.shape() || a.shape().len() != 2 {
+        bail!("column_dot shapes {:?} vs {:?}", a.shape(), b.shape());
+    }
+    let (rows, kk) = (a.shape()[0], a.shape()[1]);
+    let mut out = arena::take_zeroed(kk);
+    for i in 0..rows {
+        let ar = &a.data()[i * kk..(i + 1) * kk];
+        let br = &b.data()[i * kk..(i + 1) * kk];
+        for (o, (&u, &v)) in out.iter_mut().zip(ar.iter().zip(br)) {
+            *o += u * v;
+        }
+    }
+    Ok(Tensor::from_vec(out))
+}
+
 /// Digital residual block: `relu(x W) + x`.
 pub fn teacher_block(x: &Tensor, w: &Tensor) -> Result<Tensor> {
     x.matmul(w)?.map(|v| v.max(0.0)).zip_with(x, |a, b| a + b)
@@ -118,6 +138,7 @@ pub fn student_block(
 
 /// Intermediate products of the unmerged (training-time) DoRA forward,
 /// kept for the hand-derived backward pass.
+#[derive(Debug)]
 pub struct DoraForward {
     /// `(quant(X W_r) + (X A) B) o (M / n)`
     pub y: Tensor,

@@ -25,7 +25,7 @@
 //! lane order, so the VJPs inherit the vectorized kernels' bitwise
 //! schedule-invariance.
 
-use crate::anyhow::{bail, Result};
+use crate::anyhow::Result;
 
 use super::kernels as k;
 use super::{
@@ -45,23 +45,6 @@ impl NativeBackend {
     pub fn new() -> NativeBackend {
         NativeBackend
     }
-}
-
-/// `sum_rows(a o b)` per column -> `[k]`.
-fn column_dot(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    if a.shape() != b.shape() || a.shape().len() != 2 {
-        bail!("column_dot shapes {:?} vs {:?}", a.shape(), b.shape());
-    }
-    let (rows, kk) = (a.shape()[0], a.shape()[1]);
-    let mut out = arena::take_zeroed(kk);
-    for i in 0..rows {
-        let ar = &a.data()[i * kk..(i + 1) * kk];
-        let br = &b.data()[i * kk..(i + 1) * kk];
-        for (o, (&u, &v)) in out.iter_mut().zip(ar.iter().zip(br)) {
-            *o += u * v;
-        }
-    }
-    Ok(Tensor::from_vec(out))
 }
 
 /// relu(y) + x and the mask `1[y > 0]` the backward pass reuses.
@@ -177,7 +160,7 @@ impl Backend for NativeBackend {
         // hand-derived VJP (module docstring)
         let s_scale = st.m.zip_with(&fwd.n, |m, n| m / n)?;
         let ds = g.scale_cols(&s_scale)?;
-        let gs = column_dot(&g, &fwd.s)?;
+        let gs = k::column_dot(&g, &fwd.s)?;
         let dm = gs.zip_with(&fwd.n, |u, n| u / n)?;
         let dn_over_n = gs
             .zip_with(&fwd.n, |u, n| -u / (n * n))?
@@ -246,7 +229,11 @@ impl Backend for NativeBackend {
     ) -> Result<f64> {
         let n_blocks = st.wb.shape()[0];
         // forward, keeping per-layer inputs and pre-activations
+        // lint:allow(R4) -- Vec<Tensor> layer bookkeeping, not an f32
+        // buffer: the arena pools Vec<f32> only, and bp_step is the
+        // backprop *baseline*, not the zero-alloc DoRA hot path
         let mut hs: Vec<Tensor> = vec![io.x.clone()];
+        // lint:allow(R4) -- same Vec<Tensor> bookkeeping as `hs` above
         let mut pres: Vec<Tensor> = Vec::with_capacity(n_blocks);
         for l in 0..n_blocks {
             let w = st.wb.subtensor(l);
@@ -274,6 +261,9 @@ impl Backend for NativeBackend {
             }
         }
         let mut dh = Tensor::new([batch * tokens, d], dh_data)?;
+        // lint:allow(R4) -- Vec<Tensor> gradient bookkeeping on the
+        // backprop baseline; the per-tensor f32 storage inside still
+        // comes from the arena via the tensor ops
         let mut dwb_parts: Vec<Tensor> = Vec::with_capacity(n_blocks);
         for l in (0..n_blocks).rev() {
             let gpre = relu_mask_grad(&dh, &pres[l])?;

@@ -6,6 +6,9 @@ use crate::util::tensor::Tensor;
 
 /// Host tensor -> f32 literal with the same dims.
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // SAFETY: viewing the tensor's f32 storage as bytes — same
+    // allocation, 4 bytes per element, alignment of u8 is 1, and the
+    // borrow of `t` keeps the data alive for the slice's lifetime.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data().as_ptr() as *const u8, 4 * t.len())
     };

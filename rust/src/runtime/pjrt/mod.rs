@@ -28,6 +28,8 @@ pub use convert::{literal_to_tensor, tensor_to_literal};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+// lint:allow(R2) -- feature-gated PJRT wrapper (never in tier-1 builds):
+// compile-cache and stats Mutexes guard FFI bookkeeping, not kernel math
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -59,6 +61,14 @@ pub struct Executable {
     stats: Arc<Mutex<RuntimeStats>>,
 }
 
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable")
+            .field("name", &self.name)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Executable {
     pub fn name(&self) -> &str {
         &self.name
@@ -74,6 +84,8 @@ impl Executable {
             let mut s = self.stats.lock().expect("runtime stats");
             s.h2d_transfers += literals.len() as u64;
         }
+        // lint:allow(R7) -- RuntimeStats wall-time instrumentation;
+        // reporting-only, feature-gated out of tier-1 builds
         let t0 = Instant::now();
         let result = self
             .exe
@@ -103,6 +115,8 @@ impl Executable {
         &self,
         inputs: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::PjRtBuffer>> {
+        // lint:allow(R7) -- RuntimeStats wall-time instrumentation;
+        // reporting-only, feature-gated out of tier-1 builds
         let t0 = Instant::now();
         let mut result = self
             .exe
@@ -193,6 +207,15 @@ pub struct ArtifactStore {
     stats: Arc<Mutex<RuntimeStats>>,
 }
 
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.infos.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl ArtifactStore {
     pub fn open(dir: &Path) -> Result<ArtifactStore> {
         let manifest_path = dir.join("manifest.json");
@@ -266,6 +289,8 @@ impl ArtifactStore {
             .infos
             .get(name)
             .with_context(|| format!("unknown artifact `{name}`"))?;
+        // lint:allow(R7) -- RuntimeStats compile-time instrumentation;
+        // reporting-only, feature-gated out of tier-1 builds
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&info.file)
             .map_err(|e| crate::anyhow::anyhow!("load {}: {e:?}", info.file.display()))?;
@@ -303,6 +328,7 @@ impl ArtifactStore {
 
 /// `runtime::Backend` over the AOT artifact store: each trait method
 /// dispatches the matching executable with host tensors.
+#[derive(Debug)]
 pub struct PjrtBackend {
     store: ArtifactStore,
 }

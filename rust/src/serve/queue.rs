@@ -148,6 +148,8 @@ struct QueueState {
 }
 
 /// The bounded two-lane queue `Server` dispatches from.
+// Debug is manual (below): Condvars and the state Mutex are noise, and
+// locking inside fmt could deadlock under a poisoned or held lock.
 pub struct SubmitQueue {
     state: Mutex<QueueState>,
     /// signalled when work may have become eligible
@@ -159,6 +161,16 @@ pub struct SubmitQueue {
     /// K-dispatch aging bound for the maintenance lane; 0 = strict
     /// priority (maintenance can be deferred unboundedly)
     maintenance_age_bound: usize,
+}
+
+impl std::fmt::Debug for SubmitQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SubmitQueue")
+            .field("capacity", &self.capacity)
+            .field("max_batch_samples", &self.max_batch_samples)
+            .field("maintenance_age_bound", &self.maintenance_age_bound)
+            .finish_non_exhaustive()
+    }
 }
 
 impl SubmitQueue {
@@ -232,6 +244,9 @@ impl SubmitQueue {
             ticket,
             seq,
             kind,
+            // lint:allow(R7) -- queue-latency timestamp feeding the
+            // serve report; scheduling order keys on `seq`, never on
+            // this clock, so results stay deterministic
             submitted_at: Instant::now(),
             passed_over: 0,
         });

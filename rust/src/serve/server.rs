@@ -118,6 +118,16 @@ pub struct Server {
     workers: usize,
 }
 
+impl std::fmt::Debug for Server {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Server")
+            .field("fleet", &self.fleet)
+            .field("queue", &self.queue)
+            .field("workers", &self.workers)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Server {
     /// Deploy a fleet over `session` and stand up the queue.
     pub fn new(session: Arc<Session>, cfg: &ServeConfig) -> Result<Server> {

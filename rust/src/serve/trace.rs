@@ -101,6 +101,8 @@ pub fn replay_collect(
     server: &Server,
     trace: &[(usize, RequestKind)],
 ) -> Result<(TraceReport, Vec<Response>)> {
+    // lint:allow(R7) -- wall-clock throughput measurement for the replay
+    // report; predictions and orderings never depend on it
     let t0 = Instant::now();
     let responses: Result<Vec<Response>> = server.serve(|srv| {
         // submit everything (backpressure via the bounded queue), then

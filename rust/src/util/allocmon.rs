@@ -18,6 +18,8 @@
 //! arenas work.
 
 use std::alloc::{GlobalAlloc, Layout, System};
+// lint:allow(R2) -- lone event counter; an allocator hook cannot take
+// a lock or call into the thread pool
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
@@ -28,19 +30,30 @@ pub fn allocations() -> u64 {
     ALLOCATIONS.load(Ordering::SeqCst)
 }
 
+#[derive(Debug)]
 pub struct CountingAlloc;
 
+// SAFETY: pure pass-through to the System allocator plus a relaxed
+// counter bump — every GlobalAlloc contract (layout handling, pointer
+// validity, no unwinding, no reentrant allocation) is System's own.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds GlobalAlloc's contract for `layout`;
+    // forwarded to System unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: same `layout` the caller vouched for.
         unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: identical pass-through as `alloc`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: same `layout` the caller vouched for.
         unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: identical pass-through as `alloc`; `ptr`/`layout` pair
+    // comes from a prior System allocation by contract.
     unsafe fn realloc(
         &self,
         ptr: *mut u8,
@@ -48,10 +61,14 @@ unsafe impl GlobalAlloc for CountingAlloc {
         new_size: usize,
     ) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: forwarding the caller's (ptr, layout, new_size) triple.
         unsafe { System.realloc(ptr, layout, new_size) }
     }
 
+    // SAFETY: identical pass-through; `ptr` was allocated by this
+    // allocator (i.e. by System) with `layout`, per the trait contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: forwarding the caller's (ptr, layout) pair.
         unsafe { System.dealloc(ptr, layout) }
     }
 }

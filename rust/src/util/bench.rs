@@ -15,6 +15,7 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::util::json::Json;
+use crate::util::stats;
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -44,6 +45,7 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+#[derive(Debug)]
 pub struct Harness {
     pub warmup_iters: usize,
     pub measure_iters: usize,
@@ -73,7 +75,7 @@ impl Harness {
             samples.push(t0.elapsed().as_nanos() as f64);
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mean = stats::mean(samples.iter().copied());
         let stats = Stats {
             name: name.to_string(),
             iters: self.measure_iters,

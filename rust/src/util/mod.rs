@@ -11,6 +11,7 @@ pub mod cli;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;
+pub mod stats;
 pub mod tensor;
 pub mod tensorfile;
 pub mod threads;

@@ -1,0 +1,94 @@
+//! Canonical f64 reduction helpers (rimc-lint R1 allowset).
+//!
+//! Every scalar statistic the harness reports — sweep-row means, bench
+//! wall-time averages, latency summaries — must fold in one fixed,
+//! serial, left-to-right order so reports are bitwise reproducible
+//! across thread counts and ISA widths. These helpers *are* that order:
+//! plain in-order loops, bit-identical to `Iterator::sum::<f64>()` /
+//! `fold(init, f64::min)` over the same iterator. Centralizing them
+//! here (next to the 8-lane tensor folds in `util/tensor.rs` and the
+//! kernel accumulators in `runtime/kernels.rs`) lets the lint ban ad
+//! hoc float reductions everywhere else.
+//!
+//! None of this is hot-path code — reductions over per-seed result rows
+//! and bench samples, not per-element tensor work.
+
+/// Serial left-to-right sum. Bitwise identical to
+/// `xs.into_iter().sum::<f64>()`.
+pub fn sum<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Arithmetic mean via the serial [`sum`]; NaN on an empty iterator
+/// (0.0 / 0.0), matching the `sum::<f64>() / len as f64` idiom this
+/// replaces.
+pub fn mean<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for x in xs {
+        acc += x;
+        n += 1;
+    }
+    acc / n as f64
+}
+
+/// Left fold with `f64::min` from an explicit seed — bitwise identical
+/// to `xs.into_iter().fold(init, f64::min)`.
+pub fn min_from<I: IntoIterator<Item = f64>>(init: f64, xs: I) -> f64 {
+    let mut acc = init;
+    for x in xs {
+        acc = acc.min(x);
+    }
+    acc
+}
+
+/// Left fold with `f64::max` from an explicit seed. Callers pick the
+/// seed deliberately: `fig2` seeds 0.0 (accuracies are non-negative and
+/// the historical rows were produced with that init), generic extrema
+/// seed `f64::NEG_INFINITY`.
+pub fn max_from<I: IntoIterator<Item = f64>>(init: f64, xs: I) -> f64 {
+    let mut acc = init;
+    for x in xs {
+        acc = acc.max(x);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_match_iterator_idioms_bitwise() {
+        // values chosen so accumulation order matters in the low bits
+        let xs = [0.1f64, 1e16, -1e16, 0.2, 3.7e-9, -0.1];
+        assert_eq!(
+            sum(xs.iter().copied()).to_bits(),
+            xs.iter().copied().sum::<f64>().to_bits()
+        );
+        assert_eq!(
+            mean(xs.iter().copied()).to_bits(),
+            (xs.iter().copied().sum::<f64>() / xs.len() as f64).to_bits()
+        );
+        assert_eq!(
+            min_from(f64::INFINITY, xs.iter().copied()).to_bits(),
+            xs.iter().copied().fold(f64::INFINITY, f64::min).to_bits()
+        );
+        assert_eq!(
+            max_from(0.0, xs.iter().copied()).to_bits(),
+            xs.iter().copied().fold(0.0, f64::max).to_bits()
+        );
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(sum(std::iter::empty()), 0.0);
+        assert!(mean(std::iter::empty()).is_nan());
+        assert_eq!(min_from(f64::INFINITY, std::iter::empty()), f64::INFINITY);
+        assert_eq!(max_from(0.0, std::iter::empty()), 0.0);
+    }
+}

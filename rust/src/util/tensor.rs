@@ -35,7 +35,11 @@
 
 use crate::anyhow::{bail, Result};
 use crate::util::{arena, threads};
+// lint:allow(R2) -- the banded-claim cursor below; no locks held across
+// work, see run_banded
 use std::sync::atomic::{AtomicUsize, Ordering};
+// lint:allow(R2) -- claim slots for disjoint output bands (run_banded);
+// uncontended by construction, each slot is taken exactly once
 use std::sync::Mutex;
 
 /// Min multiply-accumulates (`m * k * n`) before `matmul` / `t_matmul`
@@ -108,6 +112,8 @@ where
         return;
     }
     let mut slots: Vec<Mutex<Option<(usize, usize, &mut [f32])>>> =
+        // lint:allow(R4) -- per-call claim-slot bookkeeping (a handful
+        // of Mutex cells, not an f32 buffer); the arena pools Vec<f32>
         Vec::with_capacity(bands.len());
     let mut rest = out;
     for &(r0, r1) in &bands {
@@ -118,6 +124,10 @@ where
     let cursor = AtomicUsize::new(0);
     let nb = slots.len();
     let (slots, cursor, kernel) = (&slots, &cursor, &kernel);
+    // lint:allow(R2) -- scoped spawn inside the pool-budgeted kernel:
+    // `workers` is handed down from util::threads (never ambient
+    // parallelism), and matmul cannot call back into the pool without
+    // deadlocking its own budget
     std::thread::scope(|s| {
         for _ in 0..workers.min(nb) {
             s.spawn(move || loop {
@@ -809,6 +819,9 @@ fn dot_panel_block(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: `unsafe` only because of #[target_feature]; the body is the
+// safe `dot_panel_block` and every caller must hold an avx2 detection
+// proof (the single call site in `dot_panel` checks at runtime).
 unsafe fn dot_panel_avx2(
     a: &[f32],
     rows: usize,

@@ -213,3 +213,86 @@ fn served_equals_serial_per_device_bitwise() {
         }
     }
 }
+
+/// R3/R7 audit pin (rimc-lint, DESIGN.md §8): everything a
+/// `TraceReport` reports except wall-clock-derived numbers must be
+/// deterministic — identical across worker counts (the `--threads`-like
+/// knob) and across repeat runs — and the per-device section must come
+/// back in device-id order, never in completion or map-iteration order.
+#[test]
+fn trace_report_is_deterministic_and_ordered() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let n_devices = 3;
+    let spec = TraceSpec {
+        n_requests: 60,
+        n_devices,
+        max_infer_samples: 5,
+        advance_every: 11,
+        advance_hours: 20.0,
+        calibrate_every: 19,
+        calib_samples: 6,
+        calib_cfg: CalibConfig {
+            max_steps_per_layer: 10,
+            ..CalibConfig::default()
+        },
+        seed: 0xbeef,
+    };
+    let trace = synth_trace(&spec, session.dataset.n_eval());
+
+    let run = |workers: usize| {
+        let server = Server::new(session.clone(), &ServeConfig {
+            n_devices,
+            workers,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        replay_collect(&server, &trace).unwrap().0
+    };
+    let serial = run(1);
+    let threaded = run(4);
+    let repeat = run(4);
+
+    for report in [&serial, &threaded, &repeat] {
+        // device rows in id order — the report never leaks dispatch
+        // completion order
+        assert_eq!(report.devices.len(), n_devices);
+        for (i, d) in report.devices.iter().enumerate() {
+            assert_eq!(d.id, i, "device rows out of id order");
+        }
+        assert_eq!(report.requests, trace.len());
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.rram_writes_in_field, 0);
+        // latency *values* are wall clock (R7-allowed measurement), but
+        // which lane each request lands in is part of the trace
+        assert_eq!(
+            report.inference_latency.count()
+                + report.maintenance_latency.count(),
+            trace.len()
+        );
+    }
+
+    // every non-clock field matches across worker counts and reruns
+    for other in [&threaded, &repeat] {
+        assert_eq!(serial.samples_inferred, other.samples_inferred);
+        assert_eq!(serial.sram_writes, other.sram_writes);
+        assert_eq!(
+            serial.inference_latency.count(),
+            other.inference_latency.count()
+        );
+        assert_eq!(
+            serial.maintenance_latency.count(),
+            other.maintenance_latency.count()
+        );
+        for (a, b) in serial.devices.iter().zip(&other.devices) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.hours, b.hours);
+            assert_eq!(a.calibrations, b.calibrations);
+            assert_eq!(a.inferred, b.inferred);
+            assert_eq!(a.correct, b.correct);
+            assert_eq!(a.sram_writes, b.sram_writes);
+            assert_eq!(a.rram_writes_in_field, b.rram_writes_in_field);
+            assert_eq!(a.rram_reads, b.rram_reads);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Escape-hatch fixture: the same R1 violation as r1_float_reduction,
+//! but suppressed by a justified `lint:allow` — the tree must lint
+//! clean.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    // lint:allow(R1) -- fixture: demonstrates a justified escape hatch
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

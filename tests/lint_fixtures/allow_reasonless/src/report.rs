@@ -1,0 +1,8 @@
+//! Reason-less escape fixture: a `lint:allow` with no `-- reason` text
+//! is itself a violation (ALLOW) and suppresses nothing, so the R1
+//! finding underneath must still fire too.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    // lint:allow(R1)
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

@@ -1,0 +1,6 @@
+//! R1 fixture: a typed float reduction outside util/stats.rs,
+//! util/tensor.rs, and runtime/kernels.rs must be flagged.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

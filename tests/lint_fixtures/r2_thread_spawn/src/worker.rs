@@ -1,0 +1,7 @@
+//! R2 fixture: direct thread spawning outside util/threads.rs,
+//! util/arena.rs, and serve/ must be flagged.
+
+pub fn fan_out() {
+    let handle = std::thread::spawn(|| 42usize);
+    let _ = handle.join();
+}

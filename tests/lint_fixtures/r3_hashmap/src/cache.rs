@@ -1,0 +1,12 @@
+//! R3 fixture: any `HashMap`/`HashSet` use must be flagged — iteration
+//! order is seeded-random per process.
+
+use std::collections::HashMap;
+
+pub fn tally(keys: &[u64]) -> usize {
+    let mut seen: HashMap<u64, usize> = HashMap::new();
+    for &k in keys {
+        *seen.entry(k).or_insert(0) += 1;
+    }
+    seen.len()
+}

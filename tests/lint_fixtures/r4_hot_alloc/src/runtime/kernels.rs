@@ -1,0 +1,7 @@
+//! R4 fixture: a direct heap allocation inside the hot-path file set
+//! (this path matches the real `runtime/kernels.rs`) must be flagged —
+//! scratch buffers come from util::arena.
+
+pub fn scratch(n: usize) -> Vec<f32> {
+    vec![0.0f32; n]
+}

@@ -1,0 +1,6 @@
+//! R5 fixture: a bare `unsafe` block with no `// SAFETY:` comment, in a
+//! file outside the unsafe allowlist — both R5 findings must fire.
+
+pub fn peek(xs: &[f32]) -> f32 {
+    unsafe { *xs.get_unchecked(0) }
+}

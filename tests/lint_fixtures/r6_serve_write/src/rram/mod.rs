@@ -1,0 +1,4 @@
+//! R6 fixture support: the RRAM-write API itself. Defining it outside
+//! serve/ is fine — only reachability *from* serve/ is the violation.
+
+pub fn program_cell(_row: usize, _col: usize, _g: f64) {}

@@ -1,0 +1,18 @@
+//! R6 fixture: RRAM-write APIs reachable from serve/ — one direct call
+//! and one transitive (through a same-file helper) — must both be
+//! flagged by the call-graph taint pass.
+
+/// Direct violation: a serve fn invoking a forbidden write token.
+pub fn hotfix_weights(row: usize, col: usize, g: f64) {
+    crate::rram::program_cell(row, col, g);
+}
+
+/// Helper that touches the write API; seed for the transitive case.
+fn refresh_weights(g: f64) {
+    crate::rram::program_cell(0, 0, g);
+}
+
+/// Transitive violation: reaches the write API via `refresh_weights`.
+pub fn handle_maintenance(g: f64) {
+    refresh_weights(g);
+}

@@ -1,0 +1,8 @@
+//! R7 fixture: a wall-clock read outside metrics/ and util/bench.rs
+//! must be flagged — simulation code replays bit-for-bit off the
+//! seeded util::rng only.
+
+pub fn stamp() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,757 @@
+#!/usr/bin/env python3
+"""rimc-lint: static enforcement of this repo's cross-cutting invariants.
+
+The crate's written-down contracts — bitwise determinism across thread
+counts and ISA width, allocation-free hot loops, zero RRAM writes
+reachable from the serve path — are enforced dynamically by tests, which
+must happen to exercise the offending path. This pass pins them
+statically, in the same dependency-free spirit as the vendored anyhow
+shim: plain token scanning plus a name-resolved call graph, no rustc, no
+pip installs, so it runs anywhere python3 does (CI's lint job needs no
+Rust toolchain at all).
+
+Rules (see DESIGN.md §8 for the contract table):
+
+  R1  float reductions (`.sum::<f32/f64>()`, float `fold`, manual
+      `acc += x * y` loops) only inside the canonical fold helpers:
+      util/tensor.rs, runtime/kernels.rs, util/stats.rs. Everything else
+      must call those helpers so every reduction has one pinned order.
+  R2  `std::thread` spawning and `std::sync` primitives (anything but
+      `Arc`) only in util/threads.rs, util/arena.rs, and serve/ — all
+      parallelism draws on the budgeted pool.
+  R3  no `HashMap`/`HashSet` at all in src/ — iteration order is
+      seeded-random per process, so any fold over one is
+      nondeterministic. Use BTreeMap/Vec index folds.
+  R4  no direct heap allocation (`vec![`, `Vec::with_capacity`,
+      `.to_vec()`, `.to_owned()`, `Box::new`, `.collect::<Vec<`) in the
+      hot-path files (runtime/kernels.rs, runtime/native.rs,
+      util/tensor.rs) — scratch buffers come from util::arena. (The
+      counting #[global_allocator] bench is the dynamic backstop for
+      anything token scanning cannot see, e.g. a bare `.collect()`.)
+  R5  every `unsafe` carries a `// SAFETY:` comment within the three
+      preceding lines, and lives in an allowlisted file (util/tensor.rs
+      AVX2, util/allocmon.rs, runtime/pjrt/convert.rs). Applies to test
+      code and benches too.
+  R6  RRAM-write APIs (reprogram / program_weights / program_cell /
+      StudentModel::program) are unreachable from serve/: a fn-level
+      call graph is walked from every serve/ fn; reaching a write API
+      is a violation. A def-level `lint:allow(R6)` on a serve fn marks
+      an *audited deployment/maintenance boundary* (e.g. fleet
+      deployment programming) and stops traversal there; direct write
+      tokens inside serve/ are flagged regardless.
+  R7  no wall-clock or entropy sources (`Instant::now`, `SystemTime`,
+      `thread_rng`, ...) outside metrics/ and bench code — simulation
+      uses the seeded util::rng only, so runs replay bit-for-bit.
+
+Scope: R1-R4 and R7 apply to library code under rust/src (per-file
+`#[cfg(test)] mod` bodies are skipped — tests may time, hash and
+allocate freely); R5 applies everywhere including rust/benches; R6's
+graph covers rust/src.
+
+Escapes: `// lint:allow(R<n>) -- reason` on (or directly above) the
+offending line. The justification text is mandatory — a reason-less
+allow is itself a violation — and unknown rule ids are rejected. For
+R6 only, an allow directly above an `fn` definition marks the whole fn
+as an audited boundary.
+
+Exit status: 0 clean, 1 violations (printed as `file:line: RULE ...`),
+2 usage/internal error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from dataclasses import dataclass, field
+
+RULES = {"R1", "R2", "R3", "R4", "R5", "R6", "R7"}
+
+# ---------------------------------------------------------------------------
+# file classification (paths are relative, '/'-separated, 'rust/' stripped)
+
+R1_ALLOW_FILES = {
+    "src/util/tensor.rs",
+    "src/runtime/kernels.rs",
+    "src/util/stats.rs",
+}
+R2_ALLOW_FILES = {"src/util/threads.rs", "src/util/arena.rs"}
+R2_ALLOW_PREFIXES = ("src/serve/",)
+R4_HOT_FILES = {
+    "src/runtime/kernels.rs",
+    "src/runtime/native.rs",
+    "src/util/tensor.rs",
+}
+R5_ALLOW_FILES = {
+    "src/util/tensor.rs",
+    "src/util/allocmon.rs",
+    "src/runtime/pjrt/convert.rs",
+}
+R7_ALLOW_PREFIXES = ("src/metrics/",)
+R7_ALLOW_FILES = {"src/util/bench.rs"}
+
+R6_FORBIDDEN = {"reprogram", "program_weights", "program_cell", "program"}
+
+# ---------------------------------------------------------------------------
+# line model: comments/strings stripped code + the comment text per line
+
+
+@dataclass
+class Line:
+    code: str  # source with string literals blanked and comments removed
+    comment: str  # text of any // comment on the line
+    in_test_mod: bool = False
+
+
+ALLOW_RE = re.compile(r"lint:allow\(\s*([A-Za-z0-9_]+)\s*\)(?:\s*--\s*(\S.*))?")
+LINE_COMMENT_RE = re.compile(r"//")
+
+
+def strip_line(raw: str, in_block_comment: bool) -> tuple[str, str, bool]:
+    """Return (code, comment_text, in_block_comment_after).
+
+    Blanks string/char literals so tokens inside them never match, and
+    splits off `//` comment text (incl. /// docs) for SAFETY / allow
+    parsing. Handles /* */ spanning lines; nested block comments are
+    treated flat (good enough: the tree has none).
+    """
+    code: list[str] = []
+    comment: list[str] = []
+    i, n = 0, len(raw)
+    in_str = False
+    while i < n:
+        ch = raw[i]
+        nxt = raw[i + 1] if i + 1 < n else ""
+        if in_block_comment:
+            if ch == "*" and nxt == "/":
+                in_block_comment = False
+                i += 2
+            else:
+                comment.append(ch)
+                i += 1
+            continue
+        if in_str:
+            if ch == "\\":
+                i += 2
+                continue
+            if ch == '"':
+                in_str = False
+            i += 1
+            continue
+        if ch == '"':
+            # raw strings r"..." / byte strings handled as plain strings
+            in_str = True
+            code.append('""')
+            i += 1
+            continue
+        if ch == "'" and i + 2 < n and raw[i + 2] == "'" and nxt != "\\":
+            i += 3  # simple char literal 'x'
+            continue
+        if ch == "/" and nxt == "/":
+            comment.append(raw[i + 2 :])
+            break
+        if ch == "/" and nxt == "*":
+            in_block_comment = True
+            i += 2
+            continue
+        code.append(ch)
+        i += 1
+    return "".join(code), "".join(comment), in_block_comment
+
+
+def parse_file(path: str) -> list[Line]:
+    with open(path, encoding="utf-8") as f:
+        raw_lines = f.read().split("\n")
+    lines: list[Line] = []
+    in_block = False
+    for raw in raw_lines:
+        code, comment, in_block = strip_line(raw, in_block)
+        lines.append(Line(code=code, comment=comment))
+    mark_test_mods(lines)
+    return lines
+
+
+def mark_test_mods(lines: list[Line]) -> None:
+    """Flag every line inside a `#[cfg(test)] mod ... { ... }` body."""
+    i = 0
+    while i < len(lines):
+        code = lines[i].code
+        if "#[cfg(test)]" in code:
+            # find the mod opening brace on this or a following line
+            j = i
+            depth = 0
+            opened = False
+            while j < len(lines):
+                c = lines[j].code
+                if not opened and re.search(r"\bmod\b", c) is None and j > i + 3:
+                    break  # cfg(test) on something that is not a mod
+                for ch in c:
+                    if ch == "{":
+                        depth += 1
+                        opened = True
+                    elif ch == "}":
+                        depth -= 1
+                lines[j].in_test_mod = opened
+                if opened and depth == 0:
+                    break
+                j += 1
+            i = j + 1
+        else:
+            i += 1
+
+
+# ---------------------------------------------------------------------------
+# allow-escape collection
+
+
+@dataclass
+class Allows:
+    # line index -> set of rule ids allowed on that line
+    by_line: dict[int, set[str]] = field(default_factory=dict)
+    # findings produced while parsing (reason-less / unknown-rule allows)
+    findings: list[tuple[int, str, str]] = field(default_factory=list)
+
+
+def collect_allows(lines: list[Line]) -> Allows:
+    allows = Allows()
+    for idx, ln in enumerate(lines):
+        m = ALLOW_RE.search(ln.comment)
+        if not m:
+            continue
+        rule, reason = m.group(1), m.group(2)
+        if rule not in RULES:
+            allows.findings.append(
+                (idx, "ALLOW", f"unknown rule id '{rule}' in lint:allow")
+            )
+            continue
+        if not reason or not reason.strip():
+            allows.findings.append(
+                (
+                    idx,
+                    "ALLOW",
+                    f"lint:allow({rule}) missing justification "
+                    "(write `-- <reason>`)",
+                )
+            )
+            continue
+        targets = {idx}
+        if not ln.code.strip():
+            # comment-only line: applies to the next non-blank code line
+            j = idx + 1
+            while j < len(lines) and not lines[j].code.strip():
+                j += 1
+            if j < len(lines):
+                targets.add(j)
+        for t in targets:
+            allows.by_line.setdefault(t, set()).add(rule)
+    return allows
+
+
+def allowed(allows: Allows, idx: int, rule: str) -> bool:
+    return rule in allows.by_line.get(idx, set())
+
+
+# ---------------------------------------------------------------------------
+# per-rule scanners (all take stripped lines; report (line_idx, rule, msg))
+
+Finding = tuple[int, str, str]
+
+FLOAT_EVIDENCE_RE = re.compile(
+    r"\bf32\b|\bf64\b|\d\.\d|\d+f(?:32|64)\b|INFINITY"
+)
+SUM_TYPED_RE = re.compile(r"\.sum::<\s*f(?:32|64)\s*>\s*\(")
+PRODUCT_TYPED_RE = re.compile(r"\.product::<\s*f(?:32|64)\s*>\s*\(")
+FOLD_RE = re.compile(r"\.fold\s*\(")
+# Manual accumulation: only *data folds* — a deref (`*o +=`) or indexed
+# (`m[j] +=`) accumulator with a product on the RHS, or any `+=` of a
+# `.powi(`/`.sqrt(` term. Flat scalar counters (`time_ns += n * C`)
+# accumulate in program order with no fold over data and are exempt.
+ACCUM_RE = re.compile(
+    r"(?:\*[A-Za-z_][\w.]*|[A-Za-z_][\w.]*\[[^\]]*\])\s*\+=\s*(?P<rhs>.+)$"
+)
+ACCUM_POW_RE = re.compile(r"\+=\s*[^;]*\.(?:powi|sqrt)\(")
+
+
+def scan_r1(rel: str, lines: list[Line]) -> list[Finding]:
+    if rel in R1_ALLOW_FILES:
+        return []
+    out: list[Finding] = []
+    for i, ln in enumerate(lines):
+        if ln.in_test_mod or not ln.code.strip():
+            continue
+        c = ln.code
+        if SUM_TYPED_RE.search(c) or PRODUCT_TYPED_RE.search(c):
+            out.append(
+                (
+                    i,
+                    "R1",
+                    "float reduction outside the canonical fold helpers "
+                    "(use util::stats / util::tensor)",
+                )
+            )
+            continue
+        if FOLD_RE.search(c) and FLOAT_EVIDENCE_RE.search(c):
+            out.append(
+                (
+                    i,
+                    "R1",
+                    "float fold outside the canonical fold helpers "
+                    "(use util::stats min_from/max_from)",
+                )
+            )
+            continue
+        m = ACCUM_RE.search(c)
+        if (m and "*" in m.group("rhs")) or ACCUM_POW_RE.search(c):
+            out.append(
+                (
+                    i,
+                    "R1",
+                    "manual multiply-accumulate outside the canonical "
+                    "fold helpers (move into util::tensor / "
+                    "runtime::kernels or justify the fixed order)",
+                )
+            )
+    return out
+
+
+SYNC_IMPORT_RE = re.compile(r"\buse\s+std::sync\b")
+SYNC_PATH_RE = re.compile(
+    r"\bstd::sync::(?:atomic\b|Mutex|RwLock|Condvar|Barrier|mpsc|Once|OnceLock)"
+)
+THREAD_RE = re.compile(r"\bthread::(?:spawn|scope|Builder)\b")
+
+
+def scan_r2(rel: str, lines: list[Line]) -> list[Finding]:
+    if rel in R2_ALLOW_FILES or rel.startswith(R2_ALLOW_PREFIXES):
+        return []
+    out: list[Finding] = []
+    for i, ln in enumerate(lines):
+        if ln.in_test_mod or not ln.code.strip():
+            continue
+        c = ln.code
+        if THREAD_RE.search(c):
+            out.append(
+                (
+                    i,
+                    "R2",
+                    "direct thread spawning outside util::threads — "
+                    "parallelism must go through the budgeted pool",
+                )
+            )
+            continue
+        m = SYNC_IMPORT_RE.search(c) or SYNC_PATH_RE.search(c)
+        if m:
+            # a pure `use std::sync::Arc;` (shared ownership, no
+            # synchronization primitive) is fine anywhere
+            names = re.findall(r"[A-Za-z_][A-Za-z0-9_]*", c)
+            prims = {
+                "Mutex",
+                "RwLock",
+                "Condvar",
+                "Barrier",
+                "mpsc",
+                "atomic",
+                "Once",
+                "OnceLock",
+                "AtomicBool",
+                "AtomicU64",
+                "AtomicUsize",
+                "AtomicU32",
+                "AtomicI64",
+                "Ordering",
+            }
+            if prims.intersection(names):
+                out.append(
+                    (
+                        i,
+                        "R2",
+                        "std::sync primitive outside util::threads / "
+                        "util::arena / serve/ (Arc alone is exempt)",
+                    )
+                )
+    return out
+
+
+HASH_RE = re.compile(r"\bHash(?:Map|Set)\b")
+
+
+def scan_r3(rel: str, lines: list[Line]) -> list[Finding]:
+    out: list[Finding] = []
+    for i, ln in enumerate(lines):
+        if ln.in_test_mod or not ln.code.strip():
+            continue
+        if HASH_RE.search(ln.code):
+            out.append(
+                (
+                    i,
+                    "R3",
+                    "HashMap/HashSet iteration order is nondeterministic — "
+                    "use BTreeMap or a Vec index fold",
+                )
+            )
+    return out
+
+
+ALLOC_RE = re.compile(
+    r"vec!\s*[\[(]|Vec::with_capacity\s*\(|\.to_vec\s*\(\)|"
+    r"\.to_owned\s*\(\)|Box::new\s*\(|\.collect::<\s*Vec\s*<"
+)
+
+
+def scan_r4(rel: str, lines: list[Line]) -> list[Finding]:
+    if rel not in R4_HOT_FILES:
+        return []
+    out: list[Finding] = []
+    for i, ln in enumerate(lines):
+        if ln.in_test_mod or not ln.code.strip():
+            continue
+        if ALLOC_RE.search(ln.code):
+            out.append(
+                (
+                    i,
+                    "R4",
+                    "direct heap allocation in a hot-path file — check the "
+                    "buffer out of util::arena (take_cap/take_zeroed)",
+                )
+            )
+    return out
+
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+
+
+def scan_r5(rel: str, lines: list[Line]) -> list[Finding]:
+    out: list[Finding] = []
+    for i, ln in enumerate(lines):
+        c = ln.code
+        if not c.strip() or not UNSAFE_RE.search(c):
+            continue
+        # attribute mentions like #![deny(unsafe_op_in_unsafe_fn)] have
+        # no bare `unsafe` token (the \b boundary excludes identifiers),
+        # but `unsafe impl`/`unsafe fn`/`unsafe {` all land here.
+        has_safety = "SAFETY:" in ln.comment or any(
+            "SAFETY:" in lines[j].comment
+            for j in range(max(0, i - 3), i)
+        )
+        if not has_safety:
+            out.append(
+                (
+                    i,
+                    "R5",
+                    "`unsafe` without a `// SAFETY:` comment on or directly "
+                    "above it",
+                )
+            )
+        if rel not in R5_ALLOW_FILES:
+            out.append(
+                (
+                    i,
+                    "R5",
+                    "`unsafe` outside the allowlisted files "
+                    "(util/tensor.rs, util/allocmon.rs, "
+                    "runtime/pjrt/convert.rs)",
+                )
+            )
+    return out
+
+
+CLOCK_RE = re.compile(
+    r"\bInstant::now\b|\bSystemTime\b|\bthread_rng\b|\bgetrandom\b|"
+    r"\bRandomState\b|\brand::\w"
+)
+
+
+def scan_r7(rel: str, lines: list[Line]) -> list[Finding]:
+    if rel in R7_ALLOW_FILES or rel.startswith(R7_ALLOW_PREFIXES):
+        return []
+    out: list[Finding] = []
+    for i, ln in enumerate(lines):
+        if ln.in_test_mod or not ln.code.strip():
+            continue
+        if CLOCK_RE.search(ln.code):
+            out.append(
+                (
+                    i,
+                    "R7",
+                    "wall-clock / entropy source outside metrics/ and bench "
+                    "code — simulation must use the seeded util::rng",
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R6: call-graph reachability from serve/ to the RRAM write APIs
+
+
+@dataclass
+class FnDef:
+    name: str
+    rel: str
+    sig_line: int
+    body: list[int]  # line indices of the body
+    def_allowed: bool
+    tainted: bool = False
+    taint_via: str = ""  # callee name / token that tainted it
+    taint_line: int = -1
+
+
+FN_RE = re.compile(r"\bfn\s+([A-Za-z_][A-Za-z0-9_]*)\s*[(<]")
+CALL_RE = re.compile(r"\b([A-Za-z_][A-Za-z0-9_]*)\s*\(")
+DIRECT_RE = re.compile(
+    r"\b(" + "|".join(sorted(R6_FORBIDDEN)) + r")\s*\("
+)
+
+
+def extract_fns(rel: str, lines: list[Line], allows: Allows) -> list[FnDef]:
+    fns: list[FnDef] = []
+    i = 0
+    while i < len(lines):
+        ln = lines[i]
+        if ln.in_test_mod:
+            i += 1
+            continue
+        m = FN_RE.search(ln.code)
+        if not m:
+            i += 1
+            continue
+        name = m.group(1)
+        # find the body's opening brace (or a `;` ending a trait decl)
+        j = i
+        depth = 0
+        opened = False
+        body: list[int] = []
+        while j < len(lines):
+            c = lines[j].code
+            if not opened and ";" in c.split("{")[0] and "{" not in c:
+                break  # bodyless trait method
+            for ch in c:
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth -= 1
+            if opened:
+                body.append(j)
+            if opened and depth <= 0:
+                break
+            j += 1
+        def_allowed = allowed(allows, i, "R6")
+        fns.append(
+            FnDef(
+                name=name,
+                rel=rel,
+                sig_line=i,
+                body=body,
+                def_allowed=def_allowed,
+            )
+        )
+        # continue scanning *inside* the body too (closures/nested fns
+        # are attributed to the outer fn; good enough for taint)
+        i += 1
+    return fns
+
+
+def r6_analysis(
+    files: dict[str, list[Line]], allows_by_file: dict[str, Allows]
+) -> list[tuple[str, int, str, str]]:
+    """Returns violations as (rel, line_idx, rule, msg)."""
+    all_fns: list[FnDef] = []
+    for rel, lines in files.items():
+        if not rel.startswith("src/"):
+            continue
+        all_fns.extend(extract_fns(rel, lines, allows_by_file[rel]))
+    by_name: dict[str, list[FnDef]] = {}
+    for f in all_fns:
+        by_name.setdefault(f.name, []).append(f)
+
+    # seed: direct forbidden tokens (the forbidden names themselves are
+    # always tainted as names, even where the def is the API itself)
+    for f in all_fns:
+        for li in f.body:
+            if li == f.sig_line:
+                continue
+            m = DIRECT_RE.search(files[f.rel][li].code)
+            if m and not allowed(allows_by_file[f.rel], li, "R6"):
+                f.tainted = True
+                f.taint_via = m.group(1)
+                f.taint_line = li
+                break
+        if f.name in R6_FORBIDDEN:
+            f.tainted = True
+            f.taint_via = f.name
+            f.taint_line = f.sig_line
+
+    def tainted_candidates(caller: FnDef, callee: str) -> bool:
+        cands = [d for d in by_name.get(callee, []) if d.rel == caller.rel]
+        if not cands and caller.rel.startswith("src/serve/"):
+            cands = [
+                d
+                for d in by_name.get(callee, [])
+                if d.rel.startswith("src/serve/")
+            ]
+        if not cands:
+            cands = by_name.get(callee, [])
+        return any(d.tainted and not d.def_allowed for d in cands)
+
+    changed = True
+    while changed:
+        changed = False
+        for f in all_fns:
+            if f.tainted or f.def_allowed:
+                continue
+            for li in f.body:
+                code = files[f.rel][li].code
+                if allowed(allows_by_file[f.rel], li, "R6"):
+                    continue
+                for cm in CALL_RE.finditer(code):
+                    callee = cm.group(1)
+                    if callee == f.name and li == f.sig_line:
+                        continue
+                    if callee in by_name and tainted_candidates(f, callee):
+                        f.tainted = True
+                        f.taint_via = callee
+                        f.taint_line = li
+                        changed = True
+                        break
+                if f.tainted:
+                    break
+
+    out: list[tuple[str, int, str, str]] = []
+    for f in all_fns:
+        if not f.rel.startswith("src/serve/"):
+            continue
+        if f.tainted:
+            out.append(
+                (
+                    f.rel,
+                    f.taint_line,
+                    "R6",
+                    f"fn `{f.name}` can reach an RRAM-write API via "
+                    f"`{f.taint_via}` — field traffic must never program "
+                    "cells (mark an audited deployment boundary with a "
+                    "def-level lint:allow(R6) if this is sanctioned)",
+                )
+            )
+    # direct forbidden tokens anywhere in serve/, even outside fn bodies
+    for rel, lines in files.items():
+        if not rel.startswith("src/serve/"):
+            continue
+        for i, ln in enumerate(lines):
+            if ln.in_test_mod:
+                continue
+            m = DIRECT_RE.search(ln.code)
+            if m and not allowed(allows_by_file[rel], i, "R6"):
+                covered = any(
+                    v[0] == rel and v[1] == i for v in out
+                )
+                if not covered:
+                    out.append(
+                        (
+                            rel,
+                            i,
+                            "R6",
+                            f"direct RRAM-write call `{m.group(1)}` in "
+                            "serve/ — the zero-field-write contract",
+                        )
+                    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+def find_rs_files(root: str) -> list[str]:
+    hits = []
+    for base, _dirs, names in os.walk(root):
+        for n in sorted(names):
+            if n.endswith(".rs"):
+                hits.append(os.path.join(base, n))
+    return sorted(hits)
+
+
+def rel_path(path: str, scan_root: str) -> str:
+    rel = os.path.relpath(path, scan_root).replace(os.sep, "/")
+    if rel.startswith("rust/"):
+        rel = rel[len("rust/") :]
+    return rel
+
+
+def run(scan_root: str) -> int:
+    roots = []
+    for sub in ("rust/src", "rust/benches", "src", "benches"):
+        p = os.path.join(scan_root, sub)
+        if os.path.isdir(p):
+            roots.append(p)
+    # avoid double-scanning when both rust/src and src resolve
+    if any(r.endswith("rust/src") for r in roots):
+        roots = [r for r in roots if "rust" + os.sep in r or "rust/" in r]
+    paths = []
+    for r in roots:
+        paths.extend(find_rs_files(r))
+    if not paths:
+        print(f"rimc-lint: no .rs files under {scan_root}", file=sys.stderr)
+        return 2
+
+    files: dict[str, list[Line]] = {}
+    allows_by_file: dict[str, Allows] = {}
+    findings: list[tuple[str, int, str, str]] = []
+    for p in paths:
+        rel = rel_path(p, scan_root)
+        lines = parse_file(p)
+        allows = collect_allows(lines)
+        files[rel] = lines
+        allows_by_file[rel] = allows
+        for idx, rule, msg in allows.findings:
+            findings.append((rel, idx, rule, msg))
+
+    for rel, lines in files.items():
+        allows = allows_by_file[rel]
+        is_src = rel.startswith("src/")
+        scanners = [scan_r5]  # R5 applies to src and benches
+        if is_src:
+            scanners += [scan_r1, scan_r2, scan_r3, scan_r4, scan_r7]
+        for scanner in scanners:
+            for idx, rule, msg in scanner(rel, lines):
+                if not allowed(allows, idx, rule):
+                    findings.append((rel, idx, rule, msg))
+
+    findings.extend(r6_analysis(files, allows_by_file))
+
+    findings.sort(key=lambda f: (f[0], f[1], f[2]))
+    seen = set()
+    n = 0
+    for rel, idx, rule, msg in findings:
+        key = (rel, idx, rule, msg)
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"{rel}:{idx + 1}: {rule}: {msg}")
+        n += 1
+    if n:
+        print(f"rimc-lint: {n} violation(s)")
+        return 1
+    print(f"rimc-lint: clean ({len(paths)} files)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--root",
+        default=None,
+        help="tree to scan (default: the repo root above tools/); the "
+        "tree may root at rust/{src,benches} or directly at "
+        "{src,benches} (lint fixtures)",
+    )
+    args = ap.parse_args()
+    scan_root = args.root or os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))
+    )
+    return run(scan_root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Tests for tools/rimc_lint.py against tests/lint_fixtures/.
+
+Each fixture directory is a miniature source tree wrong in exactly one
+way (see tests/lint_fixtures/README.md); this test asserts the linter
+flags it with the right rule ID — and *only* that rule — then that the
+justified-allow fixture lints clean, the reason-less allow is itself
+flagged, and the real repo tree passes with exit 0.
+
+Stdlib only, runnable from anywhere:
+
+    python3 tools/test_rimc_lint.py        # unittest runner
+    pytest tools/test_rimc_lint.py         # also collects fine
+"""
+
+import re
+import subprocess
+import sys
+import unittest
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINT = REPO / "tools" / "rimc_lint.py"
+FIXTURES = REPO / "tests" / "lint_fixtures"
+
+RULE_RE = re.compile(r"^[^:]+:\d+: (R\d|ALLOW): ")
+
+
+def run_lint(root: Path) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(LINT), "--root", str(root)],
+        capture_output=True,
+        text=True,
+    )
+
+
+def rules_in(output: str) -> set:
+    return {m.group(1) for m in map(RULE_RE.match, output.splitlines()) if m}
+
+
+class FixtureTests(unittest.TestCase):
+    def assert_only_rule(self, case: str, rule: str, min_findings: int = 1):
+        proc = run_lint(FIXTURES / case)
+        self.assertEqual(
+            proc.returncode,
+            1,
+            f"{case}: expected exit 1 (violations), got {proc.returncode}\n"
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}",
+        )
+        rules = rules_in(proc.stdout)
+        self.assertEqual(
+            rules,
+            {rule},
+            f"{case}: expected only {rule} findings, got {sorted(rules)}\n"
+            f"stdout:\n{proc.stdout}",
+        )
+        flagged = [
+            ln for ln in proc.stdout.splitlines() if f": {rule}: " in ln
+        ]
+        self.assertGreaterEqual(
+            len(flagged),
+            min_findings,
+            f"{case}: expected >= {min_findings} {rule} finding(s)\n"
+            f"stdout:\n{proc.stdout}",
+        )
+        # diagnostics carry clickable file:line locations
+        for ln in flagged:
+            self.assertRegex(ln, r"^src/\S+\.rs:\d+: ")
+
+    def test_r1_float_reduction(self):
+        self.assert_only_rule("r1_float_reduction", "R1")
+
+    def test_r2_thread_spawn(self):
+        self.assert_only_rule("r2_thread_spawn", "R2")
+
+    def test_r3_hashmap(self):
+        self.assert_only_rule("r3_hashmap", "R3")
+
+    def test_r4_hot_alloc(self):
+        self.assert_only_rule("r4_hot_alloc", "R4")
+
+    def test_r5_unsafe(self):
+        # one bare `unsafe` yields both R5 findings: missing SAFETY
+        # comment AND non-allowlisted file
+        self.assert_only_rule("r5_unsafe", "R5", min_findings=2)
+
+    def test_r6_serve_write(self):
+        # direct call + helper + transitive caller: all three serve fns
+        # must be flagged
+        self.assert_only_rule("r6_serve_write", "R6", min_findings=3)
+        proc = run_lint(FIXTURES / "r6_serve_write")
+        for fn in ("hotfix_weights", "refresh_weights", "handle_maintenance"):
+            self.assertIn(
+                fn,
+                proc.stdout,
+                f"r6_serve_write: fn `{fn}` missing from R6 report\n"
+                f"stdout:\n{proc.stdout}",
+            )
+
+    def test_r7_clock(self):
+        self.assert_only_rule("r7_clock", "R7")
+
+    def test_allow_with_reason_suppresses(self):
+        proc = run_lint(FIXTURES / "allow_ok")
+        self.assertEqual(
+            proc.returncode,
+            0,
+            f"allow_ok: justified lint:allow should lint clean\n"
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}",
+        )
+        self.assertIn("clean", proc.stdout)
+
+    def test_reasonless_allow_is_flagged(self):
+        proc = run_lint(FIXTURES / "allow_reasonless")
+        self.assertEqual(proc.returncode, 1)
+        rules = rules_in(proc.stdout)
+        self.assertEqual(
+            rules,
+            {"ALLOW", "R1"},
+            "allow_reasonless: the reason-less allow must be flagged "
+            f"(ALLOW) and suppress nothing (R1 still fires); got "
+            f"{sorted(rules)}\nstdout:\n{proc.stdout}",
+        )
+
+    def test_real_tree_is_clean(self):
+        proc = run_lint(REPO)
+        self.assertEqual(
+            proc.returncode,
+            0,
+            f"the real tree must lint clean\nstdout:\n{proc.stdout}\n"
+            f"stderr:\n{proc.stderr}",
+        )
+        self.assertIn("rimc-lint: clean", proc.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
