@@ -56,9 +56,13 @@ bench-json:
 	cd $(CARGO_DIR) && mv BENCH_runtime_hotpath.json BENCH_runtime_hotpath_serial.json
 	cd $(CARGO_DIR) && cargo bench --bench runtime_hotpath -- --smoke --threads 2
 	cd $(CARGO_DIR) && cargo bench --bench serving_throughput -- --smoke --threads 2
+	cd $(CARGO_DIR) && cargo run --release --bin rimc -- scenarios --smoke --threads 1
+	cd $(CARGO_DIR) && mv BENCH_scenarios.json BENCH_scenarios_serial.json
+	cd $(CARGO_DIR) && cargo run --release --bin rimc -- scenarios --smoke --threads 2
 	cd $(CARGO_DIR) && python3 ../tools/bench_check.py \
 	  BENCH_runtime_hotpath.json BENCH_runtime_hotpath_serial.json \
-	  BENCH_serving_throughput.json --baselines ../bench_baselines
+	  BENCH_serving_throughput.json BENCH_scenarios.json \
+	  BENCH_scenarios_serial.json --baselines ../bench_baselines
 
 # Promote the last bench-json run's results to the committed baselines
 # (never edit those by hand — see bench_baselines/README.md).
@@ -66,6 +70,8 @@ bench-baseline:
 	cp $(CARGO_DIR)/BENCH_runtime_hotpath.json bench_baselines/runtime_hotpath.json
 	cp $(CARGO_DIR)/BENCH_runtime_hotpath_serial.json bench_baselines/runtime_hotpath_serial.json
 	cp $(CARGO_DIR)/BENCH_serving_throughput.json bench_baselines/serving_throughput.json
+	cp $(CARGO_DIR)/BENCH_scenarios.json bench_baselines/scenarios.json
+	cp $(CARGO_DIR)/BENCH_scenarios_serial.json bench_baselines/scenarios_serial.json
 
 # AOT HLO artifacts for the optional PJRT backend (`--features pjrt`).
 # Requires python3 + jax; errors out with instructions when absent.

@@ -31,6 +31,7 @@ use crate::calib::{
 use crate::dataset::Dataset;
 use crate::device::{DriftModel, ProgramModel};
 use crate::model::{train_teacher, ModelSpec, StudentModel, TeacherModel};
+use crate::rram::NonIdealityModel;
 use crate::runtime::{Backend, NativeBackend};
 
 enum EngineKind {
@@ -252,18 +253,46 @@ impl Session {
         drift: DriftModel,
         seed: u64,
     ) -> Result<StudentModel> {
-        StudentModel::program(
+        self.program_student_with(drift, NonIdealityModel::ideal(), seed)
+    }
+
+    /// `program_student` under a scenario-engine fault model
+    /// (`NonIdealityModel::ideal()` reproduces `program_student`
+    /// bitwise).
+    pub fn program_student_with(
+        &self,
+        drift: DriftModel,
+        nonideal: NonIdealityModel,
+        seed: u64,
+    ) -> Result<StudentModel> {
+        StudentModel::program_with(
             &self.spec,
             &self.teacher,
             drift,
             ProgramModel::default(),
+            nonideal,
             seed,
         )
     }
 
     /// Program + saturate drift in one call (the Fig. 2/4/5/6 setting).
     pub fn drifted_student(&self, rel: f64, seed: u64) -> Result<StudentModel> {
-        let mut s = self.program_student(DriftModel::with_rel(rel), seed)?;
+        self.drifted_student_with(rel, NonIdealityModel::ideal(), seed)
+    }
+
+    /// `drifted_student` under a scenario-engine fault model: program
+    /// with faults, then saturate drift (read-time channels included).
+    pub fn drifted_student_with(
+        &self,
+        rel: f64,
+        nonideal: NonIdealityModel,
+        seed: u64,
+    ) -> Result<StudentModel> {
+        let mut s = self.program_student_with(
+            DriftModel::with_rel(rel),
+            nonideal,
+            seed,
+        )?;
         s.apply_saturated_drift();
         Ok(s)
     }

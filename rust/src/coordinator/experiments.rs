@@ -16,6 +16,7 @@ use super::engine::Session;
 use crate::calib::{BackpropConfig, CalibConfig};
 use crate::device::constants;
 use crate::model::AdapterKind;
+use crate::rram::ScenarioMix;
 use crate::util::stats;
 use crate::util::threads::ThreadPool;
 
@@ -266,6 +267,88 @@ pub fn fig6_lora_vs_dora(
             lora_acc: acc[1],
         })
     })
+}
+
+// ---------------------------------------------------------------------
+// Scenario sweep — calibration recovery per non-ideality mix
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ScenarioRow {
+    pub mix: ScenarioMix,
+    /// accuracy after drift + faults, before calibration (seed mean)
+    pub pre_acc: f64,
+    /// accuracy after one feature-DoRA calibration round (seed mean)
+    pub post_acc: f64,
+    pub teacher_acc: f64,
+    /// fraction of the drift-induced accuracy gap closed by calibration
+    pub recovery: f64,
+    /// scenario-engine stuck-at cells per student (seed mean)
+    pub stuck_cells: f64,
+    /// RRAM write attempts issued after deployment, summed over seeds —
+    /// the paper's invariant says this must be 0 for every mix
+    pub rram_writes_in_field: u64,
+}
+
+/// The `rimc scenarios` grid: per mix, average calibration recovery
+/// over drift seeds. Cells are independent (one drifted + faulted
+/// student per (mix, seed)), so they fan out over the thread pool and
+/// reduce in mix-major grid order — bitwise identical across
+/// `--threads`, same as the fig sweeps.
+pub fn scenario_sweep(
+    session: &Session,
+    rel_drift: f64,
+    n_samples: usize,
+    calib_cfg: &CalibConfig,
+    mixes: &[ScenarioMix],
+    seeds: &[u64],
+) -> Result<Vec<ScenarioRow>> {
+    if mixes.is_empty() || seeds.is_empty() {
+        bail!("scenario sweep needs at least one mix and one drift seed");
+    }
+    let ev = session.evaluator();
+    let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
+    let (x, y) = session.dataset.calib_subset(n_samples)?;
+    let cells: Vec<(ScenarioMix, u64)> = mixes
+        .iter()
+        .flat_map(|&mix| seeds.iter().map(move |&seed| (mix, seed)))
+        .collect();
+    let pool = ThreadPool::global();
+    let per_cell = pool.try_map(&cells, |&(mix, seed)| {
+        let model = mix.model(seed);
+        let mut student = session.drifted_student_with(rel_drift, model, seed)?;
+        let pre = ev.student(&mut student, &session.dataset)?;
+        let stuck = student.injected_stuck_cells();
+        // every write-verify attempt so far belongs to deployment
+        // programming; anything past this snapshot is an in-field write
+        let deploy_writes = student.total_counters().write_attempts;
+        let calibrator = session.feature_calibrator(calib_cfg.clone())?;
+        let outcome =
+            calibrator.calibrate(&mut student, &session.teacher, &x, &y)?;
+        let post =
+            ev.calibrated(&mut student, &outcome.adapters, &session.dataset)?;
+        let field_writes =
+            student.total_counters().write_attempts - deploy_writes;
+        Ok::<_, crate::anyhow::Error>((pre, post, stuck, field_writes))
+    })?;
+    let mut rows = Vec::new();
+    for (mi, &mix) in mixes.iter().enumerate() {
+        // cells are mix-major, so row `mi` owns one seed-ordered chunk
+        let chunk = &per_cell[mi * seeds.len()..(mi + 1) * seeds.len()];
+        let pre_acc = stats::mean(chunk.iter().map(|c| c.0));
+        let post_acc = stats::mean(chunk.iter().map(|c| c.1));
+        let gap = teacher_acc - pre_acc;
+        rows.push(ScenarioRow {
+            mix,
+            pre_acc,
+            post_acc,
+            teacher_acc,
+            recovery: if gap > 1e-9 { (post_acc - pre_acc) / gap } else { 0.0 },
+            stuck_cells: stats::mean(chunk.iter().map(|c| c.2 as f64)),
+            rram_writes_in_field: chunk.iter().map(|c| c.3).sum(),
+        });
+    }
+    Ok(rows)
 }
 
 // ---------------------------------------------------------------------

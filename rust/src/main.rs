@@ -11,6 +11,7 @@
 //!   report table1                Table I from measured counters
 //!   lifecycle                    periodic-recalibration timeline (Fig. 1c)
 //!   serve                        fleet request-serving trace replay
+//!   scenarios                    non-ideality mix sweep (recovery per mix)
 //!
 //! Backend selection: `--backend native` (default, hermetic) or
 //! `--backend pjrt --artifacts DIR` (requires a build with
@@ -23,10 +24,11 @@ use rimc_dora::anyhow::{bail, Result};
 use rimc_dora::calib::{BackpropConfig, CalibConfig, InputMode};
 use rimc_dora::coordinator::{
     fig2_drift_sweep, fig4_dataset_size_sweep, fig5_rank_sweep,
-    fig6_lora_vs_dora, table1_rows, Engine, RecalibrationScheduler,
-    SchedulerPolicy,
+    fig6_lora_vs_dora, scenario_sweep, table1_rows, Engine,
+    RecalibrationScheduler, SchedulerPolicy,
 };
 use rimc_dora::model::AdapterKind;
+use rimc_dora::rram::ScenarioMix;
 use rimc_dora::util::bench::print_table;
 use rimc_dora::util::cli::Args;
 
@@ -119,6 +121,7 @@ fn run(args: &Args) -> Result<()> {
         "report" => cmd_report(args),
         "lifecycle" => cmd_lifecycle(args),
         "serve" => cmd_serve(args),
+        "scenarios" => cmd_scenarios(args),
         "help" | "--help" => {
             println!("{}", HELP);
             Ok(())
@@ -151,11 +154,19 @@ SUBCOMMANDS
             [--step-hours H] [--checkpoints N]                  (Fig. 1c)
   serve     [--devices N] [--requests N] [--workers N] [--drift R]
             [--batch SAMPLES] [--queue-cap N] [--age-bound K] [--smoke]
+            [--scenario drift-only|lognormal|stuck-at|full-stack]
             replay a synthetic inference/calibration/drift trace over a
             simulated device fleet (default: 8 devices x 1000 requests
             on `small`; --smoke shrinks to nano scale; --batch 1
             disables inference micro-batching; --age-bound K promotes
-            maintenance passed over for K dispatches, 0 = strict)
+            maintenance passed over for K dispatches, 0 = strict;
+            --scenario deploys the fleet under a non-ideality mix)
+  scenarios [--mixes drift-only,lognormal,stuck-at,full-stack]
+            [--drift R] [--samples N] [--seeds N] [--smoke]
+            sweep non-ideality scenario mixes (stuck-at faults, lognormal
+            programming variation, DAC quantization, read noise,
+            retention) and report per-mix calibration recovery; asserts
+            zero in-field RRAM writes and emits BENCH_scenarios.json
 
 DEV GATES  `make lint` — rimc-lint static invariants R1-R7 (DESIGN.md
            §8) + clippy; `make miri` — UB backstop (arena/threads/queue)";
@@ -171,9 +182,18 @@ mod tests {
     fn help_covers_subcommands_presets_and_threads() {
         for cmd in [
             "info", "evaluate", "calibrate", "sweep", "report",
-            "lifecycle", "serve",
+            "lifecycle", "serve", "scenarios",
         ] {
             assert!(HELP.contains(cmd), "HELP missing subcommand `{cmd}`");
+        }
+        // every named scenario mix must be spelled out where the
+        // scenarios/serve flags are documented
+        for mix in ScenarioMix::ALL {
+            assert!(
+                HELP.contains(mix.name()),
+                "HELP missing scenario mix `{}`",
+                mix.name()
+            );
         }
         for preset in rimc_dora::coordinator::native_presets() {
             assert!(
@@ -439,9 +459,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let eng = engine(args)?;
     let model = args.str_or("model", if smoke { "nano" } else { "small" });
     let session = eng.shared_session(&model)?;
+    let scenario_name = args.str_or("scenario", "drift-only");
     let cfg = ServeConfig {
         n_devices: args.usize_or("devices", 8)?,
         drift_rel: args.f64_or("drift", 0.2)?,
+        scenario: ScenarioMix::parse(&scenario_name).ok_or_else(|| {
+            rimc_dora::anyhow::anyhow!(
+                "--scenario {scenario_name}: expected \
+                 drift-only|lognormal|stuck-at|full-stack"
+            )
+        })?,
         seed: args.u64_or("seed", 3)?,
         queue_capacity: args.usize_or("queue-cap", 256)?,
         max_batch_samples: args
@@ -459,10 +486,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..TraceSpec::default()
     };
     println!(
-        "deploying {} `{model}` devices at {:.0}% drift \
+        "deploying {} `{model}` devices at {:.0}% drift, scenario `{}` \
          (teacher trains on first session)...",
         cfg.n_devices,
-        100.0 * cfg.drift_rel
+        100.0 * cfg.drift_rel,
+        cfg.scenario.name()
     );
     let server = Server::new(session, &cfg)?;
     let trace = synth_trace(&spec, server.session().dataset.n_eval());
@@ -539,6 +567,95 @@ fn cmd_serve(args: &Args) -> Result<()> {
          — calibration stayed SRAM-only",
         report.sram_writes
     );
+    Ok(())
+}
+
+/// `rimc scenarios` — sweep non-ideality mixes and report calibration
+/// recovery per mix. The sweep itself fans (mix, seed) cells over the
+/// shared thread budget and reduces in grid order, so rows are bitwise
+/// identical across `--threads` (tests/nonideality.rs pins this); the
+/// wall-clock of the whole sweep lands in `BENCH_scenarios.json`.
+fn cmd_scenarios(args: &Args) -> Result<()> {
+    use rimc_dora::util::bench::{time_ns, write_bench_json, BenchRecord};
+
+    let smoke = args.bool_or("smoke", false)?;
+    let eng = engine(args)?;
+    let model = args.str_or("model", "nano");
+    let session = eng.session(&model)?;
+
+    let mix_list = args.str_or("mixes", "drift-only,lognormal,stuck-at,full-stack");
+    let mut mixes = Vec::new();
+    for name in mix_list.split(',').filter(|s| !s.is_empty()) {
+        mixes.push(ScenarioMix::parse(name).ok_or_else(|| {
+            rimc_dora::anyhow::anyhow!(
+                "--mixes {name}: expected \
+                 drift-only|lognormal|stuck-at|full-stack"
+            )
+        })?);
+    }
+
+    let mut cfg = calib_cfg(args)?;
+    if smoke {
+        cfg.max_steps_per_layer = cfg.max_steps_per_layer.min(30);
+    }
+    let seeds = drift_seeds(args, if smoke { 2 } else { 3 })?;
+    let rel = args.f64_or("drift", 0.2)?;
+    let n_samples = args.usize_or("samples", 10)?;
+    println!(
+        "sweeping {} scenario mixes x {} seeds on `{model}` at {:.0}% \
+         drift (teacher trains on first session)...",
+        mixes.len(),
+        seeds.len(),
+        100.0 * rel
+    );
+
+    let (rows, wall_ns) = time_ns(|| {
+        scenario_sweep(&session, rel, n_samples, &cfg, &mixes, &seeds)
+    });
+    let rows = rows?;
+    print_table(
+        &format!(
+            "scenario sweep — calibration recovery per mix ({model}, \
+             {} seeds)",
+            seeds.len()
+        ),
+        &["mix", "pre-calib", "post-calib", "teacher", "recovery",
+          "stuck cells", "RRAM writes (field)"],
+        &rows.iter().map(|r| vec![
+            r.mix.name().to_string(),
+            pct(r.pre_acc),
+            pct(r.post_acc),
+            pct(r.teacher_acc),
+            pct(r.recovery),
+            format!("{:.1}", r.stuck_cells),
+            r.rram_writes_in_field.to_string(),
+        ]).collect::<Vec<_>>(),
+    );
+
+    for r in &rows {
+        if r.rram_writes_in_field != 0 {
+            bail!(
+                "mix `{}` issued {} RRAM write pulses in the field — the \
+                 zero-write invariant is broken",
+                r.mix.name(),
+                r.rram_writes_in_field
+            );
+        }
+    }
+    println!(
+        "RRAM writes in field: 0 under every mix — calibration stayed \
+         SRAM-only across the scenario grid"
+    );
+
+    let record = BenchRecord {
+        op: "scenario-sweep".into(),
+        preset: model.clone(),
+        threads: rimc_dora::util::threads::threads(),
+        wall_ns: wall_ns.max(1.0),
+        speedup: 1.0,
+    };
+    let path = write_bench_json("scenarios", &[record])?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

@@ -7,7 +7,7 @@ use crate::anyhow::Result;
 use super::spec::ModelSpec;
 use super::teacher::TeacherModel;
 use crate::device::{DriftModel, ProgramModel};
-use crate::rram::{ArrayCounters, Crossbar};
+use crate::rram::{ArrayCounters, Crossbar, NonIdealityModel};
 use crate::runtime::{ArrayIo, StackedArrays};
 use crate::util::tensor::Tensor;
 
@@ -29,24 +29,47 @@ impl StudentModel {
         program: ProgramModel,
         seed: u64,
     ) -> Result<StudentModel> {
+        StudentModel::program_with(
+            spec,
+            teacher,
+            drift,
+            program,
+            NonIdealityModel::ideal(),
+            seed,
+        )
+    }
+
+    /// `program` under a scenario-engine fault model. Each array derives
+    /// its own stream space from its crossbar seed, so per-device seeds
+    /// give heterogeneous fleet degradation.
+    pub fn program_with(
+        spec: &ModelSpec,
+        teacher: &TeacherModel,
+        drift: DriftModel,
+        program: ProgramModel,
+        nonideal: NonIdealityModel,
+        seed: u64,
+    ) -> Result<StudentModel> {
         let mut blocks = Vec::with_capacity(spec.n_blocks);
         for l in 0..spec.n_blocks {
             let w = teacher.block_weights(l);
             let w_max = w.max_abs() as f64 + 1e-9;
-            blocks.push(Crossbar::program_weights(
+            blocks.push(Crossbar::program_weights_with(
                 &w,
                 w_max,
                 drift,
                 program,
+                nonideal,
                 seed.wrapping_add(l as u64 + 1),
             )?);
         }
         let w_max = teacher.wh.max_abs() as f64 + 1e-9;
-        let head = Crossbar::program_weights(
+        let head = Crossbar::program_weights_with(
             &teacher.wh,
             w_max,
             drift,
             program,
+            nonideal,
             seed.wrapping_add(10_000),
         )?;
         Ok(StudentModel {
@@ -144,6 +167,15 @@ impl StudentModel {
             total.merge(&b.counters);
         }
         total.merge(&self.head.counters);
+        total
+    }
+
+    /// Total scenario-engine stuck-at cells across all arrays.
+    pub fn injected_stuck_cells(&self) -> u64 {
+        let mut total = self.head.injected_stuck_cells();
+        for b in &self.blocks {
+            total += b.injected_stuck_cells();
+        }
         total
     }
 

@@ -20,8 +20,10 @@
 //! `W_r` for the DoRA column norm (reads do not wear the device).
 
 mod counters;
+pub mod nonideal;
 
 pub use counters::ArrayCounters;
+pub use nonideal::{NonIdealityModel, ScenarioMix};
 
 use crate::device::{constants, DriftModel, ProgramModel, WeightCoding};
 use crate::util::rng::Rng;
@@ -52,17 +54,42 @@ pub struct Crossbar {
     /// drift noise is frozen per (cell, epoch) so reads are consistent;
     /// re-sampled when `advance_time` moves the clock
     rng: Rng,
+    /// scenario-engine fault channels (`NonIdealityModel::ideal()` =
+    /// the historical drift-only behaviour, bitwise)
+    nonideal: NonIdealityModel,
     pub counters: ArrayCounters,
 }
 
 impl Crossbar {
     /// Allocate an array for a weight matrix with range `w_max`, and
-    /// program `weights` into it (write-and-verify per cell).
+    /// program `weights` into it (write-and-verify per cell) with the
+    /// ideal (drift-only) non-ideality model.
     pub fn program_weights(
         weights: &Tensor,
         w_max: f64,
         drift: DriftModel,
         program: ProgramModel,
+        seed: u64,
+    ) -> Result<Crossbar> {
+        Crossbar::program_weights_with(
+            weights,
+            w_max,
+            drift,
+            program,
+            NonIdealityModel::ideal(),
+            seed,
+        )
+    }
+
+    /// `program_weights` under a scenario-engine fault model. The model
+    /// is re-keyed per array (`for_array(seed)`) so arrays — and devices,
+    /// whose arrays carry per-device seeds — degrade heterogeneously.
+    pub fn program_weights_with(
+        weights: &Tensor,
+        w_max: f64,
+        drift: DriftModel,
+        program: ProgramModel,
+        nonideal: NonIdealityModel,
         seed: u64,
     ) -> Result<Crossbar> {
         if weights.shape().len() != 2 {
@@ -84,6 +111,7 @@ impl Crossbar {
             stuck: vec![false; 2 * n],
             age_hours: 0.0,
             rng: Rng::new(seed),
+            nonideal: nonideal.for_array(seed),
             counters: ArrayCounters::default(),
         };
         xb.reprogram(weights)?;
@@ -126,6 +154,23 @@ impl Crossbar {
             let (tp, tn) = self.coding.encode(w as f64);
             self.program_cell(i, true, tp);
             self.program_cell(i, false, tn);
+        }
+        // scenario-engine programming channels transform the *achieved*
+        // levels after write-verify converged (canonical order, see
+        // `nonideal` module docs) — the verify loop above is untouched,
+        // which is what keeps wear counters invariant under every mix
+        if !self.nonideal.is_ideal() {
+            let n = self.rows * self.cols;
+            let g_max = self.coding.g_max;
+            for i in 0..n {
+                self.gp_t[i] =
+                    self.nonideal.apply_programmed(self.gp_t[i], g_max, i as u64);
+                self.gn_t[i] = self.nonideal.apply_programmed(
+                    self.gn_t[i],
+                    g_max,
+                    (n + i) as u64,
+                );
+            }
         }
         self.age_hours = 0.0;
         // post-programming state: conductances at their programmed values
@@ -183,6 +228,7 @@ impl Crossbar {
             self.gn[i] = self.drift.apply(self.gn_t[i], g_max, tf, &mut self.rng);
         }
         self.counters.drift_events += 1;
+        self.apply_read_channels(tf);
     }
 
     /// Apply saturated drift immediately (the Fig. 2/4/5/6 setting:
@@ -195,6 +241,32 @@ impl Crossbar {
             self.gn[i] = self.drift.apply(self.gn_t[i], g_max, 1.0, &mut self.rng);
         }
         self.counters.drift_events += 1;
+        self.apply_read_channels(1.0);
+    }
+
+    /// Read-time scenario channels (retention, epoch-frozen read noise,
+    /// stuck-at pin) over each freshly drift-sampled conductance plane.
+    /// The drift event count doubles as the read-noise epoch, so noise
+    /// is re-sampled exactly when drift is.
+    fn apply_read_channels(&mut self, tf: f64) {
+        if self.nonideal.is_ideal() {
+            return;
+        }
+        let n = self.rows * self.cols;
+        let g_max = self.coding.g_max;
+        let epoch = self.counters.drift_events;
+        for i in 0..n {
+            self.gp[i] =
+                self.nonideal
+                    .apply_read(self.gp[i], g_max, tf, i as u64, epoch);
+            self.gn[i] = self.nonideal.apply_read(
+                self.gn[i],
+                g_max,
+                tf,
+                (n + i) as u64,
+                epoch,
+            );
+        }
     }
 
     /// Current conductance planes as f32 tensors (executable inputs).
@@ -267,6 +339,38 @@ impl Crossbar {
 
     pub fn stuck_cells(&self) -> usize {
         self.stuck.iter().filter(|&&s| s).count()
+    }
+
+    /// The per-array fault model in effect (already `for_array`-keyed).
+    pub fn nonideal(&self) -> &NonIdealityModel {
+        &self.nonideal
+    }
+
+    /// Current (drifted + faulted) conductance planes, `(gp, gn)`.
+    pub fn conductances(&self) -> (&[f64], &[f64]) {
+        (&self.gp, &self.gn)
+    }
+
+    /// Programmed targets after the programming-time fault channels,
+    /// `(gp_t, gn_t)` — what drift re-samples from.
+    pub fn programmed_targets(&self) -> (&[f64], &[f64]) {
+        (&self.gp_t, &self.gn_t)
+    }
+
+    /// Number of cells (out of `2 * rows * cols`) held at a fault level
+    /// by the scenario engine's stuck-at channel. Recomputed from the
+    /// seeded streams — no mask is stored. Distinct from `stuck_cells`,
+    /// which counts endurance-exhausted cells.
+    pub fn injected_stuck_cells(&self) -> u64 {
+        let n = (2 * self.rows * self.cols) as u64;
+        let g_max = self.coding.g_max;
+        let mut count = 0;
+        for cell in 0..n {
+            if self.nonideal.stuck_at(cell, g_max).is_some() {
+                count += 1;
+            }
+        }
+        count
     }
 }
 

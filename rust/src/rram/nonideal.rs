@@ -1,0 +1,508 @@
+//! Seeded, composable non-ideality model — the scenario engine.
+//!
+//! The drift model (`device::DriftModel`) is no longer the only
+//! imperfection: real RIMC devices also suffer lognormal programming
+//! variation, DAC quantization, device-to-device variation, stuck-at
+//! faults, read noise and retention decay (ReRAM-aware finetuning,
+//! arxiv 2606.17471; the 8-bit IMC core, arxiv 2008.11669). This module
+//! models each as an independently seeded *channel* that the crossbar
+//! applies at programming time and/or read time.
+//!
+//! **Canonical application order** (pinned by `tests/nonideality.rs`):
+//!
+//! * programming time, after write-and-verify converges —
+//!   1. DAC quantization of the achieved level (`dac_bits`),
+//!   2. lognormal conductance variation (`lognormal_sigma`),
+//!   3. device-to-device gain variation (`device_var_sigma`),
+//!   4. stuck-at fault override (`stuck_rate`);
+//! * read time, after each drift re-sample (`advance_time` /
+//!   `apply_saturated_drift`) —
+//!   1. retention decay (`retention_rate`, scaled by the drift time
+//!      factor),
+//!   2. read noise, frozen per (cell, drift epoch) so repeated reads
+//!      between drift events are consistent (`read_sigma`),
+//!   3. stuck-at pin (a faulted cell never drifts off its fault level).
+//!
+//! **Seeding scheme.** Every channel draws from its own counter-mode
+//! stream keyed by `(model seed, channel tag, cell index)` — no stored
+//! masks, no allocation, and values are order-independent: enabling one
+//! channel never shifts another channel's draws, and none of them touch
+//! the crossbar's main drift/programming RNG. A disabled model is a
+//! bitwise no-op, and wear counters are invariant under every mix
+//! because the channels transform stored values only, never the
+//! write-verify loop. Per-array seeds derive from the crossbar seed
+//! (`for_array`), so fleets whose devices are seeded per device degrade
+//! heterogeneously.
+
+use crate::util::rng::Rng;
+
+/// SplitMix64 finalizer — the same mix `util::rng::Rng::new` uses to
+/// expand seeds, reused here to derive per-array stream spaces.
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// One independently seeded fault channel (stream-tag namespace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Channel {
+    Lognormal,
+    DeviceVar,
+    StuckAt,
+    Retention,
+    ReadNoise,
+}
+
+impl Channel {
+    /// Stream tag: distinct high-entropy constants so channels never
+    /// share a stream even for the same cell.
+    pub fn tag(self) -> u64 {
+        match self {
+            Channel::Lognormal => 0x1f8b_08a1_c3d2_e5f4,
+            Channel::DeviceVar => 0x2c9d_17b3_a581_f06e,
+            Channel::StuckAt => 0x3b7e_44c5_9d12_8a0f,
+            Channel::Retention => 0x4d31_92e7_6bf0_55c8,
+            Channel::ReadNoise => 0x5ea8_03f9_471c_b392,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// pure kernels (golden-pinned against the numpy mirror)
+// ---------------------------------------------------------------------
+
+/// DAC quantization: snap a conductance to one of `2^bits` uniform
+/// levels over `[0, g_max]` (snippet-1 style `round(v * steps) /
+/// steps`). `bits == 0` disables quantization (exact identity).
+pub fn dac_quantize(g: f64, g_max: f64, bits: u32) -> f64 {
+    if bits == 0 {
+        return g;
+    }
+    // steps as f64: bits beyond the f64 mantissa just reproduce g
+    let steps = 2.0f64.powi(bits.min(512) as i32) - 1.0;
+    ((g / g_max * steps).round() / steps * g_max).clamp(0.0, g_max)
+}
+
+/// Lognormal conductance variation: `g * exp(sigma * z)` clamped to the
+/// physical range (snippet-3 style lognormal resistance distribution).
+/// Zero-conductance (HRS) cells have no state to scale and stay 0 —
+/// this also keeps `0 * exp(inf)` from producing NaN at extreme sigma.
+pub fn lognormal_apply(g: f64, g_max: f64, sigma: f64, z: f64) -> f64 {
+    if g <= 0.0 {
+        return 0.0;
+    }
+    (g * (sigma * z).exp()).clamp(0.0, g_max)
+}
+
+/// Device-to-device gain variation: `g * (1 + sigma * z)` clamped
+/// (snippet-1 `DEVICE_VARIATION`). Zero cells stay 0 (NaN guard as
+/// above).
+pub fn device_var_apply(g: f64, g_max: f64, sigma: f64, z: f64) -> f64 {
+    if g <= 0.0 {
+        return 0.0;
+    }
+    (g * (1.0 + sigma * z)).clamp(0.0, g_max)
+}
+
+/// Retention decay: a cell loses a `rate * tf * u` fraction of its
+/// state toward HRS, where `tf` is the drift time factor (0 fresh, 1
+/// saturated) and `u in [0, 1)` is the cell's frozen decay propensity.
+/// The loss factor is clamped at 0 so extreme rates floor at full loss.
+pub fn retention_apply(g: f64, rate: f64, tf: f64, u: f64) -> f64 {
+    g * (1.0 - rate * tf * u).max(0.0)
+}
+
+// ---------------------------------------------------------------------
+// the composable model
+// ---------------------------------------------------------------------
+
+/// Seeded, composable non-ideality model. All channel parameters
+/// default to 0 (disabled); a fully disabled model is bitwise identity
+/// on every path. See the module docs for the canonical application
+/// order and the seeding scheme.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NonIdealityModel {
+    /// sigma of the lognormal multiplier on programmed conductances
+    pub lognormal_sigma: f64,
+    /// DAC resolution in bits; 0 disables quantization
+    pub dac_bits: u32,
+    /// device-to-device multiplicative gain variation (sigma)
+    pub device_var_sigma: f64,
+    /// fraction of cells stuck at 0 or `g_max` (manufacturing faults)
+    pub stuck_rate: f64,
+    /// read noise sigma as a fraction of `g_max`, frozen per drift epoch
+    pub read_sigma: f64,
+    /// retention loss rate (fraction of state lost at saturated drift)
+    pub retention_rate: f64,
+    /// channel-stream seed (combine with `for_array` per crossbar)
+    pub seed: u64,
+}
+
+impl Default for NonIdealityModel {
+    fn default() -> Self {
+        NonIdealityModel::ideal()
+    }
+}
+
+impl NonIdealityModel {
+    /// The disabled model: every channel off, bitwise identity.
+    pub fn ideal() -> Self {
+        NonIdealityModel {
+            lognormal_sigma: 0.0,
+            dac_bits: 0,
+            device_var_sigma: 0.0,
+            stuck_rate: 0.0,
+            read_sigma: 0.0,
+            retention_rate: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// True when every channel is disabled (the seed is irrelevant
+    /// then — no stream is ever drawn).
+    pub fn is_ideal(&self) -> bool {
+        self.lognormal_sigma == 0.0
+            && self.dac_bits == 0
+            && self.device_var_sigma == 0.0
+            && self.stuck_rate == 0.0
+            && self.read_sigma == 0.0
+            && self.retention_rate == 0.0
+    }
+
+    pub fn with_seed(self, seed: u64) -> Self {
+        NonIdealityModel { seed, ..self }
+    }
+
+    /// Derive the per-array model: same channels, stream space keyed by
+    /// the crossbar's own seed — arrays (and therefore devices, whose
+    /// arrays are seeded per device) fault independently.
+    pub fn for_array(self, array_seed: u64) -> Self {
+        NonIdealityModel { seed: self.seed ^ mix64(array_seed), ..self }
+    }
+
+    /// Counter-mode stream for `(channel, cell)`: deterministic,
+    /// order-independent, allocation-free.
+    pub fn stream(&self, ch: Channel, cell: u64) -> Rng {
+        Rng::new(
+            self.seed
+                ^ ch.tag()
+                ^ cell
+                    .wrapping_add(1)
+                    .wrapping_mul(0x9E3779B97F4A7C15),
+        )
+    }
+
+    /// Epoch-keyed stream for read noise: re-sampled when the drift
+    /// clock moves, frozen between drift events.
+    pub fn epoch_stream(&self, ch: Channel, cell: u64, epoch: u64) -> Rng {
+        Rng::new(
+            self.seed
+                ^ ch.tag()
+                ^ cell
+                    .wrapping_add(1)
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                ^ epoch
+                    .wrapping_add(1)
+                    .wrapping_mul(0xD1B54A32D192ED03),
+        )
+    }
+
+    /// Stuck-at fault lookup for one cell: `None` when healthy, else
+    /// the fault level (0 for stuck-at-HRS, `g_max` for stuck-at-LRS,
+    /// 50/50). Recomputed from the stream on every call — no mask is
+    /// stored, and the answer is identical at programming and read
+    /// time.
+    pub fn stuck_at(&self, cell: u64, g_max: f64) -> Option<f64> {
+        if self.stuck_rate <= 0.0 {
+            return None;
+        }
+        let mut s = self.stream(Channel::StuckAt, cell);
+        if s.uniform() >= self.stuck_rate {
+            return None;
+        }
+        Some(if s.uniform() < 0.5 { 0.0 } else { g_max })
+    }
+
+    /// Programming-time channels in canonical order (applied to the
+    /// value write-and-verify converged to): DAC quantization ->
+    /// lognormal -> device-to-device variation -> stuck-at override.
+    pub fn apply_programmed(&self, g: f64, g_max: f64, cell: u64) -> f64 {
+        let mut g = g;
+        if self.dac_bits != 0 {
+            g = dac_quantize(g, g_max, self.dac_bits);
+        }
+        if self.lognormal_sigma != 0.0 {
+            let z = self.stream(Channel::Lognormal, cell).normal();
+            g = lognormal_apply(g, g_max, self.lognormal_sigma, z);
+        }
+        if self.device_var_sigma != 0.0 {
+            let z = self.stream(Channel::DeviceVar, cell).normal();
+            g = device_var_apply(g, g_max, self.device_var_sigma, z);
+        }
+        if let Some(level) = self.stuck_at(cell, g_max) {
+            g = level;
+        }
+        g
+    }
+
+    /// Read-time channels in canonical order (applied to each freshly
+    /// drift-sampled conductance): retention decay -> epoch-frozen read
+    /// noise -> stuck-at pin.
+    pub fn apply_read(
+        &self,
+        g: f64,
+        g_max: f64,
+        tf: f64,
+        cell: u64,
+        epoch: u64,
+    ) -> f64 {
+        let mut g = g;
+        if self.retention_rate != 0.0 {
+            let u = self.stream(Channel::Retention, cell).uniform();
+            g = retention_apply(g, self.retention_rate, tf, u);
+        }
+        if self.read_sigma != 0.0 {
+            let z = self.epoch_stream(Channel::ReadNoise, cell, epoch).normal();
+            g = (g + self.read_sigma * g_max * z).clamp(0.0, g_max);
+        }
+        if let Some(level) = self.stuck_at(cell, g_max) {
+            g = level;
+        }
+        g
+    }
+}
+
+// ---------------------------------------------------------------------
+// named scenario mixes (the `rimc scenarios` sweep axis)
+// ---------------------------------------------------------------------
+
+/// Named scenario mixes, cumulative by construction: each adds fault
+/// channels on top of the previous one (drift itself always comes from
+/// `device::DriftModel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioMix {
+    /// drift only — the pre-engine behaviour, `NonIdealityModel::ideal`
+    DriftOnly,
+    /// + lognormal programming variation
+    PlusLognormal,
+    /// + stuck-at faults
+    PlusStuckAt,
+    /// + DAC quantization, device variation, read noise, retention
+    FullStack,
+}
+
+impl ScenarioMix {
+    pub const ALL: [ScenarioMix; 4] = [
+        ScenarioMix::DriftOnly,
+        ScenarioMix::PlusLognormal,
+        ScenarioMix::PlusStuckAt,
+        ScenarioMix::FullStack,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioMix::DriftOnly => "drift-only",
+            ScenarioMix::PlusLognormal => "lognormal",
+            ScenarioMix::PlusStuckAt => "stuck-at",
+            ScenarioMix::FullStack => "full-stack",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScenarioMix> {
+        match s {
+            "drift-only" | "drift" => Some(ScenarioMix::DriftOnly),
+            "lognormal" => Some(ScenarioMix::PlusLognormal),
+            "stuck-at" | "stuck" => Some(ScenarioMix::PlusStuckAt),
+            "full-stack" | "full" => Some(ScenarioMix::FullStack),
+            _ => None,
+        }
+    }
+
+    /// The mix's model at `seed`. Magnitudes follow the related-work
+    /// exemplars: ~5% lognormal spread, 1% stuck cells, 8-bit DAC, 1%
+    /// device variation, 0.5% read noise, 5% retention loss.
+    pub fn model(self, seed: u64) -> NonIdealityModel {
+        let base = NonIdealityModel::ideal().with_seed(seed);
+        match self {
+            ScenarioMix::DriftOnly => base,
+            ScenarioMix::PlusLognormal => NonIdealityModel {
+                lognormal_sigma: 0.05,
+                ..base
+            },
+            ScenarioMix::PlusStuckAt => NonIdealityModel {
+                lognormal_sigma: 0.05,
+                stuck_rate: 0.01,
+                ..base
+            },
+            ScenarioMix::FullStack => NonIdealityModel {
+                lognormal_sigma: 0.05,
+                stuck_rate: 0.01,
+                dac_bits: 8,
+                device_var_sigma: 0.01,
+                read_sigma: 0.005,
+                retention_rate: 0.05,
+                ..base
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const G_MAX: f64 = 100.0;
+
+    #[test]
+    fn ideal_is_identity_on_every_path() {
+        let m = NonIdealityModel::ideal();
+        assert!(m.is_ideal());
+        for g in [0.0, 0.015625, 37.5, G_MAX] {
+            assert_eq!(m.apply_programmed(g, G_MAX, 7).to_bits(), g.to_bits());
+            assert_eq!(
+                m.apply_read(g, G_MAX, 1.0, 7, 3).to_bits(),
+                g.to_bits()
+            );
+        }
+        assert!(m.stuck_at(0, G_MAX).is_none());
+    }
+
+    #[test]
+    fn channels_draw_independent_streams() {
+        let m = NonIdealityModel::ideal().with_seed(42);
+        let mut ln = m.stream(Channel::Lognormal, 5);
+        let mut dv = m.stream(Channel::DeviceVar, 5);
+        let mut other_cell = m.stream(Channel::Lognormal, 6);
+        let x = ln.next_u64();
+        assert_ne!(x, dv.next_u64(), "channel streams collide");
+        assert_ne!(x, other_cell.next_u64(), "cell streams collide");
+        // deterministic re-derivation
+        assert_eq!(m.stream(Channel::Lognormal, 5).next_u64(), x);
+    }
+
+    #[test]
+    fn for_array_derives_distinct_spaces() {
+        let m = ScenarioMix::FullStack.model(9);
+        let a = m.for_array(1);
+        let b = m.for_array(2);
+        assert_ne!(a.seed, b.seed);
+        assert_ne!(
+            a.stream(Channel::StuckAt, 0).next_u64(),
+            b.stream(Channel::StuckAt, 0).next_u64()
+        );
+        // channels are untouched
+        assert_eq!(a.stuck_rate, m.stuck_rate);
+        assert_eq!(a.dac_bits, m.dac_bits);
+    }
+
+    #[test]
+    fn dac_quantize_levels_and_identity() {
+        assert_eq!(dac_quantize(37.5, G_MAX, 0).to_bits(), 37.5f64.to_bits());
+        // 1 bit: only 0 and g_max survive
+        assert_eq!(dac_quantize(37.5, G_MAX, 1), 0.0);
+        assert_eq!(dac_quantize(62.5, G_MAX, 1), G_MAX);
+        // 8 bits: at most one half-step away
+        let q = dac_quantize(37.5, G_MAX, 8);
+        assert!((q - 37.5).abs() <= 0.5 * G_MAX / 255.0 + 1e-12);
+        // quantization is idempotent
+        assert_eq!(dac_quantize(q, G_MAX, 8).to_bits(), q.to_bits());
+        // extreme bit widths neither overflow nor produce NaN
+        for bits in [16, 24, 53, 64, 255] {
+            let v = dac_quantize(37.5, G_MAX, bits);
+            assert!(v.is_finite() && (0.0..=G_MAX).contains(&v));
+        }
+    }
+
+    #[test]
+    fn kernels_never_produce_nan_at_extremes() {
+        for sigma in [0.0, 0.05, 1e3] {
+            for z in [-8.0, 0.0, 8.0] {
+                for g in [0.0, 1e-300, 50.0, G_MAX] {
+                    let v = lognormal_apply(g, G_MAX, sigma, z);
+                    assert!(
+                        !v.is_nan() && (0.0..=G_MAX).contains(&v),
+                        "lognormal g={g} sigma={sigma} z={z} -> {v}"
+                    );
+                    let v = device_var_apply(g, G_MAX, sigma, z);
+                    assert!(
+                        !v.is_nan() && (0.0..=G_MAX).contains(&v),
+                        "device_var g={g} sigma={sigma} z={z} -> {v}"
+                    );
+                }
+            }
+        }
+        for rate in [0.0, 0.05, 1.0, 1e3] {
+            let v = retention_apply(50.0, rate, 1.0, 0.999);
+            assert!(!v.is_nan() && (0.0..=G_MAX).contains(&v));
+        }
+    }
+
+    #[test]
+    fn stuck_rate_bounds() {
+        let none = NonIdealityModel {
+            stuck_rate: 0.0,
+            ..NonIdealityModel::ideal().with_seed(1)
+        };
+        let all = NonIdealityModel { stuck_rate: 1.0, ..none };
+        let mut lo = 0;
+        let mut hi = 0;
+        for cell in 0..512 {
+            assert!(none.stuck_at(cell, G_MAX).is_none());
+            match all.stuck_at(cell, G_MAX) {
+                Some(level) if level == 0.0 => lo += 1,
+                Some(level) if level == G_MAX => hi += 1,
+                other => panic!("rate-1 cell {cell} not stuck: {other:?}"),
+            }
+        }
+        // both polarities occur
+        assert!(lo > 0 && hi > 0, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn apply_read_freezes_noise_per_epoch() {
+        let m = NonIdealityModel {
+            read_sigma: 0.01,
+            ..NonIdealityModel::ideal().with_seed(77)
+        };
+        let a = m.apply_read(50.0, G_MAX, 1.0, 3, 1);
+        let b = m.apply_read(50.0, G_MAX, 1.0, 3, 1);
+        assert_eq!(a.to_bits(), b.to_bits(), "same epoch must be frozen");
+        let c = m.apply_read(50.0, G_MAX, 1.0, 3, 2);
+        assert_ne!(a.to_bits(), c.to_bits(), "new epoch must re-sample");
+    }
+
+    #[test]
+    fn mixes_are_cumulative_and_parse_roundtrips() {
+        assert!(ScenarioMix::DriftOnly.model(1).is_ideal());
+        let ln = ScenarioMix::PlusLognormal.model(1);
+        let st = ScenarioMix::PlusStuckAt.model(1);
+        let full = ScenarioMix::FullStack.model(1);
+        assert!(ln.lognormal_sigma > 0.0 && ln.stuck_rate == 0.0);
+        assert_eq!(st.lognormal_sigma, ln.lognormal_sigma);
+        assert!(st.stuck_rate > 0.0 && st.dac_bits == 0);
+        assert_eq!(full.stuck_rate, st.stuck_rate);
+        assert!(full.dac_bits > 0 && full.read_sigma > 0.0);
+        assert!(full.device_var_sigma > 0.0 && full.retention_rate > 0.0);
+        for mix in ScenarioMix::ALL {
+            assert_eq!(ScenarioMix::parse(mix.name()), Some(mix));
+        }
+        assert_eq!(ScenarioMix::parse("nope"), None);
+    }
+
+    #[test]
+    fn enabling_one_channel_never_shifts_another() {
+        // composition law: the lognormal draw for a cell is identical
+        // whether or not other channels are enabled
+        let only_ln = NonIdealityModel {
+            lognormal_sigma: 0.05,
+            ..NonIdealityModel::ideal().with_seed(5)
+        };
+        let full = ScenarioMix::FullStack.model(5);
+        assert_eq!(
+            only_ln.stream(Channel::Lognormal, 11).normal().to_bits(),
+            full.stream(Channel::Lognormal, 11).normal().to_bits()
+        );
+    }
+}

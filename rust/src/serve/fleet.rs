@@ -23,6 +23,7 @@ use crate::coordinator::Session;
 use crate::dataset::Dataset;
 use crate::device::DriftModel;
 use crate::model::{AdapterKind, AdapterSet, StudentModel};
+use crate::rram::{NonIdealityModel, ScenarioMix};
 use crate::runtime::AdapterIo;
 use crate::util::tensor::Tensor;
 use crate::util::threads::ThreadPool;
@@ -110,20 +111,43 @@ impl std::fmt::Debug for Device {
 
 impl Device {
     /// Program the session's teacher into fresh crossbars with this
-    /// device's own drift physics and seed (devices drift independently).
-    // lint:allow(R6) -- audited deployment boundary: this is the one
-    // sanctioned RRAM-programming event, and it runs *before* field
-    // service begins. The write attempts it issues are captured in
-    // `deploy_write_attempts`, the baseline the zero-field-write
-    // invariant (`rram_write_attempts_in_field`) is measured against.
+    /// device's own drift physics and seed (devices drift independently),
+    /// with the ideal (drift-only) non-ideality model.
     pub fn deploy(
         session: &Session,
         id: usize,
         drift_rel: f64,
         seed: u64,
     ) -> Result<Device> {
-        let student =
-            session.program_student(DriftModel::with_rel(drift_rel), seed)?;
+        Device::deploy_with(
+            session,
+            id,
+            drift_rel,
+            NonIdealityModel::ideal(),
+            seed,
+        )
+    }
+
+    /// `deploy` under a scenario-engine fault model: the device's
+    /// crossbars program through the model's per-array streams, so a
+    /// fleet deployed with per-device seeds degrades heterogeneously.
+    // lint:allow(R6) -- audited deployment boundary: this is the one
+    // sanctioned RRAM-programming event, and it runs *before* field
+    // service begins. The write attempts it issues are captured in
+    // `deploy_write_attempts`, the baseline the zero-field-write
+    // invariant (`rram_write_attempts_in_field`) is measured against.
+    pub fn deploy_with(
+        session: &Session,
+        id: usize,
+        drift_rel: f64,
+        nonideal: NonIdealityModel,
+        seed: u64,
+    ) -> Result<Device> {
+        let student = session.program_student_with(
+            DriftModel::with_rel(drift_rel),
+            nonideal,
+            seed,
+        )?;
         let counters = student.total_counters();
         Ok(Device {
             id,
@@ -240,6 +264,12 @@ impl Device {
         self.student.total_counters().write_attempts - self.deploy_write_attempts
     }
 
+    /// Scenario-engine stuck-at cells on this device (fault injection,
+    /// not endurance wear) — the serving heterogeneity test reads this.
+    pub fn injected_stuck_cells(&self) -> u64 {
+        self.student.injected_stuck_cells()
+    }
+
     pub fn stats(&self) -> DeviceStats {
         let counters = self.student.total_counters();
         DeviceStats {
@@ -271,25 +301,47 @@ impl std::fmt::Debug for Fleet {
 }
 
 impl Fleet {
-    /// Deploy `n_devices` fresh devices at the given relative drift.
-    /// Programming is independent per device, so it fans out over the
-    /// scoped thread pool; seeds are per-device, so fleet construction
-    /// is deterministic regardless of worker count.
+    /// Deploy `n_devices` fresh devices at the given relative drift
+    /// (drift-only scenario — the historical behaviour, bitwise).
     pub fn deploy(
         session: Arc<Session>,
         n_devices: usize,
         drift_rel: f64,
         seed: u64,
     ) -> Result<Fleet> {
+        Fleet::deploy_with(
+            session,
+            n_devices,
+            drift_rel,
+            ScenarioMix::DriftOnly,
+            seed,
+        )
+    }
+
+    /// Deploy `n_devices` fresh devices under a named scenario mix.
+    /// Programming is independent per device, so it fans out over the
+    /// scoped thread pool; seeds are per-device — and the scenario
+    /// model re-keys its fault streams per crossbar seed — so fleet
+    /// construction is deterministic regardless of worker count while
+    /// every device still degrades in its own way.
+    pub fn deploy_with(
+        session: Arc<Session>,
+        n_devices: usize,
+        drift_rel: f64,
+        scenario: ScenarioMix,
+        seed: u64,
+    ) -> Result<Fleet> {
         if n_devices == 0 {
             bail!("fleet needs at least one device");
         }
+        let nonideal = scenario.model(seed);
         let ids: Vec<usize> = (0..n_devices).collect();
         let devices = ThreadPool::global().try_map(&ids, |&id| {
-            Device::deploy(
+            Device::deploy_with(
                 &session,
                 id,
                 drift_rel,
+                nonideal,
                 seed.wrapping_add(7919 * (id as u64 + 1)),
             )
         })?;

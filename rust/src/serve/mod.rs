@@ -10,7 +10,11 @@
 //!
 //! * [`fleet`] — N devices, each its own drifted `StudentModel`
 //!   (crossbars, wear counters, drift clock) plus an optional
-//!   SRAM-resident adapter, sharing one `Session`/`Backend`.
+//!   SRAM-resident adapter, sharing one `Session`/`Backend`. Fleets
+//!   deploy under a named `rram::ScenarioMix` (drift-only by default):
+//!   the scenario engine's fault streams re-key per device, so each
+//!   device degrades its own way — stuck cells, programming variation —
+//!   while deployment stays deterministic across worker counts.
 //! * [`queue`] — bounded submission queue with two priority lanes
 //!   (inference outranks calibration/drift maintenance, so a
 //!   multi-second calibration round never starves inference; an

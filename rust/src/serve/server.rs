@@ -26,6 +26,7 @@ use super::fleet::{gather_eval, Fleet};
 use super::queue::{Pending, RequestKind, SubmitQueue, Ticket, WorkUnit};
 use crate::coordinator::Session;
 use crate::model::AdapterKind;
+use crate::rram::ScenarioMix;
 use crate::util::threads::{threads, ThreadPool};
 
 /// Serving-layer knobs.
@@ -34,6 +35,9 @@ pub struct ServeConfig {
     pub n_devices: usize,
     /// asymptotic relative drift programmed into every device
     pub drift_rel: f64,
+    /// named non-ideality mix the fleet deploys under (drift-only =
+    /// the historical behaviour; see `rram::ScenarioMix`)
+    pub scenario: ScenarioMix,
     /// fleet deployment seed (per-device seeds derive from it)
     pub seed: u64,
     /// submission-queue bound (backpressure above this)
@@ -60,6 +64,7 @@ impl Default for ServeConfig {
         ServeConfig {
             n_devices: 8,
             drift_rel: 0.2,
+            scenario: ScenarioMix::DriftOnly,
             seed: 3,
             queue_capacity: 256,
             max_batch_samples: 32,
@@ -131,8 +136,13 @@ impl std::fmt::Debug for Server {
 impl Server {
     /// Deploy a fleet over `session` and stand up the queue.
     pub fn new(session: Arc<Session>, cfg: &ServeConfig) -> Result<Server> {
-        let fleet =
-            Fleet::deploy(session, cfg.n_devices, cfg.drift_rel, cfg.seed)?;
+        let fleet = Fleet::deploy_with(
+            session,
+            cfg.n_devices,
+            cfg.drift_rel,
+            cfg.scenario,
+            cfg.seed,
+        )?;
         Ok(Server {
             queue: SubmitQueue::new(
                 cfg.n_devices,

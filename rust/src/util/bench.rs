@@ -164,6 +164,15 @@ pub fn write_bench_json(
     Ok(path)
 }
 
+/// Wall-clock one closure, returning `(result, elapsed_ns)`. This file
+/// is the sanctioned home for measurement clocks (rimc-lint R7), so CLI
+/// commands that emit `BenchRecord`s time themselves through here.
+pub fn time_ns<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_nanos() as f64)
+}
+
 /// Print a markdown table (used by the paper-figure benches).
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n## {title}\n");

@@ -1,0 +1,644 @@
+//! Property-test battery for the scenario engine (`rram::nonideal`):
+//!
+//! * a disabled model is bitwise identity on every path — programming,
+//!   drift, read — against a crossbar that never heard of the engine;
+//! * wear counters are invariant under every scenario mix (the channels
+//!   transform stored values, never the write-verify loop);
+//! * the canonical fault-composition order is pinned by recomputing the
+//!   kernel chains by hand from the model's own streams;
+//! * extreme (sigma, bits, fault-rate) corners never produce NaN/Inf;
+//! * `scenario_sweep` is bitwise identical across reruns, `--threads
+//!   1/2/0` and arena on/off, and every mix stays zero-field-RRAM-write;
+//! * the seeded streams and pure kernels match the committed
+//!   numpy-generated golden fixture bit-for-bit (u64s, uniforms,
+//!   quantization) or to transcendental tolerance (normals, exp);
+//! * a fleet served under `full-stack` degrades heterogeneously yet
+//!   replays bitwise equal to serial per-device execution with zero
+//!   in-field RRAM writes.
+
+use rimc_dora::calib::CalibConfig;
+use rimc_dora::coordinator::{scenario_sweep, Engine, Session};
+use rimc_dora::device::{constants, DriftModel, ProgramModel};
+use rimc_dora::rram::nonideal::{
+    dac_quantize, device_var_apply, lognormal_apply, retention_apply, Channel,
+};
+use rimc_dora::rram::{ArrayCounters, Crossbar, NonIdealityModel, ScenarioMix};
+use rimc_dora::serve::{
+    gather_eval, replay_collect, synth_trace, Fleet, RequestKind, Response,
+    ServeConfig, Server, TraceSpec,
+};
+use rimc_dora::util::arena;
+use rimc_dora::util::json::Json;
+use rimc_dora::util::rng::Rng;
+use rimc_dora::util::tensor::Tensor;
+use rimc_dora::util::threads::set_threads;
+
+fn weights(seed: u64, rows: usize, cols: usize) -> (Tensor, f64) {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| rng.normal_scaled(0.0, 0.2) as f32)
+        .collect();
+    let t = Tensor::new(vec![rows, cols], data).unwrap();
+    let w_max = t.max_abs() as f64 + 1e-9;
+    (t, w_max)
+}
+
+fn assert_planes_eq(a: (&[f64], &[f64]), b: (&[f64], &[f64]), ctx: &str) {
+    for (plane, (xs, ys)) in [("gp", (a.0, b.0)), ("gn", (a.1, b.1))] {
+        assert_eq!(xs.len(), ys.len(), "{ctx}: {plane} length");
+        for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: {plane}[{i}] {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// Every wear-related counter, compared field by field (no PartialEq on
+/// `ArrayCounters`, deliberately: new fields must opt in here).
+fn assert_wear_eq(a: &ArrayCounters, b: &ArrayCounters, ctx: &str) {
+    assert_eq!(a.write_attempts, b.write_attempts, "{ctx}: write_attempts");
+    assert_eq!(a.verified_writes, b.verified_writes, "{ctx}: verified_writes");
+    assert_eq!(a.stuck_writes, b.stuck_writes, "{ctx}: stuck_writes");
+    assert_eq!(
+        a.endurance_failures, b.endurance_failures,
+        "{ctx}: endurance_failures"
+    );
+    assert_eq!(a.attempts_hist, b.attempts_hist, "{ctx}: attempts_hist");
+    assert_eq!(
+        a.write_time_ns.to_bits(),
+        b.write_time_ns.to_bits(),
+        "{ctx}: write_time_ns"
+    );
+    assert_eq!(
+        a.write_energy_pj.to_bits(),
+        b.write_energy_pj.to_bits(),
+        "{ctx}: write_energy_pj"
+    );
+}
+
+/// Identity-when-disabled, bitwise: a crossbar programmed through an
+/// all-channels-off model (seed irrelevant) is indistinguishable from
+/// one programmed through the plain path — targets, conductances and
+/// counters — through programming, saturated drift and timed drift.
+#[test]
+fn disabled_model_is_bitwise_identity() {
+    let (w, w_max) = weights(11, 12, 10);
+    let drift = DriftModel::with_rel(0.15);
+    let pm = ProgramModel::default();
+    let mut plain = Crossbar::program_weights(&w, w_max, drift, pm, 42).unwrap();
+    let mut gated = Crossbar::program_weights_with(
+        &w,
+        w_max,
+        drift,
+        pm,
+        NonIdealityModel::ideal().with_seed(0xfeed),
+        42,
+    )
+    .unwrap();
+    assert!(gated.nonideal().is_ideal());
+    assert_eq!(gated.injected_stuck_cells(), 0);
+    assert_planes_eq(
+        plain.programmed_targets(),
+        gated.programmed_targets(),
+        "targets after programming",
+    );
+    assert_planes_eq(
+        plain.conductances(),
+        gated.conductances(),
+        "conductances after programming",
+    );
+    assert_wear_eq(&plain.counters, &gated.counters, "after programming");
+
+    plain.apply_saturated_drift();
+    gated.apply_saturated_drift();
+    assert_planes_eq(
+        plain.conductances(),
+        gated.conductances(),
+        "conductances after saturated drift",
+    );
+
+    plain.advance_time(250.0);
+    gated.advance_time(250.0);
+    assert_planes_eq(
+        plain.conductances(),
+        gated.conductances(),
+        "conductances after timed drift",
+    );
+    assert_eq!(plain.counters.drift_events, gated.counters.drift_events);
+    assert_eq!(plain.counters.reads, gated.counters.reads);
+    assert_wear_eq(&plain.counters, &gated.counters, "after drift");
+}
+
+/// Wear counters are bitwise invariant under every mix: the channels
+/// transform the achieved levels after write-verify converged and never
+/// feed back into the verify loop, so attempts, verifications, stuck
+/// writes, endurance failures, histogram, time and energy all match the
+/// ideal run — at deployment, across reprogramming, and under drift.
+#[test]
+fn wear_counters_are_invariant_under_every_mix() {
+    let (w, w_max) = weights(13, 10, 10);
+    let drift = DriftModel::with_rel(0.2);
+    let pm = ProgramModel::default();
+    let mut baseline =
+        Crossbar::program_weights(&w, w_max, drift, pm, 77).unwrap();
+    baseline.reprogram(&w).unwrap();
+    baseline.advance_time(100.0);
+    for mix in ScenarioMix::ALL {
+        let mut xb = Crossbar::program_weights_with(
+            &w,
+            w_max,
+            drift,
+            pm,
+            mix.model(9),
+            77,
+        )
+        .unwrap();
+        xb.reprogram(&w).unwrap();
+        xb.advance_time(100.0);
+        assert_wear_eq(&xb.counters, &baseline.counters, mix.name());
+        assert_eq!(
+            xb.counters.drift_events,
+            baseline.counters.drift_events,
+            "{}: drift_events",
+            mix.name()
+        );
+    }
+}
+
+/// Pin the programming-time composition order by recomputing it by hand:
+/// DAC quantization -> lognormal -> device-to-device variation ->
+/// stuck-at override, applied to the level write-verify converged to.
+/// With `program_sigma = 0` write-verify achieves the encoded targets
+/// exactly, so the expected chain is exact and the compare is bitwise.
+#[test]
+fn programming_channels_compose_in_canonical_order() {
+    let (w, w_max) = weights(17, 9, 7);
+    let pm = ProgramModel { program_sigma: 0.0, ..ProgramModel::default() };
+    let xb = Crossbar::program_weights_with(
+        &w,
+        w_max,
+        DriftModel::with_rel(0.0),
+        pm,
+        ScenarioMix::FullStack.model(5),
+        1234,
+    )
+    .unwrap();
+    let m = *xb.nonideal();
+    let g_max = constants::G_MAX;
+    let n = w.len();
+    let (gp_t, gn_t) = xb.programmed_targets();
+    for (i, &wv) in w.data().iter().enumerate() {
+        let (tp, tn) = xb.coding().encode(wv as f64);
+        for (plane, target, got) in
+            [("gp", tp, gp_t[i]), ("gn", tn, gn_t[i])]
+        {
+            let cell = (if plane == "gp" { i } else { n + i }) as u64;
+            let mut g = dac_quantize(target, g_max, m.dac_bits);
+            g = lognormal_apply(
+                g,
+                g_max,
+                m.lognormal_sigma,
+                m.stream(Channel::Lognormal, cell).normal(),
+            );
+            g = device_var_apply(
+                g,
+                g_max,
+                m.device_var_sigma,
+                m.stream(Channel::DeviceVar, cell).normal(),
+            );
+            if let Some(level) = m.stuck_at(cell, g_max) {
+                g = level;
+            }
+            assert_eq!(
+                got.to_bits(),
+                g.to_bits(),
+                "{plane}[{i}]: programmed {got} != canonical chain {g}"
+            );
+        }
+    }
+}
+
+/// Pin the read-time composition order the same way: retention decay ->
+/// epoch-frozen read noise -> stuck-at pin, applied to each freshly
+/// drift-sampled conductance. With `rel = 0` drift returns the
+/// programmed targets bitwise, so the expected chain is exact again.
+#[test]
+fn read_channels_compose_in_canonical_order() {
+    let (w, w_max) = weights(19, 8, 6);
+    let pm = ProgramModel { program_sigma: 0.0, ..ProgramModel::default() };
+    let mut xb = Crossbar::program_weights_with(
+        &w,
+        w_max,
+        DriftModel::with_rel(0.0),
+        pm,
+        ScenarioMix::FullStack.model(6),
+        4321,
+    )
+    .unwrap();
+    let m = *xb.nonideal();
+    let g_max = constants::G_MAX;
+    let n = w.len();
+    let (tp, tn): (Vec<f64>, Vec<f64>) = {
+        let (p, q) = xb.programmed_targets();
+        (p.to_vec(), q.to_vec())
+    };
+    xb.apply_saturated_drift();
+    let epoch = xb.counters.drift_events;
+    assert_eq!(epoch, 1);
+    let (gp, gn) = xb.conductances();
+    for i in 0..n {
+        for (plane, target, got) in
+            [("gp", tp[i], gp[i]), ("gn", tn[i], gn[i])]
+        {
+            let cell = (if plane == "gp" { i } else { n + i }) as u64;
+            let mut g = retention_apply(
+                target,
+                m.retention_rate,
+                1.0,
+                m.stream(Channel::Retention, cell).uniform(),
+            );
+            let z = m.epoch_stream(Channel::ReadNoise, cell, epoch).normal();
+            g = (g + m.read_sigma * g_max * z).clamp(0.0, g_max);
+            if let Some(level) = m.stuck_at(cell, g_max) {
+                g = level;
+            }
+            assert_eq!(
+                got.to_bits(),
+                g.to_bits(),
+                "{plane}[{i}]: read {got} != canonical chain {g}"
+            );
+        }
+    }
+}
+
+/// NaN/Inf hardening at the corners the kernels are most likely to
+/// break: huge sigmas, 1-bit DACs, rate-1 faults, full retention loss —
+/// all at once, through programming, drift and readout.
+#[test]
+fn extreme_corners_never_produce_nan_or_inf() {
+    let (w, w_max) = weights(23, 12, 8);
+    let extreme = NonIdealityModel {
+        lognormal_sigma: 1e3,
+        dac_bits: 1,
+        device_var_sigma: 1e3,
+        stuck_rate: 0.5,
+        read_sigma: 1e3,
+        retention_rate: 1.0,
+        seed: 0xeeee,
+    };
+    for bits in [1u32, 16] {
+        let mut xb = Crossbar::program_weights_with(
+            &w,
+            w_max,
+            DriftModel::with_rel(0.3),
+            ProgramModel::default(),
+            NonIdealityModel { dac_bits: bits, ..extreme },
+            31,
+        )
+        .unwrap();
+        xb.advance_time(1000.0);
+        let (gp_t, gn_t) = xb.programmed_targets();
+        let (gp, gn) = xb.conductances();
+        for (name, plane) in
+            [("gp_t", gp_t), ("gn_t", gn_t), ("gp", gp), ("gn", gn)]
+        {
+            for (i, &g) in plane.iter().enumerate() {
+                assert!(
+                    g.is_finite() && (0.0..=constants::G_MAX).contains(&g),
+                    "bits={bits} {name}[{i}] = {g}"
+                );
+            }
+        }
+        assert!(xb.injected_stuck_cells() > 0, "rate 0.5 injected nothing");
+        let back = xb.read_weights();
+        assert!(
+            back.data().iter().all(|v| v.is_finite()),
+            "non-finite readout under extreme model"
+        );
+    }
+}
+
+type SweepFingerprint = Vec<(String, u64, u64, u64, u64, u64, u64)>;
+
+fn run_sweep(session: &Session, threads: usize) -> SweepFingerprint {
+    set_threads(threads);
+    let cfg = CalibConfig { max_steps_per_layer: 10, ..CalibConfig::default() };
+    let rows =
+        scenario_sweep(session, 0.2, 8, &cfg, &ScenarioMix::ALL, &[3, 4])
+            .unwrap();
+    set_threads(0);
+    rows.into_iter()
+        .map(|r| {
+            (
+                r.mix.name().to_string(),
+                r.pre_acc.to_bits(),
+                r.post_acc.to_bits(),
+                r.teacher_acc.to_bits(),
+                r.recovery.to_bits(),
+                r.stuck_cells.to_bits(),
+                r.rram_writes_in_field,
+            )
+        })
+        .collect()
+}
+
+/// The `rimc scenarios` sweep is a pure function of its seeds: bitwise
+/// identical across reruns, `--threads 1/2/0`, and arena on/off — and
+/// every mix keeps the zero-field-RRAM-write invariant.
+#[test]
+fn scenario_sweep_bitwise_across_threads_reruns_and_arena() {
+    // serialize against anything else toggling the global arena flag
+    let _guard =
+        arena::TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = Engine::native();
+    let session = eng.session("nano").unwrap();
+
+    let base = run_sweep(&session, 1);
+    assert_eq!(base.len(), ScenarioMix::ALL.len());
+    for (row, mix) in base.iter().zip(ScenarioMix::ALL) {
+        assert_eq!(row.0, mix.name(), "rows out of mix order");
+        assert_eq!(row.6, 0, "{}: field traffic wrote RRAM", row.0);
+        assert!(f64::from_bits(row.4).is_finite(), "{}: recovery", row.0);
+    }
+    // drift-only injects no faults; stuck-at mixes must inject some
+    assert_eq!(f64::from_bits(base[0].5), 0.0, "drift-only stuck cells");
+    assert!(f64::from_bits(base[2].5) > 0.0, "stuck-at mix injected none");
+
+    assert_eq!(run_sweep(&session, 2), base, "threads 2 diverged");
+    assert_eq!(run_sweep(&session, 0), base, "threads 0 diverged");
+    assert_eq!(run_sweep(&session, 1), base, "rerun diverged");
+
+    arena::set_enabled(false);
+    let no_arena = run_sweep(&session, 2);
+    arena::set_enabled(true);
+    assert_eq!(no_arena, base, "arena off diverged");
+}
+
+fn hexu(j: &Json) -> u64 {
+    let s = j.as_str().expect("hex string");
+    u64::from_str_radix(s.trim_start_matches("0x"), 16).expect("hex u64")
+}
+
+fn channel_by_name(name: &str) -> Channel {
+    match name {
+        "lognormal" => Channel::Lognormal,
+        "device_var" => Channel::DeviceVar,
+        "stuck_at" => Channel::StuckAt,
+        "retention" => Channel::Retention,
+        "read_noise" => Channel::ReadNoise,
+        other => panic!("unknown channel `{other}`"),
+    }
+}
+
+/// Replay the committed numpy-generated fixture
+/// (tools/gen_nonideal_golden.py): raw stream u64s, uniforms and DAC
+/// quantization are exact (integer / power-of-two / rational
+/// arithmetic); Box-Muller normals and the exp-based kernels carry
+/// transcendental tolerances.
+#[test]
+fn golden_fixtures_match_numpy_mirror() {
+    let text = std::fs::read_to_string("tests/fixtures/nonideal_golden.json")
+        .expect("committed fixture");
+    let doc = Json::parse(&text).expect("fixture parses");
+    let g_max = doc.req("g_max").as_f64().unwrap();
+    let model_seed = doc.req("model_seed").as_f64().unwrap() as u64;
+    let array_seed = doc.req("array_seed").as_f64().unwrap() as u64;
+    let m = NonIdealityModel::ideal().with_seed(model_seed);
+    assert_eq!(
+        m.for_array(array_seed).seed,
+        hexu(doc.req("for_array_seed")),
+        "for_array seed derivation"
+    );
+
+    let streams = doc.req("streams").as_arr().unwrap();
+    assert_eq!(streams.len(), 20);
+    for e in streams {
+        let ch = channel_by_name(e.req("channel").as_str().unwrap());
+        let cell = e.req("cell").as_usize().unwrap() as u64;
+        let mut rng = m.stream(ch, cell);
+        for (k, word) in e.req("u64s").as_arr().unwrap().iter().enumerate() {
+            assert_eq!(
+                rng.next_u64(),
+                hexu(word),
+                "stream {ch:?}/{cell} word {k}"
+            );
+        }
+    }
+
+    let epoch_streams = doc.req("epoch_streams").as_arr().unwrap();
+    assert_eq!(epoch_streams.len(), 6);
+    for e in epoch_streams {
+        let cell = e.req("cell").as_usize().unwrap() as u64;
+        let epoch = e.req("epoch").as_usize().unwrap() as u64;
+        let mut rng = m.epoch_stream(Channel::ReadNoise, cell, epoch);
+        for (k, word) in e.req("u64s").as_arr().unwrap().iter().enumerate() {
+            assert_eq!(
+                rng.next_u64(),
+                hexu(word),
+                "epoch stream {cell}@{epoch} word {k}"
+            );
+        }
+    }
+
+    let normals = doc.req("normals").as_arr().unwrap();
+    assert_eq!(normals.len(), 8);
+    for e in normals {
+        let ch = channel_by_name(e.req("channel").as_str().unwrap());
+        let cell = e.req("cell").as_usize().unwrap() as u64;
+        let want = e.req("z").as_f64().unwrap();
+        let z = m.stream(ch, cell).normal();
+        assert!((z - want).abs() < 1e-12, "normal {ch:?}/{cell}: {z} vs {want}");
+    }
+
+    let uniforms = doc.req("uniforms").as_arr().unwrap();
+    assert_eq!(uniforms.len(), 8);
+    for e in uniforms {
+        let ch = channel_by_name(e.req("channel").as_str().unwrap());
+        let cell = e.req("cell").as_usize().unwrap() as u64;
+        let want = e.req("u").as_f64().unwrap();
+        let u = m.stream(ch, cell).uniform();
+        assert_eq!(
+            u.to_bits(),
+            want.to_bits(),
+            "uniform {ch:?}/{cell}: {u} vs {want}"
+        );
+    }
+
+    let quantize = doc.req("quantize").as_arr().unwrap();
+    assert_eq!(quantize.len(), 35);
+    for e in quantize {
+        let g = e.req("g").as_f64().unwrap();
+        let bits = e.req("bits").as_usize().unwrap() as u32;
+        let want = e.req("out").as_f64().unwrap();
+        let out = dac_quantize(g, g_max, bits);
+        assert_eq!(
+            out.to_bits(),
+            want.to_bits(),
+            "quantize g={g} bits={bits}: {out} vs {want}"
+        );
+    }
+
+    let lognormal = doc.req("lognormal").as_arr().unwrap();
+    assert_eq!(lognormal.len(), 70);
+    for e in lognormal {
+        let (g, sigma, z, want) = (
+            e.req("g").as_f64().unwrap(),
+            e.req("sigma").as_f64().unwrap(),
+            e.req("z").as_f64().unwrap(),
+            e.req("out").as_f64().unwrap(),
+        );
+        let out = lognormal_apply(g, g_max, sigma, z);
+        assert!(
+            (out - want).abs() <= 1e-9,
+            "lognormal g={g} sigma={sigma} z={z}: {out} vs {want}"
+        );
+    }
+
+    let device_var = doc.req("device_var").as_arr().unwrap();
+    assert_eq!(device_var.len(), 70);
+    for e in device_var {
+        let (g, sigma, z, want) = (
+            e.req("g").as_f64().unwrap(),
+            e.req("sigma").as_f64().unwrap(),
+            e.req("z").as_f64().unwrap(),
+            e.req("out").as_f64().unwrap(),
+        );
+        let out = device_var_apply(g, g_max, sigma, z);
+        assert!(
+            (out - want).abs() <= 1e-9,
+            "device_var g={g} sigma={sigma} z={z}: {out} vs {want}"
+        );
+    }
+
+    let retention = doc.req("retention").as_arr().unwrap();
+    assert_eq!(retention.len(), 54);
+    for e in retention {
+        let (g, rate, tf, u, want) = (
+            e.req("g").as_f64().unwrap(),
+            e.req("rate").as_f64().unwrap(),
+            e.req("tf").as_f64().unwrap(),
+            e.req("u").as_f64().unwrap(),
+            e.req("out").as_f64().unwrap(),
+        );
+        let out = retention_apply(g, rate, tf, u);
+        assert!(
+            (out - want).abs() <= 1e-12,
+            "retention g={g} rate={rate} tf={tf} u={u}: {out} vs {want}"
+        );
+    }
+}
+
+/// The serving invariant under the full fault stack: a fleet deployed
+/// with `ScenarioMix::FullStack` degrades heterogeneously (per-device
+/// stuck-cell populations differ and are non-empty), field traffic
+/// still issues zero RRAM write attempts, and the threaded,
+/// micro-batched replay stays bitwise equal to serial per-device
+/// execution — predictions, clocks, counters and fault populations.
+#[test]
+fn heterogeneous_fleet_serves_bitwise_with_zero_field_writes() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let n_devices = 3;
+    let spec = TraceSpec {
+        n_requests: 48,
+        n_devices,
+        max_infer_samples: 5,
+        advance_every: 7,
+        advance_hours: 25.0,
+        calibrate_every: 13,
+        calib_samples: 6,
+        calib_cfg: CalibConfig {
+            max_steps_per_layer: 15,
+            ..CalibConfig::default()
+        },
+        seed: 0xfa17,
+    };
+    let trace = synth_trace(&spec, session.dataset.n_eval());
+
+    let cfg = ServeConfig {
+        n_devices,
+        workers: 3,
+        scenario: ScenarioMix::FullStack,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(session.clone(), &cfg).unwrap();
+    let (report, responses) = replay_collect(&server, &trace).unwrap();
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.rram_writes_in_field, 0, "field traffic wrote RRAM");
+    assert!(report.sram_writes > 0, "calibrations must write SRAM");
+
+    // serial reference under the same scenario and fleet seeds
+    let fleet = Fleet::deploy_with(
+        session.clone(),
+        n_devices,
+        cfg.drift_rel,
+        ScenarioMix::FullStack,
+        cfg.seed,
+    )
+    .unwrap();
+    let mut serial: Vec<Option<Vec<usize>>> = Vec::with_capacity(trace.len());
+    for (d, kind) in &trace {
+        let mut dev = fleet.lock(*d).unwrap();
+        match kind {
+            RequestKind::Infer { samples } => {
+                let (x, labels) =
+                    gather_eval(&session.dataset, samples).unwrap();
+                serial.push(Some(dev.infer(&session, &x, &labels).unwrap()));
+            }
+            RequestKind::Calibrate { n_samples, cfg } => {
+                dev.calibrate(&session, *n_samples, cfg).unwrap();
+                serial.push(None);
+            }
+            RequestKind::Advance { hours } => {
+                dev.advance(*hours);
+                serial.push(None);
+            }
+        }
+    }
+
+    for (i, (resp, reference)) in responses.iter().zip(&serial).enumerate() {
+        match (resp, reference) {
+            (Response::Inference { predictions, .. }, Some(want)) => {
+                assert_eq!(predictions, want, "request {i} diverged");
+            }
+            (Response::Inference { .. }, None) => {
+                panic!("request {i}: class mismatch (served inference)")
+            }
+            (Response::Failed { error, .. }, _) => {
+                panic!("request {i} failed: {error}")
+            }
+            _ => {}
+        }
+    }
+
+    let mut stuck = Vec::with_capacity(n_devices);
+    for d in 0..n_devices {
+        let served = server.fleet().lock(d).unwrap();
+        let want = fleet.lock(d).unwrap();
+        let (s, w) = (served.stats(), want.stats());
+        assert_eq!(s.hours, w.hours, "device {d} drift clock");
+        assert_eq!(s.inferred, w.inferred, "device {d} samples");
+        assert_eq!(s.correct, w.correct, "device {d} accuracy counter");
+        assert_eq!(s.calibrations, w.calibrations, "device {d} rounds");
+        assert_eq!(s.sram_writes, w.sram_writes, "device {d} SRAM wear");
+        assert_eq!(s.rram_reads, w.rram_reads, "device {d} read wear");
+        assert_eq!(s.rram_writes_in_field, 0, "device {d} wrote RRAM");
+        assert_eq!(
+            served.injected_stuck_cells(),
+            want.injected_stuck_cells(),
+            "device {d} fault population diverged"
+        );
+        stuck.push(want.injected_stuck_cells());
+    }
+    assert!(
+        stuck.iter().all(|&s| s > 0),
+        "full-stack fleet has fault-free devices: {stuck:?}"
+    );
+    assert!(
+        stuck.windows(2).any(|w| w[0] != w[1]),
+        "fleet degraded homogeneously: {stuck:?}"
+    );
+}

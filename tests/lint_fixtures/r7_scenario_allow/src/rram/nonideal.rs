@@ -1,0 +1,12 @@
+//! Twin of `r7_scenario_entropy`: the same wall-clock read, suppressed
+//! by a justified R7 allow comment. Must lint clean — the escape hatch
+//! works inside R4-hot files without loosening any other rule.
+
+pub fn entropy_stream_seed(cell: u64) -> u64 {
+    // lint:allow(R7) -- fixture: audited one-time boot entropy outside
+    // any replayed simulation path
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .expect("clock before epoch");
+    (t.as_nanos() as u64) ^ cell.wrapping_mul(0x9E3779B97F4A7C15)
+}

@@ -1,0 +1,11 @@
+//! R7 fixture: a scenario engine that seeds its fault streams from
+//! wall-clock entropy. Fault injection must replay bit-for-bit from the
+//! model seed via util::rng; `SystemTime` makes every run different, so
+//! the linter must flag it even in the (R4-hot) scenario-engine file.
+
+pub fn entropy_stream_seed(cell: u64) -> u64 {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .expect("clock before epoch");
+    (t.as_nanos() as u64) ^ cell.wrapping_mul(0x9E3779B97F4A7C15)
+}

@@ -1,0 +1,312 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/fixtures/nonideal_golden.json.
+
+Independent Python/numpy mirror of the scenario engine's seeded streams
+(util::rng xoshiro256++ under the nonideal counter-mode derivation) and
+of its pure kernels (DAC quantization, lognormal programming variation,
+device-to-device variation, retention decay). The Rust golden test
+(tests/nonideality.rs) replays every entry:
+
+  * raw stream u64s are compared EXACTLY (emitted as hex strings —
+    JSON numbers are f64 and lose bits above 2^53);
+  * uniform draws are exact by construction ((n >> 11) * 2^-53 is all
+    power-of-two arithmetic) and compared bitwise;
+  * Box-Muller normals and kernel outputs go through libm
+    transcendentals, so they carry tolerances (1e-12 for z, 1e-9 for
+    kernel outputs); DAC quantization is transcendental-free and is
+    compared bitwise.
+
+Regenerate with: python3 tools/gen_nonideal_golden.py
+The output is committed; CI never runs this script.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+EPOCH_MIX = 0xD1B54A32D192ED03
+
+TAGS = {
+    "lognormal": 0x1F8B08A1C3D2E5F4,
+    "device_var": 0x2C9D17B3A581F06E,
+    "stuck_at": 0x3B7E44C59D128A0F,
+    "retention": 0x4D3192E76BF055C8,
+    "read_noise": 0x5EA803F9471CB392,
+}
+
+G_MAX = 100.0
+
+
+def splitmix64_next(x: int) -> tuple[int, int]:
+    x = (x + GOLDEN) & MASK
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return x, z ^ (z >> 31)
+
+
+def mix64(x: int) -> int:
+    """One SplitMix64 finalizer step (NonIdealityModel::for_array)."""
+    _, z = splitmix64_next(x)
+    return z
+
+
+class Rng:
+    """util::rng::Rng — xoshiro256++ with SplitMix64 seeding."""
+
+    def __init__(self, seed: int) -> None:
+        x = seed & MASK
+        s = []
+        for _ in range(4):
+            x, z = splitmix64_next(x)
+            s.append(z)
+        self.s = s
+        self.spare = None
+
+    @staticmethod
+    def _rotl(v: int, k: int) -> int:
+        return ((v << k) | (v >> (64 - k))) & MASK
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (self._rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def uniform(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self) -> float:
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        u1 = 1.0 - self.uniform()
+        u2 = self.uniform()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.spare = r * math.sin(theta)
+        return r * math.cos(theta)
+
+
+def stream_seed(model_seed: int, tag: int, cell: int) -> int:
+    return model_seed ^ tag ^ (((cell + 1) * GOLDEN) & MASK)
+
+
+def epoch_stream_seed(model_seed: int, tag: int, cell: int, epoch: int) -> int:
+    return stream_seed(model_seed, tag, cell) ^ (
+        ((epoch + 1) * EPOCH_MIX) & MASK
+    )
+
+
+# --- kernels (scalar mirrors of rram::nonideal) -----------------------
+
+
+def round_half_away(x: float) -> float:
+    """Rust f64::round for non-negative x (ties away from zero)."""
+    f = math.floor(x)
+    return f + 1.0 if x - f >= 0.5 else f
+
+
+def dac_quantize(g: float, g_max: float, bits: int) -> float:
+    if bits == 0:
+        return g
+    steps = 2.0 ** min(bits, 512) - 1.0
+    q = round_half_away(g / g_max * steps) / steps * g_max
+    return min(max(q, 0.0), g_max)
+
+
+def lognormal_apply(g: float, g_max: float, sigma: float, z: float) -> float:
+    if g <= 0.0:
+        return 0.0
+    return min(max(g * math.exp(sigma * z), 0.0), g_max)
+
+
+def device_var_apply(g: float, g_max: float, sigma: float, z: float) -> float:
+    if g <= 0.0:
+        return 0.0
+    return min(max(g * (1.0 + sigma * z), 0.0), g_max)
+
+
+def retention_apply(g: float, rate: float, tf: float, u: float) -> float:
+    return g * max(1.0 - rate * tf * u, 0.0)
+
+
+def numpy_crosscheck(entries: dict) -> None:
+    """Recompute the kernel tables vectorized in numpy; any drift
+    between the scalar mirror and numpy fails generation."""
+    ln = entries["lognormal"]
+    g = np.array([e["g"] for e in ln])
+    z = np.array([e["z"] for e in ln])
+    sig = np.array([e["sigma"] for e in ln])
+    want = np.where(
+        g <= 0.0, 0.0, np.clip(g * np.exp(sig * z), 0.0, G_MAX)
+    )
+    got = np.array([e["out"] for e in ln])
+    assert np.allclose(got, want, rtol=0, atol=1e-12), "lognormal mismatch"
+
+    dv = entries["device_var"]
+    g = np.array([e["g"] for e in dv])
+    z = np.array([e["z"] for e in dv])
+    sig = np.array([e["sigma"] for e in dv])
+    want = np.where(
+        g <= 0.0, 0.0, np.clip(g * (1.0 + sig * z), 0.0, G_MAX)
+    )
+    got = np.array([e["out"] for e in dv])
+    assert np.allclose(got, want, rtol=0, atol=1e-12), "device_var mismatch"
+
+    rt = entries["retention"]
+    g = np.array([e["g"] for e in rt])
+    rate = np.array([e["rate"] for e in rt])
+    tf = np.array([e["tf"] for e in rt])
+    u = np.array([e["u"] for e in rt])
+    want = g * np.maximum(1.0 - rate * tf * u, 0.0)
+    got = np.array([e["out"] for e in rt])
+    assert np.allclose(got, want, rtol=0, atol=1e-12), "retention mismatch"
+
+
+def main() -> None:
+    model_seed = 0xABCD_1234
+    array_seed = 7
+
+    doc: dict = {
+        "g_max": G_MAX,
+        "model_seed": model_seed,
+        "array_seed": array_seed,
+        "for_array_seed": hex(model_seed ^ mix64(array_seed)),
+    }
+
+    # raw stream words per (channel, cell): exact u64 comparison
+    streams = []
+    for name, tag in sorted(TAGS.items()):
+        for cell in [0, 1, 5, 255]:
+            rng = Rng(stream_seed(model_seed, tag, cell))
+            streams.append(
+                {
+                    "channel": name,
+                    "cell": cell,
+                    "u64s": [hex(rng.next_u64()) for _ in range(3)],
+                }
+            )
+    doc["streams"] = streams
+
+    # epoch-keyed read-noise streams
+    epoch_streams = []
+    for cell in [0, 3]:
+        for epoch in [1, 2, 9]:
+            rng = Rng(
+                epoch_stream_seed(
+                    model_seed, TAGS["read_noise"], cell, epoch
+                )
+            )
+            epoch_streams.append(
+                {
+                    "cell": cell,
+                    "epoch": epoch,
+                    "u64s": [hex(rng.next_u64()) for _ in range(2)],
+                }
+            )
+    doc["epoch_streams"] = epoch_streams
+
+    # first Box-Muller normal per (channel, cell): 1e-12 tolerance
+    normals = []
+    for name in ["lognormal", "device_var"]:
+        for cell in [0, 1, 5, 255]:
+            rng = Rng(stream_seed(model_seed, TAGS[name], cell))
+            normals.append({"channel": name, "cell": cell, "z": rng.normal()})
+    doc["normals"] = normals
+
+    # first uniform per (channel, cell): exact (power-of-two arithmetic)
+    uniforms = []
+    for name in ["stuck_at", "retention"]:
+        for cell in [0, 1, 5, 255]:
+            rng = Rng(stream_seed(model_seed, TAGS[name], cell))
+            uniforms.append(
+                {"channel": name, "cell": cell, "u": rng.uniform()}
+            )
+    doc["uniforms"] = uniforms
+
+    # kernel tables — inputs chosen to cover 0, mid-range, g_max, and
+    # the clamp corners
+    gs = [0.0, 0.015625, 12.75, 37.5, 50.0, 99.0, G_MAX]
+    zs = [-2.5, -1.0, 0.0, 0.5, 3.0]
+    doc["quantize"] = [
+        {"g": g, "bits": bits, "out": dac_quantize(g, G_MAX, bits)}
+        for g in gs
+        for bits in [0, 1, 4, 8, 16]
+    ]
+    doc["lognormal"] = [
+        {
+            "g": g,
+            "sigma": sigma,
+            "z": z,
+            "out": lognormal_apply(g, G_MAX, sigma, z),
+        }
+        for g in gs
+        for sigma in [0.05, 0.5]
+        for z in zs
+    ]
+    doc["device_var"] = [
+        {
+            "g": g,
+            "sigma": sigma,
+            "z": z,
+            "out": device_var_apply(g, G_MAX, sigma, z),
+        }
+        for g in gs
+        for sigma in [0.01, 0.8]
+        for z in zs
+    ]
+    doc["retention"] = [
+        {
+            "g": g,
+            "rate": rate,
+            "tf": tf,
+            "u": u,
+            "out": retention_apply(g, rate, tf, u),
+        }
+        for g in [0.0, 37.5, G_MAX]
+        for rate in [0.05, 1.0]
+        for tf in [0.0, 0.3, 1.0]
+        for u in [0.0, 0.5, 0.999]
+    ]
+
+    numpy_crosscheck(doc)
+
+    out = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust",
+        "tests",
+        "fixtures",
+        "nonideal_golden.json",
+    )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    n = (
+        len(doc["streams"])
+        + len(doc["epoch_streams"])
+        + len(doc["normals"])
+        + len(doc["uniforms"])
+        + len(doc["quantize"])
+        + len(doc["lognormal"])
+        + len(doc["device_var"])
+        + len(doc["retention"])
+    )
+    print(f"wrote {out} ({n} golden entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -100,6 +100,22 @@ class FixtureTests(unittest.TestCase):
     def test_r7_clock(self):
         self.assert_only_rule("r7_clock", "R7")
 
+    def test_r7_scenario_entropy(self):
+        # wall-clock fault seeding in the scenario engine: R7 fires (and
+        # nothing else — the file is R4-hot, so the fixture also proves
+        # the engine path stays allocation-token-free)
+        self.assert_only_rule("r7_scenario_entropy", "R7")
+
+    def test_r7_scenario_allow_suppresses(self):
+        proc = run_lint(FIXTURES / "r7_scenario_allow")
+        self.assertEqual(
+            proc.returncode,
+            0,
+            f"r7_scenario_allow: justified lint:allow(R7) should lint "
+            f"clean\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}",
+        )
+        self.assertIn("clean", proc.stdout)
+
     def test_allow_with_reason_suppresses(self):
         proc = run_lint(FIXTURES / "allow_ok")
         self.assertEqual(
