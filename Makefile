@@ -37,7 +37,8 @@ lint:
 # Dynamic UB/data-race backstop for the R5 surface: nightly Miri over
 # the unsafe + concurrency core's unit tests (arena, thread pool,
 # submit queue). Needs `rustup +nightly component add miri`; CI runs
-# this on a schedule, best-effort.
+# this on a schedule and a red run is a required failure, not
+# best-effort noise.
 miri:
 	cd $(CARGO_DIR) && cargo +nightly miri test --lib -- \
 	  util::arena util::threads serve::queue
@@ -59,10 +60,18 @@ bench-json:
 	cd $(CARGO_DIR) && cargo run --release --bin rimc -- scenarios --smoke --threads 1
 	cd $(CARGO_DIR) && mv BENCH_scenarios.json BENCH_scenarios_serial.json
 	cd $(CARGO_DIR) && cargo run --release --bin rimc -- scenarios --smoke --threads 2
+	cd $(CARGO_DIR) && cargo run --release --bin rimc -- scenarios --grid --smoke --threads 2
+	cd $(CARGO_DIR) && cargo run --release --bin rimc -- serve \
+	  --scenario full-stack --policy adaptive --smoke --threads 1
+	cd $(CARGO_DIR) && mv BENCH_serve_policy.json BENCH_serve_policy_serial.json
+	cd $(CARGO_DIR) && cargo run --release --bin rimc -- serve \
+	  --scenario full-stack --policy adaptive --smoke --threads 2
 	cd $(CARGO_DIR) && python3 ../tools/bench_check.py \
 	  BENCH_runtime_hotpath.json BENCH_runtime_hotpath_serial.json \
 	  BENCH_serving_throughput.json BENCH_scenarios.json \
-	  BENCH_scenarios_serial.json --baselines ../bench_baselines
+	  BENCH_scenarios_serial.json BENCH_scenarios_grid.json \
+	  BENCH_serve_policy.json BENCH_serve_policy_serial.json \
+	  --baselines ../bench_baselines
 
 # Promote the last bench-json run's results to the committed baselines
 # (never edit those by hand — see bench_baselines/README.md).
@@ -72,6 +81,9 @@ bench-baseline:
 	cp $(CARGO_DIR)/BENCH_serving_throughput.json bench_baselines/serving_throughput.json
 	cp $(CARGO_DIR)/BENCH_scenarios.json bench_baselines/scenarios.json
 	cp $(CARGO_DIR)/BENCH_scenarios_serial.json bench_baselines/scenarios_serial.json
+	cp $(CARGO_DIR)/BENCH_scenarios_grid.json bench_baselines/scenarios_grid.json
+	cp $(CARGO_DIR)/BENCH_serve_policy.json bench_baselines/serve_policy.json
+	cp $(CARGO_DIR)/BENCH_serve_policy_serial.json bench_baselines/serve_policy_serial.json
 
 # AOT HLO artifacts for the optional PJRT backend (`--features pjrt`).
 # Requires python3 + jax; errors out with instructions when absent.

@@ -352,6 +352,139 @@ pub fn scenario_sweep(
 }
 
 // ---------------------------------------------------------------------
+// Scenario grid — recovery over (mix, rank, samples)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ScenarioGridRow {
+    pub mix: ScenarioMix,
+    pub rank: usize,
+    pub n_samples: usize,
+    /// accuracy after drift + faults, before calibration (seed mean)
+    pub pre_acc: f64,
+    /// accuracy after one feature-DoRA calibration round (seed mean)
+    pub post_acc: f64,
+    pub teacher_acc: f64,
+    /// fraction of the drift-induced accuracy gap closed by calibration
+    pub recovery: f64,
+    /// scenario-engine stuck-at cells per student (seed mean)
+    pub stuck_cells: f64,
+    /// RRAM write attempts issued after deployment, summed over seeds —
+    /// must be 0 for every cell of the grid
+    pub rram_writes_in_field: u64,
+}
+
+/// The `rimc scenarios --grid` sweep: calibration recovery over the
+/// full (mix, rank, samples) grid, seed-averaged per cell — which
+/// fault channels can a bigger adapter or more calibration data still
+/// buy back, and which (the stuck-at floor) can zero-RRAM-write
+/// calibration fundamentally not recover? Cells are independent and
+/// fan out over the thread pool with rank-proportional LPT weights,
+/// reducing in grid order (mix-major, then rank, then size, then
+/// seed) — bitwise identical across `--threads`.
+pub fn scenario_grid(
+    session: &Session,
+    rel_drift: f64,
+    calib_cfg: &CalibConfig,
+    mixes: &[ScenarioMix],
+    ranks: &[usize],
+    sizes: &[usize],
+    seeds: &[u64],
+) -> Result<Vec<ScenarioGridRow>> {
+    if mixes.is_empty() || ranks.is_empty() || sizes.is_empty()
+        || seeds.is_empty()
+    {
+        bail!("scenario grid needs at least one mix, rank, size and seed");
+    }
+    for &rank in ranks {
+        if !session.spec.ranks.contains(&rank) {
+            bail!(
+                "rank {rank} not available for {} ({:?})",
+                session.spec.name,
+                session.spec.ranks
+            );
+        }
+    }
+    let ev = session.evaluator();
+    let teacher_acc = ev.teacher(&session.teacher, &session.dataset)?;
+    // one calibration subset per requested size, shared across cells
+    let subsets = sizes
+        .iter()
+        .map(|&n| session.dataset.calib_subset(n))
+        .collect::<Result<Vec<_>>>()?;
+    // grid order: mix-major, then rank, then size, then seed — the
+    // fold below relies on this chunking
+    let cells: Vec<(ScenarioMix, usize, usize, u64)> = mixes
+        .iter()
+        .flat_map(|&mix| {
+            ranks.iter().flat_map(move |&rank| {
+                sizes.iter().enumerate().flat_map(move |(si, _)| {
+                    seeds.iter().map(move |&seed| (mix, rank, si, seed))
+                })
+            })
+        })
+        .collect();
+    let pool = ThreadPool::global();
+    // like fig6: per-cell cost is crossbar work plus rank-proportional
+    // adapter chains, so high-rank cells claim first (LPT)
+    let weights: Vec<u64> = cells
+        .iter()
+        .map(|&(_, rank, _, _)| (session.spec.width + rank) as u64)
+        .collect();
+    let per_cell =
+        pool.try_map_weighted(&cells, &weights, |&(mix, rank, si, seed)| {
+            let model = mix.model(seed);
+            let mut student =
+                session.drifted_student_with(rel_drift, model, seed)?;
+            let pre = ev.student(&mut student, &session.dataset)?;
+            let stuck = student.injected_stuck_cells();
+            let deploy_writes = student.total_counters().write_attempts;
+            let cfg = CalibConfig { rank, ..calib_cfg.clone() };
+            let calibrator = session.feature_calibrator(cfg)?;
+            let (x, y) = &subsets[si];
+            let outcome =
+                calibrator.calibrate(&mut student, &session.teacher, x, y)?;
+            let post = ev.calibrated(
+                &mut student,
+                &outcome.adapters,
+                &session.dataset,
+            )?;
+            let field_writes =
+                student.total_counters().write_attempts - deploy_writes;
+            Ok::<_, crate::anyhow::Error>((pre, post, stuck, field_writes))
+        })?;
+    let mut rows = Vec::new();
+    let mut off = 0;
+    for &mix in mixes {
+        for &rank in ranks {
+            for &n_samples in sizes {
+                let chunk = &per_cell[off..off + seeds.len()];
+                off += seeds.len();
+                let pre_acc = stats::mean(chunk.iter().map(|c| c.0));
+                let post_acc = stats::mean(chunk.iter().map(|c| c.1));
+                let gap = teacher_acc - pre_acc;
+                rows.push(ScenarioGridRow {
+                    mix,
+                    rank,
+                    n_samples,
+                    pre_acc,
+                    post_acc,
+                    teacher_acc,
+                    recovery: if gap > 1e-9 {
+                        (post_acc - pre_acc) / gap
+                    } else {
+                        0.0
+                    },
+                    stuck_cells: stats::mean(chunk.iter().map(|c| c.2 as f64)),
+                    rram_writes_in_field: chunk.iter().map(|c| c.3).sum(),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
 // Table I — cost comparison: backprop vs this work
 // ---------------------------------------------------------------------
 

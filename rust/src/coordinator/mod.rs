@@ -16,7 +16,10 @@ pub use presets::{
 };
 pub use experiments::{
     fig2_drift_sweep, fig4_dataset_size_sweep, fig5_rank_sweep,
-    fig6_lora_vs_dora, scenario_sweep, table1_rows, Fig2Row, Fig4Row, Fig5Row,
-    Fig6Row, ScenarioRow, Table1Row,
+    fig6_lora_vs_dora, scenario_grid, scenario_sweep, table1_rows, Fig2Row,
+    Fig4Row, Fig5Row, Fig6Row, ScenarioGridRow, ScenarioRow, Table1Row,
 };
-pub use scheduler::{RecalibrationScheduler, SchedulerEvent, SchedulerPolicy};
+pub use scheduler::{
+    AdaptiveConfig, PolicyDecision, PolicyState, RecalibrationScheduler,
+    SchedulerEvent, SchedulerPolicy, HEALTH_WINDOW,
+};

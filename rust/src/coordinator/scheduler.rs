@@ -10,6 +10,7 @@ use super::engine::Session;
 use crate::calib::CalibConfig;
 use crate::device::DriftModel;
 use crate::model::StudentModel;
+use crate::rram::ScenarioMix;
 use crate::util::threads::ThreadPool;
 
 /// When to recalibrate.
@@ -20,6 +21,230 @@ pub enum SchedulerPolicy {
     /// whenever measured accuracy drops below the floor (needs a probe
     /// set; we use the eval split as a stand-in for a field probe)
     AccuracyFloor { floor: f64 },
+    /// fault-reactive: scenario-aware cadence, bounded retry with
+    /// deterministic exponential backoff in simulated epochs, a hard
+    /// per-device maintenance budget, and quarantine for devices whose
+    /// faults zero-write calibration cannot recover (see
+    /// [`AdaptiveConfig`] / DESIGN.md §10)
+    Adaptive(AdaptiveConfig),
+}
+
+/// Recovery scores a device remembers (`PolicyState` ring): the last K
+/// calibration rounds' measured accuracies, used for the stability
+/// relaxation and reported by the serving health table.
+pub const HEALTH_WINDOW: usize = 4;
+
+/// Thresholds and cadence knobs for the adaptive (fault-reactive)
+/// policy, shared between the coordinator scheduler and the serving
+/// fleet's health layer (`serve::health`). Every duration is counted in
+/// **simulated epochs** — scheduler checkpoints, or serving calibrate
+/// opportunities — never wall-clock time, so policy timelines replay
+/// bit-for-bit across thread counts and reruns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// recalibrate every this many epochs while healthy
+    pub base_interval_epochs: u64,
+    /// the deployed scenario decays retention: halve the interval
+    /// (min 1) — state that erases faster is maintained tighter
+    pub retention_stress: bool,
+    /// a calibration round must lift measured accuracy to this
+    /// absolute floor to count as recovered; below it the round failed
+    pub recovery_floor: f64,
+    /// consecutive failed rounds tolerated before quarantine
+    pub max_retries: u32,
+    /// after the f-th consecutive failure, wait `base << (f-1)` epochs
+    /// before retrying (deterministic exponential backoff)
+    pub backoff_base_epochs: u64,
+    /// cap on the exponential backoff
+    pub max_backoff_epochs: u64,
+    /// hard per-device maintenance budget: calibration rounds (retries
+    /// included) after which a device gets no further maintenance, so
+    /// one sick device cannot starve the fleet's calibration bandwidth
+    pub max_calibrations: u64,
+    /// stuck-cell fraction above which a device is fundamentally
+    /// unrecoverable by zero-RRAM-write calibration (the adapters can
+    /// steer around drift, not around cells pinned at 0/g_max) and
+    /// quarantines at the deployment self-test
+    pub stuck_quarantine_fraction: f64,
+    /// when the last `HEALTH_WINDOW` recoveries all reached this, the
+    /// device is stable: relax the cadence to twice the interval
+    pub stable_recovery: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            base_interval_epochs: 1,
+            retention_stress: false,
+            recovery_floor: 0.55,
+            max_retries: 2,
+            backoff_base_epochs: 2,
+            max_backoff_epochs: 8,
+            max_calibrations: 64,
+            stuck_quarantine_fraction: 0.01,
+            stable_recovery: 0.75,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Scenario-aware defaults: a mix with retention decay tightens the
+    /// recalibration cadence (the conductance state it erases is
+    /// exactly what the adapters compensate).
+    pub fn for_mix(mix: ScenarioMix) -> AdaptiveConfig {
+        AdaptiveConfig {
+            retention_stress: mix.model(0).retention_rate > 0.0,
+            ..AdaptiveConfig::default()
+        }
+    }
+}
+
+/// What the adaptive policy told a device to do at one epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyDecision {
+    /// run a calibration round; `attempt` 0 = scheduled, k > 0 = k-th
+    /// consecutive retry after failed rounds
+    Calibrate { attempt: u32 },
+    /// cadence not due (healthy device between intervals)
+    Defer,
+    /// in exponential backoff after a failed round; the next attempt
+    /// is allowed at `resume_epoch`
+    Backoff { resume_epoch: u64 },
+    /// per-device maintenance budget exhausted — no more rounds
+    BudgetExhausted,
+    /// device is out of service
+    Quarantined,
+}
+
+/// Per-device adaptive-policy state machine: maintenance epoch counter,
+/// retry/backoff bookkeeping, calibration budget and the last-K
+/// recovery ring. Fixed-size (allocation-free) and driven only by
+/// epoch counts and measured scores — never clocks or unseeded entropy
+/// — so identical inputs replay identical decisions.
+#[derive(Debug, Clone)]
+pub struct PolicyState {
+    /// maintenance epochs observed (scheduler checkpoints / serving
+    /// calibrate opportunities)
+    pub epoch: u64,
+    pub last_calib_epoch: u64,
+    pub consecutive_failures: u32,
+    /// earliest epoch a retry may run while backing off
+    pub next_retry_epoch: u64,
+    /// calibration rounds executed (budget subject)
+    pub calibrations: u64,
+    pub quarantined: bool,
+    ring: [f64; HEALTH_WINDOW],
+    ring_len: usize,
+    ring_pos: usize,
+}
+
+impl Default for PolicyState {
+    fn default() -> Self {
+        PolicyState::new()
+    }
+}
+
+impl PolicyState {
+    pub fn new() -> PolicyState {
+        PolicyState {
+            epoch: 0,
+            last_calib_epoch: 0,
+            consecutive_failures: 0,
+            next_retry_epoch: 0,
+            calibrations: 0,
+            quarantined: false,
+            ring: [0.0; HEALTH_WINDOW],
+            ring_len: 0,
+            ring_pos: 0,
+        }
+    }
+
+    /// The last-K recovery scores, oldest first.
+    pub fn window(&self) -> impl Iterator<Item = f64> + '_ {
+        (0..self.ring_len).map(move |i| {
+            let idx = (self.ring_pos + HEALTH_WINDOW - self.ring_len + i)
+                % HEALTH_WINDOW;
+            self.ring[idx]
+        })
+    }
+
+    fn is_stable(&self, cfg: &AdaptiveConfig) -> bool {
+        self.ring_len == HEALTH_WINDOW
+            && self.window().all(|r| r >= cfg.stable_recovery)
+    }
+
+    /// Cadence after the scenario tightening and stability relaxation.
+    pub fn effective_interval(&self, cfg: &AdaptiveConfig) -> u64 {
+        let mut interval = cfg.base_interval_epochs.max(1);
+        if cfg.retention_stress {
+            interval = (interval / 2).max(1);
+        }
+        if self.is_stable(cfg) {
+            interval = interval.saturating_mul(2);
+        }
+        interval
+    }
+
+    /// Advance one maintenance epoch and decide what to do in it.
+    pub fn decide(&mut self, cfg: &AdaptiveConfig) -> PolicyDecision {
+        self.epoch += 1;
+        if self.quarantined {
+            return PolicyDecision::Quarantined;
+        }
+        if self.calibrations >= cfg.max_calibrations {
+            return PolicyDecision::BudgetExhausted;
+        }
+        if self.consecutive_failures > 0 {
+            if self.epoch < self.next_retry_epoch {
+                return PolicyDecision::Backoff {
+                    resume_epoch: self.next_retry_epoch,
+                };
+            }
+            return PolicyDecision::Calibrate {
+                attempt: self.consecutive_failures,
+            };
+        }
+        if self.epoch - self.last_calib_epoch < self.effective_interval(cfg) {
+            return PolicyDecision::Defer;
+        }
+        PolicyDecision::Calibrate { attempt: 0 }
+    }
+
+    /// Record a completed round's recovery `score` (measured accuracy).
+    /// A score under the floor fails the round: consecutive failures
+    /// arm the exponential backoff, and crossing `max_retries` returns
+    /// `true` — the device is now quarantined and the caller must
+    /// rotate it out of service.
+    pub fn record_outcome(&mut self, cfg: &AdaptiveConfig, score: f64) -> bool {
+        self.calibrations += 1;
+        self.last_calib_epoch = self.epoch;
+        self.ring[self.ring_pos] = score;
+        self.ring_pos = (self.ring_pos + 1) % HEALTH_WINDOW;
+        self.ring_len = (self.ring_len + 1).min(HEALTH_WINDOW);
+        if score >= cfg.recovery_floor {
+            self.consecutive_failures = 0;
+            return false;
+        }
+        self.consecutive_failures += 1;
+        if self.consecutive_failures > cfg.max_retries {
+            self.quarantined = true;
+            return true;
+        }
+        let backoff = cfg
+            .backoff_base_epochs
+            .max(1)
+            .checked_shl(self.consecutive_failures - 1)
+            .unwrap_or(u64::MAX)
+            .min(cfg.max_backoff_epochs.max(1));
+        self.next_retry_epoch = self.epoch + backoff;
+        false
+    }
+
+    /// Force the device out of service (stuck-fraction self-test or an
+    /// operator rotation).
+    pub fn quarantine(&mut self) {
+        self.quarantined = true;
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -30,6 +255,9 @@ pub struct SchedulerEvent {
     pub recalibrated: bool,
     pub sram_writes: u64,
     pub rram_writes: u64,
+    /// what the policy decided at this checkpoint (the non-adaptive
+    /// policies map fire/skip onto `Calibrate`/`Defer`)
+    pub decision: PolicyDecision,
 }
 
 pub struct RecalibrationScheduler<'s> {
@@ -74,17 +302,47 @@ impl<'s> RecalibrationScheduler<'s> {
         let mut events = Vec::new();
         let mut hours = 0.0;
         let mut since_last = 0.0;
+        let adaptive = match self.policy {
+            SchedulerPolicy::Adaptive(cfg) => Some(cfg),
+            _ => None,
+        };
+        let mut pol = PolicyState::new();
+        if let Some(cfg) = adaptive {
+            // deployment self-test: a stuck-cell fraction past the
+            // threshold is unrecoverable without RRAM writes — rotate
+            // the device out before it burns calibration budget
+            let devices = student.total_devices();
+            if devices > 0 {
+                let frac =
+                    student.injected_stuck_cells() as f64 / devices as f64;
+                if frac > cfg.stuck_quarantine_fraction {
+                    pol.quarantine();
+                }
+            }
+        }
         for _ in 0..checkpoints {
             student.advance_time(step_hours);
             hours += step_hours;
             since_last += step_hours;
             let before = ev.student(student, &self.session.dataset)?;
-            let fire = match self.policy {
+            let decision = match self.policy {
                 SchedulerPolicy::Periodic { interval_hours } => {
-                    since_last >= interval_hours
+                    if since_last >= interval_hours {
+                        PolicyDecision::Calibrate { attempt: 0 }
+                    } else {
+                        PolicyDecision::Defer
+                    }
                 }
-                SchedulerPolicy::AccuracyFloor { floor } => before < floor,
+                SchedulerPolicy::AccuracyFloor { floor } => {
+                    if before < floor {
+                        PolicyDecision::Calibrate { attempt: 0 }
+                    } else {
+                        PolicyDecision::Defer
+                    }
+                }
+                SchedulerPolicy::Adaptive(cfg) => pol.decide(&cfg),
             };
+            let fire = matches!(decision, PolicyDecision::Calibrate { .. });
             let writes_before = student.total_counters().write_attempts;
             let mut after = None;
             let mut sram_writes = 0;
@@ -99,11 +357,15 @@ impl<'s> RecalibrationScheduler<'s> {
                     &y,
                 )?;
                 sram_writes = outcome.cost.sram_writes;
-                after = Some(ev.calibrated(
+                let score = ev.calibrated(
                     student,
                     &outcome.adapters,
                     &self.session.dataset,
-                )?);
+                )?;
+                after = Some(score);
+                if let Some(cfg) = adaptive {
+                    pol.record_outcome(&cfg, score);
+                }
             }
             let rram_writes =
                 student.total_counters().write_attempts - writes_before;
@@ -114,6 +376,7 @@ impl<'s> RecalibrationScheduler<'s> {
                 recalibrated: fire,
                 sram_writes,
                 rram_writes,
+                decision,
             });
         }
         Ok(events)
@@ -139,5 +402,170 @@ impl<'s> RecalibrationScheduler<'s> {
                 .program_student(DriftModel::with_rel(rel_drift), seed)?;
             self.run(&mut student, step_hours, checkpoints)
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing_cfg() -> AdaptiveConfig {
+        // recovery_floor above any accuracy: every round fails, so the
+        // retry/backoff timeline is pinned independent of scores
+        AdaptiveConfig { recovery_floor: 2.0, ..AdaptiveConfig::default() }
+    }
+
+    /// Drive the state machine through epochs, recording `score` after
+    /// every round it fires; returns the epochs at which it calibrated.
+    fn fired_epochs(
+        cfg: &AdaptiveConfig,
+        score: f64,
+        epochs: u64,
+    ) -> Vec<u64> {
+        let mut pol = PolicyState::new();
+        let mut fired = Vec::new();
+        for _ in 0..epochs {
+            if let PolicyDecision::Calibrate { .. } = pol.decide(cfg) {
+                fired.push(pol.epoch);
+                pol.record_outcome(cfg, score);
+            }
+        }
+        fired
+    }
+
+    #[test]
+    fn backoff_timeline_is_pinned() {
+        // base 2, max_retries 2: fail at epoch 1 -> backoff 2 (retry
+        // at 3), fail -> backoff 4 (retry at 7), fail -> quarantined.
+        let cfg = failing_cfg();
+        assert_eq!(fired_epochs(&cfg, 0.0, 12), vec![1, 3, 7]);
+        let mut pol = PolicyState::new();
+        for _ in 0..12 {
+            if let PolicyDecision::Calibrate { .. } = pol.decide(&cfg) {
+                pol.record_outcome(&cfg, 0.0);
+            }
+        }
+        assert!(pol.quarantined);
+        assert_eq!(pol.decide(&cfg), PolicyDecision::Quarantined);
+    }
+
+    #[test]
+    fn retry_attempts_count_consecutive_failures() {
+        let cfg = failing_cfg();
+        let mut pol = PolicyState::new();
+        let mut attempts = Vec::new();
+        for _ in 0..12 {
+            if let PolicyDecision::Calibrate { attempt } = pol.decide(&cfg) {
+                attempts.push(attempt);
+                pol.record_outcome(&cfg, 0.0);
+            }
+        }
+        assert_eq!(attempts, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn backoff_reports_resume_epoch() {
+        let cfg = failing_cfg();
+        let mut pol = PolicyState::new();
+        assert_eq!(pol.decide(&cfg), PolicyDecision::Calibrate { attempt: 0 });
+        pol.record_outcome(&cfg, 0.0);
+        assert_eq!(
+            pol.decide(&cfg),
+            PolicyDecision::Backoff { resume_epoch: 3 }
+        );
+    }
+
+    #[test]
+    fn success_resets_failures_and_keeps_cadence() {
+        let cfg = AdaptiveConfig {
+            base_interval_epochs: 2,
+            ..AdaptiveConfig::default()
+        };
+        // score clears the floor but not stable_recovery: plain cadence
+        let fired = fired_epochs(&cfg, 0.6, 8);
+        assert_eq!(fired, vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn stable_recovery_relaxes_interval() {
+        let cfg = AdaptiveConfig {
+            base_interval_epochs: 1,
+            ..AdaptiveConfig::default()
+        };
+        // every round recovers above stable_recovery; once the window
+        // fills (HEALTH_WINDOW rounds) the cadence doubles to every 2
+        let fired = fired_epochs(&cfg, 0.9, 10);
+        assert_eq!(fired, vec![1, 2, 3, 4, 6, 8, 10]);
+    }
+
+    #[test]
+    fn retention_stress_tightens_interval() {
+        let cfg = AdaptiveConfig {
+            base_interval_epochs: 4,
+            retention_stress: true,
+            ..AdaptiveConfig::default()
+        };
+        // 4/2 = 2: twice as tight as the base cadence
+        let fired = fired_epochs(&cfg, 0.6, 8);
+        assert_eq!(fired, vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn budget_exhaustion_stops_maintenance() {
+        let cfg = AdaptiveConfig {
+            max_calibrations: 3,
+            ..AdaptiveConfig::default()
+        };
+        let mut pol = PolicyState::new();
+        let mut fired = 0u64;
+        for _ in 0..10 {
+            match pol.decide(&cfg) {
+                PolicyDecision::Calibrate { .. } => {
+                    fired += 1;
+                    pol.record_outcome(&cfg, 0.6);
+                }
+                PolicyDecision::BudgetExhausted => {}
+                other => panic!("unexpected decision {other:?}"),
+            }
+        }
+        assert_eq!(fired, 3);
+        assert_eq!(pol.decide(&cfg), PolicyDecision::BudgetExhausted);
+    }
+
+    #[test]
+    fn backoff_is_capped() {
+        let cfg = AdaptiveConfig {
+            max_retries: 10,
+            max_backoff_epochs: 4,
+            ..failing_cfg()
+        };
+        // failures 1,2,3,... give backoffs 2,4,4,4,... (capped at 4)
+        let fired = fired_epochs(&cfg, 0.0, 20);
+        assert_eq!(fired, vec![1, 3, 7, 11, 15, 19]);
+    }
+
+    #[test]
+    fn window_returns_scores_oldest_first() {
+        let cfg = AdaptiveConfig {
+            recovery_floor: 0.0,
+            ..AdaptiveConfig::default()
+        };
+        let mut pol = PolicyState::new();
+        for s in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6] {
+            pol.decide(&cfg);
+            pol.record_outcome(&cfg, s);
+        }
+        let w: Vec<f64> = pol.window().collect();
+        assert_eq!(w, vec![0.3, 0.4, 0.5, 0.6]);
+    }
+
+    #[test]
+    fn manual_quarantine_sticks() {
+        let cfg = AdaptiveConfig::default();
+        let mut pol = PolicyState::new();
+        pol.quarantine();
+        for _ in 0..4 {
+            assert_eq!(pol.decide(&cfg), PolicyDecision::Quarantined);
+        }
     }
 }

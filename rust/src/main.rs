@@ -24,8 +24,9 @@ use rimc_dora::anyhow::{bail, Result};
 use rimc_dora::calib::{BackpropConfig, CalibConfig, InputMode};
 use rimc_dora::coordinator::{
     fig2_drift_sweep, fig4_dataset_size_sweep, fig5_rank_sweep,
-    fig6_lora_vs_dora, scenario_sweep, table1_rows, Engine,
-    RecalibrationScheduler, SchedulerPolicy,
+    fig6_lora_vs_dora, scenario_grid, scenario_sweep, table1_rows,
+    AdaptiveConfig, Engine, PolicyDecision, RecalibrationScheduler,
+    SchedulerPolicy,
 };
 use rimc_dora::model::AdapterKind;
 use rimc_dora::rram::ScenarioMix;
@@ -108,6 +109,40 @@ fn pct(x: f64) -> String {
     format!("{:.2}%", 100.0 * x)
 }
 
+/// Build the adaptive policy config shared by `serve --policy adaptive`
+/// and `lifecycle --policy adaptive`: scenario-aware defaults
+/// (retention stress tightens the cadence) with per-threshold CLI
+/// overrides.
+fn adaptive_cfg(args: &Args, mix: ScenarioMix) -> Result<AdaptiveConfig> {
+    let base = AdaptiveConfig::for_mix(mix);
+    Ok(AdaptiveConfig {
+        recovery_floor: args.f64_or("recovery-floor", base.recovery_floor)?,
+        max_retries: args.usize_or("max-retries", base.max_retries as usize)?
+            as u32,
+        stuck_quarantine_fraction: args
+            .f64_or("stuck-threshold", base.stuck_quarantine_fraction)?,
+        base_interval_epochs: args
+            .u64_or("calib-interval", base.base_interval_epochs)?,
+        max_calibrations: args.u64_or("calib-budget", base.max_calibrations)?,
+        ..base
+    })
+}
+
+fn decision_label(d: PolicyDecision) -> String {
+    match d {
+        PolicyDecision::Calibrate { attempt: 0 } => "calibrate".into(),
+        PolicyDecision::Calibrate { attempt } => {
+            format!("retry #{attempt}")
+        }
+        PolicyDecision::Defer => "defer".into(),
+        PolicyDecision::Backoff { resume_epoch } => {
+            format!("backoff->{resume_epoch}")
+        }
+        PolicyDecision::BudgetExhausted => "budget-exhausted".into(),
+        PolicyDecision::Quarantined => "quarantined".into(),
+    }
+}
+
 fn run(args: &Args) -> Result<()> {
     // worker count for parallel eval / teacher-feature passes; 0 (the
     // default) auto-detects from available_parallelism
@@ -150,23 +185,35 @@ SUBCOMMANDS
   sweep rank          [--drift R] [--samples N] [--seeds N]     (Fig. 5)
   sweep lora          [--drifts 0.2,0.15] [--samples N]         (Fig. 6)
   report table1       [--drift R] [--samples N] [--bp-samples N] (Table I)
-  lifecycle [--policy periodic|floor] [--interval-hours H]
-            [--step-hours H] [--checkpoints N]                  (Fig. 1c)
+  lifecycle [--policy periodic|floor|adaptive] [--interval-hours H]
+            [--step-hours H] [--checkpoints N]
+            [--scenario drift-only|lognormal|stuck-at|full-stack]
+            (Fig. 1c; `adaptive` adds retry/backoff + budget decisions)
   serve     [--devices N] [--requests N] [--workers N] [--drift R]
             [--batch SAMPLES] [--queue-cap N] [--age-bound K] [--smoke]
             [--scenario drift-only|lognormal|stuck-at|full-stack]
+            [--policy none|adaptive] [--probe-samples N]
+            [--recovery-floor F] [--max-retries N] [--stuck-threshold F]
+            [--calib-interval E] [--calib-budget N]
             replay a synthetic inference/calibration/drift trace over a
             simulated device fleet (default: 8 devices x 1000 requests
             on `small`; --smoke shrinks to nano scale; --batch 1
             disables inference micro-batching; --age-bound K promotes
             maintenance passed over for K dispatches, 0 = strict;
-            --scenario deploys the fleet under a non-ideality mix)
+            --scenario deploys the fleet under a non-ideality mix;
+            --policy adaptive tracks per-device health, retries failed
+            recalibrations with exponential backoff, quarantines
+            unrecoverable devices and reroutes their traffic — emits
+            BENCH_serve_policy.json)
   scenarios [--mixes drift-only,lognormal,stuck-at,full-stack]
             [--drift R] [--samples N] [--seeds N] [--smoke]
+            [--grid] [--ranks 2,4,...] [--sizes 5,10,...]
             sweep non-ideality scenario mixes (stuck-at faults, lognormal
             programming variation, DAC quantization, read noise,
             retention) and report per-mix calibration recovery; asserts
-            zero in-field RRAM writes and emits BENCH_scenarios.json
+            zero in-field RRAM writes and emits BENCH_scenarios.json;
+            --grid crosses mix x rank x samples and emits
+            BENCH_scenarios_grid.json
 
 DEV GATES  `make lint` — rimc-lint static invariants R1-R7 (DESIGN.md
            §8) + clippy; `make miri` — UB backstop (arena/threads/queue)";
@@ -204,6 +251,13 @@ mod tests {
         }
         assert!(HELP.contains("--threads"));
         assert!(HELP.contains("0 = auto"));
+        // fault-reactive fleet policy surface (DESIGN.md §10)
+        for flag in [
+            "--policy", "adaptive", "--recovery-floor", "--max-retries",
+            "--stuck-threshold", "--grid",
+        ] {
+            assert!(HELP.contains(flag), "HELP missing policy flag `{flag}`");
+        }
     }
 }
 
@@ -453,28 +507,40 @@ fn cmd_report(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use rimc_dora::serve::{replay, synth_trace, ServeConfig, Server, TraceSpec};
+    use rimc_dora::serve::{
+        replay, synth_trace, PolicyConfig, ServeConfig, Server, TraceSpec,
+    };
 
     let smoke = args.bool_or("smoke", false)?;
     let eng = engine(args)?;
     let model = args.str_or("model", if smoke { "nano" } else { "small" });
     let session = eng.shared_session(&model)?;
     let scenario_name = args.str_or("scenario", "drift-only");
+    let scenario = ScenarioMix::parse(&scenario_name).ok_or_else(|| {
+        rimc_dora::anyhow::anyhow!(
+            "--scenario {scenario_name}: expected \
+             drift-only|lognormal|stuck-at|full-stack"
+        )
+    })?;
+    let policy = match args.str_or("policy", "none").as_str() {
+        "none" => None,
+        "adaptive" => Some(PolicyConfig {
+            adaptive: adaptive_cfg(args, scenario)?,
+            probe_samples: args.usize_or("probe-samples", 32)?,
+        }),
+        p => bail!("--policy {p}: expected none|adaptive"),
+    };
     let cfg = ServeConfig {
         n_devices: args.usize_or("devices", 8)?,
         drift_rel: args.f64_or("drift", 0.2)?,
-        scenario: ScenarioMix::parse(&scenario_name).ok_or_else(|| {
-            rimc_dora::anyhow::anyhow!(
-                "--scenario {scenario_name}: expected \
-                 drift-only|lognormal|stuck-at|full-stack"
-            )
-        })?,
+        scenario,
         seed: args.u64_or("seed", 3)?,
         queue_capacity: args.usize_or("queue-cap", 256)?,
         max_batch_samples: args
             .usize_or("batch", session.spec.eval_batch)?,
         maintenance_age_bound: args.usize_or("age-bound", 0)?,
         workers: args.usize_or("workers", 0)?,
+        policy,
     };
     let spec = TraceSpec {
         n_requests: args.usize_or("requests", if smoke { 120 } else { 1000 })?,
@@ -544,6 +610,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
             d.rram_writes_in_field.to_string(),
         ]).collect::<Vec<_>>(),
     );
+    if let Some(pol) = &report.policy {
+        print_table(
+            "fleet health — fault-reactive policy",
+            &["active", "quarantined", "availability", "rerouted",
+              "rejected", "degraded acc", "deferred", "dropped",
+              "retries (by attempt)"],
+            &[vec![
+                pol.active_devices.to_string(),
+                pol.quarantined_devices.to_string(),
+                pct(pol.availability),
+                pol.rerouted_requests.to_string(),
+                pol.rejected_requests.to_string(),
+                if pol.degraded_samples > 0 {
+                    pct(pol.degraded_accuracy())
+                } else {
+                    "-".into()
+                },
+                pol.maintenance_deferred.to_string(),
+                pol.maintenance_dropped.to_string(),
+                format!("{:?}", pol.retries.bins()),
+            ]],
+        );
+        println!(
+            "quarantine rotated {} device(s) out (stuck cells past the \
+             threshold are unrecoverable without RRAM writes); their \
+             traffic rerouted to healthy neighbours",
+            pol.quarantined_devices
+        );
+    }
     println!(
         "throughput: {:.1} req/s ({} requests, {} inferred samples, \
          {:.2} s wall)",
@@ -567,6 +662,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
          — calibration stayed SRAM-only",
         report.sram_writes
     );
+    if report.policy.is_some() {
+        use rimc_dora::util::bench::{write_bench_json, BenchRecord};
+        let record = BenchRecord {
+            op: "serve-policy".into(),
+            preset: model.clone(),
+            threads: rimc_dora::util::threads::threads(),
+            wall_ns: (report.wall_s * 1e9).max(1.0),
+            speedup: 1.0,
+        };
+        let path = write_bench_json("serve_policy", &[record])?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 
@@ -601,6 +708,83 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
     let seeds = drift_seeds(args, if smoke { 2 } else { 3 })?;
     let rel = args.f64_or("drift", 0.2)?;
     let n_samples = args.usize_or("samples", 10)?;
+
+    if args.bool_or("grid", false)? {
+        let default_ranks: Vec<usize> =
+            session.spec.ranks.iter().copied().take(2).collect();
+        let ranks = args.usize_list_or("ranks", &default_ranks)?;
+        let sizes = args.usize_list_or(
+            "sizes",
+            if smoke { &[5, 10][..] } else { &[5, 10, 20][..] },
+        )?;
+        println!(
+            "sweeping {} mixes x {} ranks x {} dataset sizes x {} seeds \
+             on `{model}` at {:.0}% drift (teacher trains on first \
+             session)...",
+            mixes.len(),
+            ranks.len(),
+            sizes.len(),
+            seeds.len(),
+            100.0 * rel
+        );
+        let (rows, wall_ns) = time_ns(|| {
+            scenario_grid(&session, rel, &cfg, &mixes, &ranks, &sizes, &seeds)
+        });
+        let rows = rows?;
+        print_table(
+            &format!(
+                "scenario grid — recovery over (mix, rank, samples) \
+                 ({model}, {} seeds)",
+                seeds.len()
+            ),
+            &["mix", "rank", "samples", "pre-calib", "post-calib",
+              "recovery", "stuck cells", "RRAM writes (field)"],
+            &rows.iter().map(|r| vec![
+                r.mix.name().to_string(),
+                r.rank.to_string(),
+                r.n_samples.to_string(),
+                pct(r.pre_acc),
+                pct(r.post_acc),
+                pct(r.recovery),
+                format!("{:.1}", r.stuck_cells),
+                r.rram_writes_in_field.to_string(),
+            ]).collect::<Vec<_>>(),
+        );
+        for r in &rows {
+            if r.rram_writes_in_field != 0 {
+                bail!(
+                    "grid cell ({}, r={}, n={}) issued {} RRAM write \
+                     pulses in the field — the zero-write invariant is \
+                     broken",
+                    r.mix.name(),
+                    r.rank,
+                    r.n_samples,
+                    r.rram_writes_in_field
+                );
+            }
+        }
+        println!(
+            "RRAM writes in field: 0 across the grid — calibration \
+             stayed SRAM-only in every cell"
+        );
+        println!(
+            "stuck-at recovery floor: cells pinned by stuck-at faults \
+             cannot be rewritten without RRAM pulses, so no rank or \
+             dataset size recovers them — mixes with stuck cells plateau \
+             below drift-only recovery no matter how the adapter grows"
+        );
+        let record = BenchRecord {
+            op: "scenario-grid".into(),
+            preset: model.clone(),
+            threads: rimc_dora::util::threads::threads(),
+            wall_ns: wall_ns.max(1.0),
+            speedup: 1.0,
+        };
+        let path = write_bench_json("scenarios_grid", &[record])?;
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
+
     println!(
         "sweeping {} scenario mixes x {} seeds on `{model}` at {:.0}% \
          drift (teacher trains on first session)...",
@@ -662,19 +846,40 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
 fn cmd_lifecycle(args: &Args) -> Result<()> {
     let eng = engine(args)?;
     let session = eng.session(&args.str_or("model", "nano"))?;
-    let policy = match args.str_or("policy", "periodic").as_str() {
+    let scenario_name = args.str_or("scenario", "drift-only");
+    let scenario = ScenarioMix::parse(&scenario_name).ok_or_else(|| {
+        rimc_dora::anyhow::anyhow!(
+            "--scenario {scenario_name}: expected \
+             drift-only|lognormal|stuck-at|full-stack"
+        )
+    })?;
+    let policy_name = args.str_or("policy", "periodic");
+    let policy = match policy_name.as_str() {
         "periodic" => SchedulerPolicy::Periodic {
             interval_hours: args.f64_or("interval-hours", 200.0)?,
         },
         "floor" => SchedulerPolicy::AccuracyFloor {
             floor: args.f64_or("floor", 0.8)?,
         },
-        p => bail!("--policy {p}: expected periodic|floor"),
+        "adaptive" => {
+            SchedulerPolicy::Adaptive(adaptive_cfg(args, scenario)?)
+        }
+        p => bail!("--policy {p}: expected periodic|floor|adaptive"),
     };
-    let mut student = session.program_student(
-        rimc_dora::device::DriftModel::with_rel(args.f64_or("drift", 0.2)?),
-        args.u64_or("seed", 3)?,
-    )?;
+    let rel = args.f64_or("drift", 0.2)?;
+    let seed = args.u64_or("seed", 3)?;
+    // the adaptive policy reacts to scenario stress (stuck cells,
+    // retention), so deploy its student under the mix; the legacy
+    // policies keep the pre-policy drift-only deployment path byte
+    // for byte
+    let mut student = if matches!(policy, SchedulerPolicy::Adaptive(_)) {
+        session.drifted_student_with(rel, scenario.model(seed), seed)?
+    } else {
+        session.program_student(
+            rimc_dora::device::DriftModel::with_rel(rel),
+            seed,
+        )?
+    };
     let scheduler = RecalibrationScheduler::new(
         &session,
         policy,
@@ -687,12 +892,13 @@ fn cmd_lifecycle(args: &Args) -> Result<()> {
         args.usize_or("checkpoints", 8)?,
     )?;
     print_table(
-        "Fig. 1(c) — periodic calibration timeline",
-        &["hours", "acc before", "recalibrated", "acc after",
+        &format!("Fig. 1(c) — calibration timeline ({policy_name})"),
+        &["hours", "acc before", "decision", "recalibrated", "acc after",
           "SRAM writes", "RRAM writes"],
         &events.iter().map(|e| vec![
             format!("{:.0}", e.hours),
             pct(e.accuracy_before),
+            decision_label(e.decision),
             e.recalibrated.to_string(),
             e.accuracy_after.map(pct).unwrap_or_else(|| "-".into()),
             e.sram_writes.to_string(),

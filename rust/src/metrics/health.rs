@@ -1,0 +1,81 @@
+//! Fleet-health accounting: the retry histogram the serving policy
+//! report carries. Fixed-size, counter-only — safe to update on the
+//! replay client's hot path without allocating.
+
+/// Retry attempts binned 0..=RETRY_BINS-1; the last bin absorbs
+/// anything deeper (policies cap retries well below this in practice).
+pub const RETRY_BINS: usize = 8;
+
+/// Histogram of calibration rounds by retry attempt: bin 0 counts
+/// scheduled (first-try) rounds, bin k the k-th consecutive retries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RetryHistogram {
+    bins: [u64; RETRY_BINS],
+}
+
+impl RetryHistogram {
+    pub fn new() -> RetryHistogram {
+        RetryHistogram::default()
+    }
+
+    /// Count one calibration round executed at retry depth `attempt`.
+    pub fn record(&mut self, attempt: u32) {
+        let idx = (attempt as usize).min(RETRY_BINS - 1);
+        self.bins[idx] += 1;
+    }
+
+    pub fn bins(&self) -> &[u64; RETRY_BINS] {
+        &self.bins
+    }
+
+    /// Calibration rounds recorded in total.
+    pub fn total(&self) -> u64 {
+        let mut t = 0u64;
+        for b in self.bins {
+            t += b;
+        }
+        t
+    }
+
+    /// Rounds that were retries (attempt > 0).
+    pub fn retried(&self) -> u64 {
+        self.total() - self.bins[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_bin_per_attempt() {
+        let mut h = RetryHistogram::new();
+        h.record(0);
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        assert_eq!(h.bins()[0], 2);
+        assert_eq!(h.bins()[1], 1);
+        assert_eq!(h.bins()[2], 1);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.retried(), 2);
+    }
+
+    #[test]
+    fn deep_retries_clamp_into_last_bin() {
+        let mut h = RetryHistogram::new();
+        h.record(100);
+        h.record(RETRY_BINS as u32 - 1);
+        assert_eq!(h.bins()[RETRY_BINS - 1], 2);
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.retried(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = RetryHistogram::new();
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.retried(), 0);
+        assert_eq!(h.bins(), &[0; RETRY_BINS]);
+    }
+}

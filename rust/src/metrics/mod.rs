@@ -4,9 +4,11 @@
 //! percentile accounting (`latency::LatencySummary`) on top of the
 //! same wear counters.
 
+pub mod health;
 pub mod latency;
 pub mod params;
 
+pub use health::{RetryHistogram, RETRY_BINS};
 pub use latency::LatencySummary;
 
 use crate::device::constants;

@@ -179,15 +179,50 @@ impl Device {
         x: &Tensor,
         labels: &[usize],
     ) -> Result<Vec<usize>> {
-        let spec = &session.spec;
         let n = x.shape()[0];
+        let logits = self.forward_logits(session, x)?;
+        self.student.count_forward_reads(n as u64);
+        let preds = logits.argmax_rows();
+        self.inferred += n as u64;
+        self.correct += preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| *p == *l)
+            .count() as u64;
+        Ok(preds)
+    }
+
+    /// Score the device on a probe batch **without** touching the
+    /// serving accuracy counters (`inferred`/`correct` stay what field
+    /// traffic made them). This is the health layer's recovery
+    /// measurement: it runs inside the calibrate work unit under the
+    /// device lock, so its place in the read-wear stream — and hence
+    /// every downstream output — is deterministic.
+    pub fn probe(
+        &mut self,
+        session: &Session,
+        x: &Tensor,
+        labels: &[usize],
+    ) -> Result<f64> {
+        let n = x.shape()[0];
+        let logits = self.forward_logits(session, x)?;
+        self.student.count_forward_reads(n as u64);
+        let preds = logits.argmax_rows();
+        let correct =
+            preds.iter().zip(labels).filter(|(p, l)| *p == *l).count();
+        Ok(correct as f64 / labels.len().max(1) as f64)
+    }
+
+    /// The shared forward: crossbars only when uncalibrated, merged-
+    /// adapter forward once calibrated. Pure compute — callers charge
+    /// read wear and scoring themselves.
+    fn forward_logits(&self, session: &Session, x: &Tensor) -> Result<Tensor> {
+        let spec = &session.spec;
         let rows = Dataset::rows(x)?;
         let blocks = self.student.stacked_arrays()?;
         let head = self.student.head_io();
-        let logits = match &self.adapters {
-            None => {
-                session.backend.student_fwd(spec, &rows, &blocks, &head)?
-            }
+        match &self.adapters {
+            None => session.backend.student_fwd(spec, &rows, &blocks, &head),
             Some(ads) => {
                 let stacked = ads.stacked()?;
                 let meffh = ads.head.merged_meff()?;
@@ -199,22 +234,13 @@ impl Device {
                 match ads.kind {
                     AdapterKind::Dora => session.backend.dora_model_fwd(
                         spec, &rows, &blocks, &stacked, &head, head_ad,
-                    )?,
+                    ),
                     AdapterKind::Lora => session.backend.lora_model_fwd(
                         spec, &rows, &blocks, &stacked, &head, head_ad,
-                    )?,
+                    ),
                 }
             }
-        };
-        self.student.count_forward_reads(n as u64);
-        let preds = logits.argmax_rows();
-        self.inferred += n as u64;
-        self.correct += preds
-            .iter()
-            .zip(labels)
-            .filter(|(p, l)| *p == *l)
-            .count() as u64;
-        Ok(preds)
+        }
     }
 
     /// One feature-calibration round on `n_samples` fresh calibration
@@ -268,6 +294,22 @@ impl Device {
     /// not endurance wear) — the serving heterogeneity test reads this.
     pub fn injected_stuck_cells(&self) -> u64 {
         self.student.injected_stuck_cells()
+    }
+
+    /// Fraction of this device's RRAM cells pinned by stuck-at faults.
+    /// Zero-write calibration cannot recover what these cells clamp —
+    /// the health layer quarantines past a threshold at deployment.
+    pub fn stuck_cell_fraction(&self) -> f64 {
+        let devices = self.student.total_devices();
+        if devices == 0 {
+            return 0.0;
+        }
+        self.injected_stuck_cells() as f64 / devices as f64
+    }
+
+    /// Field hours on the drift clock (the health record's drift age).
+    pub fn hours(&self) -> f64 {
+        self.hours
     }
 
     pub fn stats(&self) -> DeviceStats {

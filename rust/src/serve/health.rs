@@ -1,0 +1,316 @@
+//! Fleet health and self-healing: per-device health records, the
+//! adaptive recalibration policy applied to serving traffic, and
+//! quarantine/rotation bookkeeping.
+//!
+//! The state machine itself lives in `coordinator::scheduler`
+//! ([`PolicyState`] / [`AdaptiveConfig`]) so the offline lifecycle
+//! scheduler and the serving fleet share one policy implementation;
+//! this module binds it to fleet state: stuck-cell self-tests at
+//! deployment, probe-measured recovery per calibration round, and the
+//! rerouting map the trace replay consults.
+//!
+//! Determinism contract: every decision here is a pure function of
+//! (config, per-device counters, probe scores) — no clocks, no
+//! unseeded entropy, no cross-thread races. The trace replay makes all
+//! policy decisions on the client thread in trace order, and probes run
+//! *inside* the calibrate work unit under the device lock, so the whole
+//! policy timeline is bitwise reproducible across `--threads 1/2/0`,
+//! reruns, and arena on/off.
+//!
+//! Zero-RRAM-write contract: health reads counters
+//! (`stuck_cell_fraction`, probe accuracies) and decides *scheduling* —
+//! it never touches a programming API. Quarantine in particular is pure
+//! bookkeeping: the device is drained from the queue and dropped from
+//! routing; its crossbars are never rewritten. The R6 taint pass proves
+//! no programming call is reachable from this module.
+
+use crate::anyhow::Result;
+
+use super::fleet::{gather_eval, Fleet};
+use crate::coordinator::{AdaptiveConfig, PolicyDecision, PolicyState};
+use crate::dataset::Dataset;
+use crate::util::tensor::Tensor;
+
+/// Serving-side policy knobs: the shared adaptive config plus how many
+/// eval samples the recovery probe scores each calibration round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyConfig {
+    pub adaptive: AdaptiveConfig,
+    /// probe batch size (fixed prefix of the eval split, so every
+    /// device and every round scores the same samples)
+    pub probe_samples: usize,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig { adaptive: AdaptiveConfig::default(), probe_samples: 32 }
+    }
+}
+
+/// Why a device left service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuarantineReason {
+    /// deployment self-test: stuck-cell fraction above the threshold —
+    /// zero-write calibration fundamentally cannot recover these cells
+    StuckFraction,
+    /// recovery stayed below the floor through `max_retries`
+    /// consecutive rounds
+    RetriesExhausted,
+}
+
+impl QuarantineReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QuarantineReason::StuckFraction => "stuck-fraction",
+            QuarantineReason::RetriesExhausted => "retries-exhausted",
+        }
+    }
+}
+
+/// Everything the fleet knows about one device's health: drift age,
+/// stuck-cell estimate, the policy state machine (with its last-K
+/// recovery ring), and the quarantine verdict if any. Fixed-size per
+/// device; updates are field writes, never allocations.
+#[derive(Debug, Clone)]
+pub struct HealthRecord {
+    pub device: usize,
+    /// fraction of cells pinned by stuck-at faults (deploy self-test)
+    pub stuck_fraction: f64,
+    /// drift hours accumulated by routed `Advance` traffic
+    pub drift_hours: f64,
+    /// drift age at the last completed calibration round
+    pub hours_at_last_calib: f64,
+    /// retry/backoff/budget state + last-K recovery scores
+    pub state: PolicyState,
+    pub quarantine: Option<QuarantineReason>,
+}
+
+impl HealthRecord {
+    /// Hours of uncompensated drift since the last calibration round.
+    pub fn drift_age(&self) -> f64 {
+        self.drift_hours - self.hours_at_last_calib
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.quarantine.is_none()
+    }
+}
+
+/// Per-fleet health state: one record per device plus the shared
+/// adaptive config. Owned by the replay client (single-threaded
+/// decisions in trace order); the server only consumes its verdicts.
+#[derive(Debug, Clone)]
+pub struct FleetHealth {
+    cfg: AdaptiveConfig,
+    records: Vec<HealthRecord>,
+}
+
+impl FleetHealth {
+    /// Build records for every device and run the deployment self-test:
+    /// a stuck-cell fraction above `stuck_quarantine_fraction`
+    /// quarantines the device before it serves or burns calibration
+    /// budget (nothing zero-write can do will recover it).
+    pub fn new(fleet: &Fleet, cfg: AdaptiveConfig) -> Result<FleetHealth> {
+        let mut records = Vec::with_capacity(fleet.n_devices());
+        for id in 0..fleet.n_devices() {
+            let stuck = fleet.lock(id)?.stuck_cell_fraction();
+            let mut rec = HealthRecord {
+                device: id,
+                stuck_fraction: stuck,
+                drift_hours: 0.0,
+                hours_at_last_calib: 0.0,
+                state: PolicyState::new(),
+                quarantine: None,
+            };
+            if stuck > cfg.stuck_quarantine_fraction {
+                rec.state.quarantine();
+                rec.quarantine = Some(QuarantineReason::StuckFraction);
+            }
+            records.push(rec);
+        }
+        Ok(FleetHealth { cfg, records })
+    }
+
+    pub fn cfg(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    pub fn records(&self) -> &[HealthRecord] {
+        &self.records
+    }
+
+    pub fn record(&self, device: usize) -> Option<&HealthRecord> {
+        self.records.get(device)
+    }
+
+    pub fn is_active(&self, device: usize) -> bool {
+        self.records.get(device).map(|r| r.is_active()).unwrap_or(false)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.records.iter().filter(|r| r.is_active()).count()
+    }
+
+    pub fn quarantined_count(&self) -> usize {
+        self.records.len() - self.active_count()
+    }
+
+    /// Route traffic addressed to `device`: the device itself while
+    /// active, otherwise the next active device in ring order (stable
+    /// and load-spreading: consecutive quarantined devices fail over to
+    /// *different* neighbours). `None` when the whole fleet is out.
+    pub fn route(&self, device: usize) -> Option<usize> {
+        let n = self.records.len();
+        if device >= n {
+            return None;
+        }
+        if self.records[device].is_active() {
+            return Some(device);
+        }
+        (device + 1..n)
+            .chain(0..device)
+            .find(|&d| self.records[d].is_active())
+    }
+
+    /// Advance `device`'s maintenance epoch and ask the policy what to
+    /// do (see [`PolicyState::decide`]).
+    pub fn decide(&mut self, device: usize) -> PolicyDecision {
+        match self.records.get_mut(device) {
+            Some(rec) => rec.state.decide(&self.cfg),
+            None => PolicyDecision::Quarantined,
+        }
+    }
+
+    /// Record a calibration round's probe-measured recovery. Returns
+    /// the quarantine reason iff this round *newly* quarantined the
+    /// device (retries exhausted) — the caller must then drain it.
+    pub fn record_outcome(
+        &mut self,
+        device: usize,
+        score: f64,
+    ) -> Option<QuarantineReason> {
+        let rec = match self.records.get_mut(device) {
+            Some(rec) => rec,
+            None => return None,
+        };
+        rec.hours_at_last_calib = rec.drift_hours;
+        if rec.state.record_outcome(&self.cfg, score) {
+            rec.quarantine = Some(QuarantineReason::RetriesExhausted);
+            return Some(QuarantineReason::RetriesExhausted);
+        }
+        None
+    }
+
+    /// Account routed drift traffic against the device's health record.
+    pub fn on_advance(&mut self, device: usize, hours: f64) {
+        if let Some(rec) = self.records.get_mut(device) {
+            rec.drift_hours += hours;
+        }
+    }
+}
+
+/// The fixed probe batch recovery is scored on: the first
+/// `n` samples of the eval split, identical for every device and every
+/// round so probe accuracies are comparable across the fleet.
+#[derive(Debug, Clone)]
+pub struct ProbeSet {
+    pub x: Tensor,
+    pub labels: Vec<usize>,
+}
+
+impl ProbeSet {
+    pub fn new(ds: &Dataset, n: usize) -> Result<ProbeSet> {
+        let take = n.clamp(1, ds.n_eval().max(1));
+        let samples: Vec<usize> = (0..take.min(ds.n_eval())).collect();
+        let (x, labels) = gather_eval(ds, &samples)?;
+        Ok(ProbeSet { x, labels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(device: usize, quarantined: bool) -> HealthRecord {
+        let mut state = PolicyState::new();
+        if quarantined {
+            state.quarantine();
+        }
+        HealthRecord {
+            device,
+            stuck_fraction: 0.0,
+            drift_hours: 0.0,
+            hours_at_last_calib: 0.0,
+            state,
+            quarantine: if quarantined {
+                Some(QuarantineReason::StuckFraction)
+            } else {
+                None
+            },
+        }
+    }
+
+    fn health(flags: &[bool]) -> FleetHealth {
+        FleetHealth {
+            cfg: AdaptiveConfig::default(),
+            records: flags
+                .iter()
+                .enumerate()
+                .map(|(d, &q)| record(d, q))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn route_prefers_own_device() {
+        let h = health(&[false, false, false]);
+        assert_eq!(h.route(1), Some(1));
+    }
+
+    #[test]
+    fn route_fails_over_in_ring_order() {
+        let h = health(&[true, false, true]);
+        assert_eq!(h.route(0), Some(1), "next active clockwise");
+        assert_eq!(h.route(2), Some(1), "wraps around the ring");
+        assert_eq!(h.route(1), Some(1));
+    }
+
+    #[test]
+    fn route_none_when_fleet_is_out() {
+        let h = health(&[true, true]);
+        assert_eq!(h.route(0), None);
+        assert_eq!(h.route(1), None);
+        assert_eq!(h.active_count(), 0);
+        assert_eq!(h.quarantined_count(), 2);
+    }
+
+    #[test]
+    fn retries_exhausted_marks_and_reports_once() {
+        let mut h = health(&[false]);
+        // floor 0.55, max_retries 2: three failing rounds quarantine
+        let mut newly = Vec::new();
+        for _ in 0..3 {
+            h.decide(0);
+            newly.push(h.record_outcome(0, 0.0));
+        }
+        assert_eq!(newly, vec![
+            None,
+            None,
+            Some(QuarantineReason::RetriesExhausted)
+        ]);
+        assert!(!h.is_active(0));
+        assert_eq!(h.decide(0), PolicyDecision::Quarantined);
+    }
+
+    #[test]
+    fn drift_age_tracks_hours_since_last_calibration() {
+        let mut h = health(&[false]);
+        h.on_advance(0, 10.0);
+        assert_eq!(h.record(0).unwrap().drift_age(), 10.0);
+        h.decide(0);
+        h.record_outcome(0, 0.9);
+        assert_eq!(h.record(0).unwrap().drift_age(), 0.0);
+        h.on_advance(0, 5.0);
+        assert_eq!(h.record(0).unwrap().drift_age(), 5.0);
+    }
+}

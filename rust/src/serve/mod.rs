@@ -27,6 +27,13 @@
 //!   per-device execution.
 //! * [`server`] — the blocking `submit`/`wait` front-end plus scoped
 //!   dispatch workers (`util::threads`).
+//! * [`health`] — fault-reactive fleet self-healing: per-device health
+//!   records (drift age, last-K recovery ring, stuck-cell fraction),
+//!   the adaptive recalibration policy (shared state machine with
+//!   `coordinator::scheduler`: retry with deterministic exponential
+//!   backoff in simulated epochs, per-device maintenance budgets), and
+//!   quarantine/rotation: unrecoverable devices drain FIFO-safely out
+//!   of dispatch and their traffic reroutes to healthy neighbours.
 //! * [`trace`] — seeded synthetic request traces, replay, and the
 //!   throughput / latency-percentile / accuracy-vs-drift report behind
 //!   `rimc serve` and the `serving_throughput` bench.
@@ -34,11 +41,17 @@
 //! See DESIGN.md §7 for the serving model and its invariants.
 
 pub mod fleet;
+pub mod health;
 pub mod queue;
 pub mod server;
 pub mod trace;
 
 pub use fleet::{gather_eval, Device, DeviceStats, Fleet};
+pub use health::{
+    FleetHealth, HealthRecord, PolicyConfig, ProbeSet, QuarantineReason,
+};
 pub use queue::{Lane, RequestKind, SubmitQueue, Ticket};
 pub use server::{Response, ServeConfig, Server};
-pub use trace::{replay, replay_collect, synth_trace, TraceReport, TraceSpec};
+pub use trace::{
+    replay, replay_collect, synth_trace, PolicyReport, TraceReport, TraceSpec,
+};

@@ -141,6 +141,11 @@ struct QueueState {
     per_device: Vec<VecDeque<Pending>>,
     /// devices with an in-flight work unit
     busy: Vec<bool>,
+    /// quarantined devices: new submissions are rejected, but whatever
+    /// was queued before the drain still dispatches and completes in
+    /// FIFO order — a drain never abandons accepted work, and it never
+    /// touches the busy/aging bookkeeping of in-flight units
+    draining: Vec<bool>,
     /// total queued requests (bound subject)
     queued: usize,
     next_seq: u64,
@@ -184,6 +189,7 @@ impl SubmitQueue {
             state: Mutex::new(QueueState {
                 per_device: (0..n_devices).map(|_| VecDeque::new()).collect(),
                 busy: vec![false; n_devices],
+                draining: vec![false; n_devices],
                 queued: 0,
                 next_seq: 0,
                 shutdown: false,
@@ -232,11 +238,21 @@ impl SubmitQueue {
                 st.per_device.len()
             );
         }
-        while st.queued >= self.capacity && !st.shutdown {
+        // checked before *and* after the capacity wait: a drain that
+        // lands while this submitter is blocked on backpressure must
+        // reject it too, not accept work for a quarantined device
+        if st.draining[device] {
+            bail!("device {device} is quarantined (draining)");
+        }
+        while st.queued >= self.capacity && !st.shutdown && !st.draining[device]
+        {
             st = self.space.wait(st).expect("queue lock");
         }
         if st.shutdown {
             bail!("submit after shutdown");
+        }
+        if st.draining[device] {
+            bail!("device {device} is quarantined (draining)");
         }
         let seq = st.next_seq;
         st.next_seq += 1;
@@ -338,6 +354,28 @@ impl SubmitQueue {
         st.busy[device] = false;
         drop(st);
         self.work.notify_all();
+    }
+
+    /// Quarantine `device`: reject its new submissions from now on,
+    /// while everything already queued for it dispatches and completes
+    /// in FIFO order. Busy flags and aging (`passed_over`) bookkeeping
+    /// are untouched — an in-flight or promoted unit finishes exactly
+    /// as it would have, in its own lane — so a drain can land at any
+    /// point of the dispatch cycle without corrupting the schedule.
+    pub fn drain(&self, device: usize) {
+        let mut st = self.state.lock().expect("queue lock");
+        if device < st.draining.len() {
+            st.draining[device] = true;
+        }
+        drop(st);
+        // wake submitters blocked on backpressure so ones targeting the
+        // drained device fail promptly instead of waiting for space
+        self.space.notify_all();
+    }
+
+    pub fn is_draining(&self, device: usize) -> bool {
+        let st = self.state.lock().expect("queue lock");
+        st.draining.get(device).copied().unwrap_or(false)
     }
 
     /// Stop accepting submissions; workers drain what is queued and
@@ -551,6 +589,96 @@ mod tests {
             "promoted advance dispatches alone"
         );
         assert_eq!(u2.items.len(), 1);
+    }
+
+    #[test]
+    fn drain_rejects_new_but_completes_queued_fifo() {
+        let q = SubmitQueue::new(2, 8, 4, 0);
+        q.submit(0, 0, RequestKind::Calibrate {
+            n_samples: 4,
+            cfg: CalibConfig::default(),
+        })
+        .unwrap();
+        q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.drain(0);
+        assert!(q.is_draining(0));
+        assert!(!q.is_draining(1));
+        assert!(
+            q.submit(0, 2, RequestKind::Infer { samples: vec![1] }).is_err(),
+            "drained device rejects new work"
+        );
+        // healthy devices are unaffected
+        q.submit(1, 3, RequestKind::Infer { samples: vec![2] }).unwrap();
+        // everything accepted before the drain still runs, in order
+        let u1 = q.pop().unwrap();
+        assert_eq!((u1.device, tickets(&u1.items)), (1, vec![3]));
+        q.complete(1);
+        let u2 = q.pop().unwrap();
+        assert_eq!((u2.device, tickets(&u2.items)), (0, vec![0]));
+        q.complete(0);
+        let u3 = q.pop().unwrap();
+        assert_eq!((u3.device, tickets(&u3.items)), (0, vec![1]));
+        q.complete(0);
+        q.shutdown();
+        assert!(q.pop().is_none(), "drained device leaves nothing behind");
+    }
+
+    #[test]
+    fn drain_mid_promotion_keeps_lane_and_busy_clean() {
+        // K = 1: device 0's advance is passed over once (promoted),
+        // then the device is drained *between* promotion and dispatch.
+        // The promoted request must still dispatch as a maintenance
+        // singleton (its latency bins in the maintenance lane — it
+        // dispatches alone, never inside an inference batch), the busy
+        // flag must cycle normally, and the infer queued behind it must
+        // still drain in program order.
+        let q = SubmitQueue::new(2, 8, 4, 1);
+        q.submit(0, 0, RequestKind::Advance { hours: 1.0 }).unwrap();
+        q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.submit(1, 2, RequestKind::Infer { samples: vec![1] }).unwrap();
+        let u1 = q.pop().unwrap();
+        assert_eq!((u1.device, tickets(&u1.items)), (1, vec![2]));
+        // the advance has now aged past K; drain device 0 mid-promotion
+        q.drain(0);
+        q.complete(1);
+        let u2 = q.pop().unwrap();
+        assert_eq!((u2.device, tickets(&u2.items)), (0, vec![0]));
+        assert_eq!(
+            u2.items.len(),
+            1,
+            "promoted advance still dispatches alone (maintenance lane)"
+        );
+        assert!(matches!(u2.items[0].kind, RequestKind::Advance { .. }));
+        // busy flag must not stay stale: after complete, the queued
+        // infer surfaces
+        q.complete(0);
+        let u3 = q.pop().unwrap();
+        assert_eq!((u3.device, tickets(&u3.items)), (0, vec![1]));
+        q.complete(0);
+        q.shutdown();
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn drain_fails_backpressured_submitter() {
+        // capacity 1 and full: a submitter for the drained device must
+        // error out instead of waiting for space that may never come.
+        // (Whether the drain lands before or mid-wait, submit errors.)
+        let q = std::sync::Arc::new(SubmitQueue::new(2, 1, 4, 0));
+        q.submit(1, 0, RequestKind::Infer { samples: vec![0] }).unwrap();
+        let q2 = std::sync::Arc::clone(&q);
+        let blocked = std::thread::spawn(move || {
+            q2.submit(0, 1, RequestKind::Infer { samples: vec![1] })
+        });
+        q.drain(0);
+        assert!(
+            blocked.join().expect("submitter thread").is_err(),
+            "blocked submitter for a drained device must fail"
+        );
+        // the healthy device's queued request is untouched
+        let u = q.pop().unwrap();
+        assert_eq!((u.device, tickets(&u.items)), (1, vec![0]));
+        q.complete(1);
     }
 
     #[test]

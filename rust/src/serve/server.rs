@@ -23,6 +23,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::anyhow::{bail, Result};
 
 use super::fleet::{gather_eval, Fleet};
+use super::health::{PolicyConfig, ProbeSet};
 use super::queue::{Pending, RequestKind, SubmitQueue, Ticket, WorkUnit};
 use crate::coordinator::Session;
 use crate::model::AdapterKind;
@@ -57,6 +58,12 @@ pub struct ServeConfig {
     /// the cap still keeps dispatch concurrency from starving the
     /// per-unit compute share.
     pub workers: usize,
+    /// Fault-reactive policy (`serve::health`): `Some` arms the health
+    /// layer — deployment stuck-cell self-tests, probe-measured
+    /// recovery on every calibration round, retry/backoff/quarantine.
+    /// `None` (default) is the pre-policy serving path, bitwise
+    /// unchanged: no probes run and no request is rerouted.
+    pub policy: Option<PolicyConfig>,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +77,7 @@ impl Default for ServeConfig {
             max_batch_samples: 32,
             maintenance_age_bound: 0,
             workers: 0,
+            policy: None,
         }
     }
 }
@@ -87,6 +95,11 @@ pub enum Response {
     Calibration {
         sram_writes: u64,
         rram_writes: u64,
+        /// (before, after) accuracies on the health probe set; `Some`
+        /// only when the server runs with a policy — both probes
+        /// execute inside this work unit under the device lock, so
+        /// their place in the device's read stream is deterministic
+        probe: Option<(f64, f64)>,
         latency_ns: u64,
     },
     Drift {
@@ -96,6 +109,11 @@ pub enum Response {
     /// Execution failed (never for a request that passed submit-time
     /// validation; kept so a ticket always resolves).
     Failed { error: String, latency_ns: u64 },
+    /// The policy refused the request before it reached the queue
+    /// (device quarantined with no reroute target, maintenance dropped
+    /// or deferred). Synthesized by the replay client — rejected
+    /// requests never consume a ticket — so trace slots stay aligned.
+    Rejected { reason: String, latency_ns: u64 },
 }
 
 impl Response {
@@ -104,7 +122,8 @@ impl Response {
             Response::Inference { latency_ns, .. }
             | Response::Calibration { latency_ns, .. }
             | Response::Drift { latency_ns, .. }
-            | Response::Failed { latency_ns, .. } => *latency_ns,
+            | Response::Failed { latency_ns, .. }
+            | Response::Rejected { latency_ns, .. } => *latency_ns,
         }
     }
 }
@@ -121,6 +140,10 @@ pub struct Server {
     results: Results,
     next_ticket: AtomicU64,
     workers: usize,
+    /// fault-reactive policy knobs; `None` = pre-policy serving path
+    policy: Option<PolicyConfig>,
+    /// fixed probe batch, built once at deploy when a policy is armed
+    probe: Option<ProbeSet>,
 }
 
 impl std::fmt::Debug for Server {
@@ -143,7 +166,16 @@ impl Server {
             cfg.scenario,
             cfg.seed,
         )?;
+        let probe = match &cfg.policy {
+            Some(p) => Some(ProbeSet::new(
+                &fleet.session().dataset,
+                p.probe_samples,
+            )?),
+            None => None,
+        };
         Ok(Server {
+            policy: cfg.policy,
+            probe,
             queue: SubmitQueue::new(
                 cfg.n_devices,
                 cfg.queue_capacity,
@@ -174,6 +206,23 @@ impl Server {
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    pub fn policy(&self) -> Option<&PolicyConfig> {
+        self.policy.as_ref()
+    }
+
+    /// Rotate `device` out of service: its new submissions are rejected
+    /// while everything already queued drains FIFO and in-flight units
+    /// complete normally. Pure scheduling — the device's crossbars are
+    /// never touched, so the zero-RRAM-write contract is preserved by
+    /// construction.
+    pub fn quarantine(&self, device: usize) {
+        self.queue.drain(device);
+    }
+
+    pub fn is_quarantined(&self, device: usize) -> bool {
+        self.queue.is_draining(device)
     }
 
     /// Validate and enqueue a request for `device`; blocks while the
@@ -338,11 +387,31 @@ impl Server {
         if let [p] = items {
             match &p.kind {
                 RequestKind::Calibrate { n_samples, cfg } => {
+                    // with a policy armed, bracket the round with
+                    // recovery probes while still holding the device
+                    // lock: (before, after) land at fixed points of the
+                    // device's execution stream, so policy inputs are
+                    // identical no matter which worker runs this unit
+                    let pre = match &self.probe {
+                        Some(ps) => {
+                            Some(dev.probe(&session, &ps.x, &ps.labels)?)
+                        }
+                        None => None,
+                    };
                     let (sram, rram) =
                         dev.calibrate(&session, *n_samples, cfg)?;
+                    let probe = match (&self.probe, pre) {
+                        (Some(ps), Some(before)) => {
+                            let after =
+                                dev.probe(&session, &ps.x, &ps.labels)?;
+                            Some((before, after))
+                        }
+                        _ => None,
+                    };
                     return Ok(vec![(p.ticket, Response::Calibration {
                         sram_writes: sram,
                         rram_writes: rram,
+                        probe,
                         latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
                     })]);
                 }

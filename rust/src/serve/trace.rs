@@ -13,10 +13,12 @@ use std::time::Instant;
 use crate::anyhow::Result;
 
 use super::fleet::DeviceStats;
+use super::health::{FleetHealth, PolicyConfig};
 use super::queue::{Lane, RequestKind};
 use super::server::{Response, Server};
 use crate::calib::CalibConfig;
-use crate::metrics::LatencySummary;
+use crate::coordinator::PolicyDecision;
+use crate::metrics::{LatencySummary, RetryHistogram};
 use crate::util::rng::Rng;
 
 /// Knobs for the synthetic request mix.
@@ -79,6 +81,47 @@ pub fn synth_trace(spec: &TraceSpec, n_eval: usize) -> Vec<(usize, RequestKind)>
     out
 }
 
+/// What the fault-reactive policy did across one replay. `Some` only
+/// when the server runs with `ServeConfig::policy`; the no-policy
+/// report is untouched.
+#[derive(Debug, Clone)]
+pub struct PolicyReport {
+    /// devices still in service when the replay ended
+    pub active_devices: usize,
+    /// devices rotated out (deploy self-test or retries exhausted)
+    pub quarantined_devices: usize,
+    /// served / submitted inference requests; an idle trace reports
+    /// 1.0 while any device is active, 0.0 once the fleet is out
+    pub availability: f64,
+    /// inference requests that served on a healthy neighbour instead
+    /// of their (quarantined) addressed device
+    pub rerouted_requests: u64,
+    /// requests the policy refused outright (no active device, or
+    /// maintenance for a quarantined/budget-exhausted device)
+    pub rejected_requests: u64,
+    /// eval samples inside rerouted inference requests
+    pub degraded_samples: u64,
+    /// of those, predicted correctly (degraded-mode accuracy)
+    pub degraded_correct: u64,
+    /// calibrate opportunities the cadence deferred or backed off
+    pub maintenance_deferred: u64,
+    /// maintenance dropped because the device is out of service
+    pub maintenance_dropped: u64,
+    /// calibration rounds by retry depth
+    pub retries: RetryHistogram,
+}
+
+impl PolicyReport {
+    /// Accuracy over rerouted (degraded-mode) traffic; NaN when no
+    /// request was rerouted.
+    pub fn degraded_accuracy(&self) -> f64 {
+        if self.degraded_samples == 0 {
+            return f64::NAN;
+        }
+        self.degraded_correct as f64 / self.degraded_samples as f64
+    }
+}
+
 /// Everything a replay measured.
 #[derive(Debug, Clone)]
 pub struct TraceReport {
@@ -93,6 +136,8 @@ pub struct TraceReport {
     pub rram_writes_in_field: u64,
     pub sram_writes: u64,
     pub failed: usize,
+    /// fault-reactive policy outcomes; `None` without a policy
+    pub policy: Option<PolicyReport>,
 }
 
 /// Replay `trace` through the server's dispatch workers and collect the
@@ -104,16 +149,26 @@ pub fn replay_collect(
     // lint:allow(R7) -- wall-clock throughput measurement for the replay
     // report; predictions and orderings never depend on it
     let t0 = Instant::now();
-    let responses: Result<Vec<Response>> = server.serve(|srv| {
-        // submit everything (backpressure via the bounded queue), then
-        // redeem tickets in order; workers drain concurrently
-        let mut tickets = Vec::with_capacity(trace.len());
-        for (device, kind) in trace {
-            tickets.push(srv.submit(*device, kind.clone())?);
+    let (responses, policy) = match server.policy().copied() {
+        // pre-policy path, byte-for-byte the historical replay
+        None => {
+            let responses: Result<Vec<Response>> = server.serve(|srv| {
+                // submit everything (backpressure via the bounded
+                // queue), then redeem tickets in order; workers drain
+                // concurrently
+                let mut tickets = Vec::with_capacity(trace.len());
+                for (device, kind) in trace {
+                    tickets.push(srv.submit(*device, kind.clone())?);
+                }
+                Ok(tickets.into_iter().map(|t| srv.wait(t)).collect())
+            });
+            (responses?, None)
         }
-        Ok(tickets.into_iter().map(|t| srv.wait(t)).collect())
-    });
-    let responses = responses?;
+        Some(pc) => {
+            let (responses, report) = replay_policy(server, trace, &pc)?;
+            (responses, Some(report))
+        }
+    };
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut infer_ns = Vec::new();
@@ -135,6 +190,9 @@ pub fn replay_collect(
                     Lane::Maintenance => maint_ns.push(*latency_ns),
                 }
             }
+            // policy refusals never executed: they carry no latency
+            // and are accounted in the policy report, not as failures
+            Response::Rejected { .. } => {}
         }
     }
     let devices = server.fleet().stats();
@@ -152,8 +210,198 @@ pub fn replay_collect(
         sram_writes: devices.iter().map(|d| d.sram_writes).sum(),
         devices,
         failed,
+        policy,
     };
     Ok((report, responses))
+}
+
+/// One replay slot while the policy loop is in flight: either a ticket
+/// still to redeem, or a response the policy resolved on the spot
+/// (synchronous calibration rounds, synthesized rejections).
+enum Slot {
+    Pending(super::queue::Ticket),
+    Done(Response),
+}
+
+/// Replay under the fault-reactive policy. Every policy decision —
+/// routing, cadence, retry/backoff, quarantine — is made **on this
+/// client thread in trace order**, and each calibration round is waited
+/// on synchronously (per-device FIFO guarantees the round, and the
+/// probes inside it, completed before the wait returns), so the whole
+/// decision timeline is a pure function of the trace and the seeds:
+/// bitwise identical across worker counts, reruns, and arena modes.
+/// Inference and drift traffic still pipelines through the workers.
+fn replay_policy(
+    server: &Server,
+    trace: &[(usize, RequestKind)],
+    pc: &PolicyConfig,
+) -> Result<(Vec<Response>, PolicyReport)> {
+    let mut health = FleetHealth::new(server.fleet(), pc.adaptive)?;
+    // deploy self-test verdicts: drain the born-unrecoverable devices
+    // before any traffic is accepted for them
+    for rec in health.records() {
+        if !rec.is_active() {
+            server.quarantine(rec.device);
+        }
+    }
+    let mut retries = RetryHistogram::new();
+    let mut rerouted_requests = 0u64;
+    let mut rejected_requests = 0u64;
+    let mut maintenance_deferred = 0u64;
+    let mut maintenance_dropped = 0u64;
+    let mut infer_total = 0u64;
+    let mut infer_served = 0u64;
+    // which slots carry rerouted inference (degraded-mode accounting)
+    let mut rerouted_slot: Vec<bool> = vec![false; trace.len()];
+
+    let responses: Result<Vec<Response>> = server.serve(|srv| {
+        let mut slots: Vec<Slot> = Vec::with_capacity(trace.len());
+        for (i, (device, kind)) in trace.iter().enumerate() {
+            let slot = match kind {
+                RequestKind::Infer { .. } => {
+                    infer_total += 1;
+                    match health.route(*device) {
+                        Some(target) => {
+                            infer_served += 1;
+                            if target != *device {
+                                rerouted_requests += 1;
+                                rerouted_slot[i] = true;
+                            }
+                            Slot::Pending(srv.submit(target, kind.clone())?)
+                        }
+                        None => {
+                            rejected_requests += 1;
+                            Slot::Done(Response::Rejected {
+                                reason: "no active device (fleet out of \
+                                         service)"
+                                    .to_string(),
+                                latency_ns: 0,
+                            })
+                        }
+                    }
+                }
+                RequestKind::Advance { hours } => {
+                    if health.is_active(*device) {
+                        health.on_advance(*device, *hours);
+                        Slot::Pending(srv.submit(*device, kind.clone())?)
+                    } else {
+                        rejected_requests += 1;
+                        maintenance_dropped += 1;
+                        Slot::Done(Response::Rejected {
+                            reason: format!("device {device} quarantined"),
+                            latency_ns: 0,
+                        })
+                    }
+                }
+                RequestKind::Calibrate { .. } => {
+                    // each calibrate opportunity is one policy epoch
+                    match health.decide(*device) {
+                        PolicyDecision::Calibrate { attempt } => {
+                            retries.record(attempt);
+                            let t = srv.submit(*device, kind.clone())?;
+                            // synchronous: later decisions need this
+                            // round's probe verdict
+                            let resp = srv.wait(t);
+                            if let Response::Calibration {
+                                probe: Some((_, after)),
+                                ..
+                            } = &resp
+                            {
+                                if health
+                                    .record_outcome(*device, *after)
+                                    .is_some()
+                                {
+                                    srv.quarantine(*device);
+                                }
+                            }
+                            Slot::Done(resp)
+                        }
+                        PolicyDecision::Defer => {
+                            rejected_requests += 1;
+                            maintenance_deferred += 1;
+                            Slot::Done(Response::Rejected {
+                                reason: "calibration deferred (cadence)"
+                                    .to_string(),
+                                latency_ns: 0,
+                            })
+                        }
+                        PolicyDecision::Backoff { resume_epoch } => {
+                            rejected_requests += 1;
+                            maintenance_deferred += 1;
+                            Slot::Done(Response::Rejected {
+                                reason: format!(
+                                    "calibration in backoff until epoch \
+                                     {resume_epoch}"
+                                ),
+                                latency_ns: 0,
+                            })
+                        }
+                        PolicyDecision::BudgetExhausted => {
+                            rejected_requests += 1;
+                            maintenance_dropped += 1;
+                            Slot::Done(Response::Rejected {
+                                reason: "maintenance budget exhausted"
+                                    .to_string(),
+                                latency_ns: 0,
+                            })
+                        }
+                        PolicyDecision::Quarantined => {
+                            rejected_requests += 1;
+                            maintenance_dropped += 1;
+                            Slot::Done(Response::Rejected {
+                                reason: format!("device {device} quarantined"),
+                                latency_ns: 0,
+                            })
+                        }
+                    }
+                }
+            };
+            slots.push(slot);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| match s {
+                Slot::Pending(t) => srv.wait(t),
+                Slot::Done(r) => r,
+            })
+            .collect())
+    });
+    let responses = responses?;
+
+    let mut degraded_samples = 0u64;
+    let mut degraded_correct = 0u64;
+    for (r, &rerouted) in responses.iter().zip(&rerouted_slot) {
+        if !rerouted {
+            continue;
+        }
+        if let Response::Inference { predictions, correct, .. } = r {
+            degraded_samples += predictions.len() as u64;
+            degraded_correct += *correct as u64;
+        }
+    }
+    let active_devices = health.active_count();
+    let availability = if infer_total == 0 {
+        if active_devices > 0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        infer_served as f64 / infer_total as f64
+    };
+    let report = PolicyReport {
+        active_devices,
+        quarantined_devices: health.quarantined_count(),
+        availability,
+        rerouted_requests,
+        rejected_requests,
+        degraded_samples,
+        degraded_correct,
+        maintenance_deferred,
+        maintenance_dropped,
+        retries,
+    };
+    Ok((responses, report))
 }
 
 /// Replay without keeping per-ticket responses.

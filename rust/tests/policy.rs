@@ -1,0 +1,315 @@
+//! Fault-reactive fleet policy integration tests: the retry/backoff
+//! timeline is pinned epoch by epoch, quarantine reroutes traffic to
+//! healthy neighbours with bitwise-deterministic results across worker
+//! counts / thread budgets / reruns / arena modes, and a fleet whose
+//! every device fails the deployment self-test reports zero
+//! availability without panicking or deadlocking.
+//!
+//! The policy replay makes every decision on the client thread in
+//! trace order and counts time in simulated epochs (calibrate
+//! opportunities), so whole timelines — not just aggregates — are pure
+//! functions of the trace and the seeds.
+
+use rimc_dora::calib::CalibConfig;
+use rimc_dora::coordinator::{AdaptiveConfig, Engine};
+use rimc_dora::serve::{
+    replay_collect, synth_trace, PolicyConfig, RequestKind, Response,
+    ServeConfig, Server, TraceSpec,
+};
+use rimc_dora::util::arena;
+use rimc_dora::util::threads::set_threads;
+
+fn small_calib() -> CalibConfig {
+    CalibConfig {
+        max_steps_per_layer: 10,
+        ..CalibConfig::default()
+    }
+}
+
+fn calibrate_req() -> RequestKind {
+    RequestKind::Calibrate {
+        n_samples: 6,
+        cfg: small_calib(),
+    }
+}
+
+/// With a recovery floor no probe can reach (accuracy is in [0, 1],
+/// the floor is 2.0) every calibration round fails, so the adaptive
+/// policy must walk its documented timeline exactly: calibrate at
+/// epoch 1, back off 2 epochs, retry at 3, back off 4 epochs, retry at
+/// 7, then quarantine — with the deferred/dropped split and the retry
+/// histogram pinned.
+#[test]
+fn retry_backoff_timeline_is_pinned() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let policy = PolicyConfig {
+        adaptive: AdaptiveConfig {
+            recovery_floor: 2.0, // unreachable: every round "fails"
+            ..AdaptiveConfig::default()
+        },
+        probe_samples: 8,
+    };
+    let server = Server::new(session.clone(), &ServeConfig {
+        n_devices: 2,
+        workers: 2,
+        policy: Some(policy),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+
+    // ten calibrate opportunities for device 0 = policy epochs 1..=10
+    let trace: Vec<(usize, RequestKind)> =
+        (0..10).map(|_| (0, calibrate_req())).collect();
+    let (report, responses) = replay_collect(&server, &trace).unwrap();
+    let pol = report.policy.as_ref().expect("policy report");
+
+    // epochs that actually ran a round (attempt 0, retry 1, retry 2)
+    let ran: Vec<usize> = responses
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| {
+            matches!(r, Response::Calibration { .. }).then_some(i + 1)
+        })
+        .collect();
+    assert_eq!(ran, vec![1, 3, 7], "backoff timeline moved");
+    for (i, r) in responses.iter().enumerate() {
+        match r {
+            Response::Calibration { probe, .. } => {
+                let (_, after) = probe.expect("policy round must probe");
+                assert!(after < 2.0, "epoch {}: probe beat the floor", i + 1);
+            }
+            Response::Rejected { .. } => {}
+            other => panic!("epoch {}: unexpected {other:?}", i + 1),
+        }
+    }
+
+    // histogram: one scheduled round, one first retry, one second retry
+    let mut want = [0u64; rimc_dora::metrics::RETRY_BINS];
+    (want[0], want[1], want[2]) = (1, 1, 1);
+    assert_eq!(pol.retries.bins(), &want);
+    // backoff epochs 2, 4, 5, 6 defer; quarantined epochs 8..=10 drop
+    assert_eq!(pol.maintenance_deferred, 4);
+    assert_eq!(pol.maintenance_dropped, 3);
+    assert_eq!(pol.quarantined_devices, 1);
+    assert_eq!(pol.active_devices, 1);
+    assert!(server.is_quarantined(0));
+    assert!(!server.is_quarantined(1));
+    // no inference submitted: availability is the fleet-alive indicator
+    assert_eq!(pol.availability, 1.0);
+    assert_eq!(report.failed, 0);
+    // quarantine is pure scheduling: the crossbars were never written
+    assert_eq!(report.rram_writes_in_field, 0);
+}
+
+/// One replay's observable bits, wall-clock excluded: per-slot response
+/// class with predictions, the policy ledger, and per-device end state.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    slots: Vec<(u8, Vec<usize>, usize)>,
+    rerouted: u64,
+    rejected: u64,
+    degraded: (u64, u64),
+    active: usize,
+    quarantined: usize,
+    availability_bits: u64,
+    devices: Vec<(u64, u64, u64, u64, u64, u64, u64)>,
+}
+
+/// A device that fails its first (and only allowed) round is rotated
+/// out, and every inference addressed to it serves on its neighbour.
+/// The whole degraded-mode story — routing, predictions, accuracy
+/// ledger, device end state — must be bitwise identical across
+/// dispatch worker counts, the shared `--threads` budget (1/2/0),
+/// reruns, and arena on/off.
+#[test]
+fn rerouted_traffic_is_bitwise_deterministic() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let n_eval = session.dataset.n_eval();
+    // calibrate dev0 once (fails, max_retries 0 -> quarantine), then
+    // alternate inference between the quarantined device and its
+    // healthy neighbour
+    let mut trace: Vec<(usize, RequestKind)> = vec![(0, calibrate_req())];
+    for i in 0..12usize {
+        trace.push((i % 2, RequestKind::Infer {
+            samples: vec![i % n_eval, (i * 3 + 1) % n_eval],
+        }));
+    }
+
+    let run = |workers: usize, threads: usize, arena_on: bool| {
+        arena::set_enabled(arena_on);
+        set_threads(threads);
+        let server = Server::new(session.clone(), &ServeConfig {
+            n_devices: 2,
+            workers,
+            policy: Some(PolicyConfig {
+                adaptive: AdaptiveConfig {
+                    recovery_floor: 2.0,
+                    max_retries: 0, // first failure quarantines
+                    ..AdaptiveConfig::default()
+                },
+                probe_samples: 8,
+            }),
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let (report, responses) = replay_collect(&server, &trace).unwrap();
+        set_threads(0);
+        arena::set_enabled(true);
+
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.rram_writes_in_field, 0);
+        let pol = report.policy.as_ref().expect("policy report");
+        // the 6 inferences addressed to dev0 rerouted to dev1, 2 eval
+        // samples each; nothing was refused
+        assert_eq!(pol.rerouted_requests, 6);
+        assert_eq!(pol.degraded_samples, 12);
+        assert!(pol.degraded_accuracy().is_finite());
+        assert_eq!(pol.availability, 1.0);
+
+        Fingerprint {
+            slots: responses
+                .iter()
+                .map(|r| match r {
+                    Response::Inference {
+                        predictions, correct, ..
+                    } => (0, predictions.clone(), *correct),
+                    Response::Calibration { .. } => (1, Vec::new(), 0),
+                    Response::Drift { .. } => (2, Vec::new(), 0),
+                    Response::Rejected { .. } => (3, Vec::new(), 0),
+                    Response::Failed { .. } => (4, Vec::new(), 0),
+                })
+                .collect(),
+            rerouted: pol.rerouted_requests,
+            rejected: pol.rejected_requests,
+            degraded: (pol.degraded_samples, pol.degraded_correct),
+            active: pol.active_devices,
+            quarantined: pol.quarantined_devices,
+            availability_bits: pol.availability.to_bits(),
+            devices: report
+                .devices
+                .iter()
+                .map(|d| {
+                    (
+                        d.hours.to_bits(),
+                        d.inferred,
+                        d.correct,
+                        d.calibrations,
+                        d.sram_writes,
+                        d.rram_reads,
+                        d.rram_writes_in_field,
+                    )
+                })
+                .collect(),
+        }
+    };
+
+    // serial fresh-allocation reference, then every knob that must not
+    // matter: worker count, thread budget (1/2/0 = auto), arena reuse,
+    // and a straight rerun
+    let reference = run(1, 1, false);
+    for (workers, threads, arena_on) in
+        [(2, 2, true), (4, 0, true), (2, 2, true), (1, 1, true)]
+    {
+        let got = run(workers, threads, arena_on);
+        assert_eq!(
+            reference, got,
+            "policy replay diverged at workers={workers} \
+             threads={threads} arena={arena_on}"
+        );
+    }
+}
+
+/// A stuck-cell threshold below zero fails every device's deployment
+/// self-test: the whole fleet quarantines before the first request.
+/// The replay must refuse everything gracefully — zero availability,
+/// zero served samples, no panic, no deadlock, no RRAM writes.
+#[test]
+fn all_quarantined_fleet_reports_zero_availability() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let server = Server::new(session.clone(), &ServeConfig {
+        n_devices: 2,
+        workers: 2,
+        policy: Some(PolicyConfig {
+            adaptive: AdaptiveConfig {
+                // any stuck fraction (including 0.0) exceeds this
+                stuck_quarantine_fraction: -1.0,
+                ..AdaptiveConfig::default()
+            },
+            probe_samples: 8,
+        }),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let spec = TraceSpec {
+        n_requests: 30,
+        n_devices: 2,
+        max_infer_samples: 4,
+        advance_every: 7,
+        calibrate_every: 11,
+        calib_samples: 6,
+        calib_cfg: small_calib(),
+        ..TraceSpec::default()
+    };
+    let trace = synth_trace(&spec, session.dataset.n_eval());
+    let (report, responses) = replay_collect(&server, &trace).unwrap();
+
+    assert!(server.is_quarantined(0) && server.is_quarantined(1));
+    for (i, r) in responses.iter().enumerate() {
+        assert!(
+            matches!(r, Response::Rejected { .. }),
+            "request {i} was not refused: {r:?}"
+        );
+    }
+    let pol = report.policy.as_ref().expect("policy report");
+    assert_eq!(pol.active_devices, 0);
+    assert_eq!(pol.quarantined_devices, 2);
+    assert_eq!(pol.availability, 0.0);
+    assert_eq!(pol.rejected_requests, trace.len() as u64);
+    assert_eq!(report.samples_inferred, 0);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.rram_writes_in_field, 0);
+    // the devices were deployed but never touched by field traffic
+    for d in &report.devices {
+        assert_eq!(d.inferred, 0);
+        assert_eq!(d.calibrations, 0);
+    }
+}
+
+/// The no-policy configuration must stay byte-identical to the
+/// pre-policy serving path: `policy: None` produces a report with no
+/// policy section and no Rejected responses, whatever the trace.
+#[test]
+fn no_policy_baseline_is_unchanged() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let server = Server::new(session.clone(), &ServeConfig {
+        n_devices: 2,
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    assert!(server.policy().is_none());
+    let spec = TraceSpec {
+        n_requests: 20,
+        n_devices: 2,
+        max_infer_samples: 4,
+        advance_every: 9,
+        calibrate_every: 13,
+        calib_samples: 6,
+        calib_cfg: small_calib(),
+        ..TraceSpec::default()
+    };
+    let trace = synth_trace(&spec, session.dataset.n_eval());
+    let (report, responses) = replay_collect(&server, &trace).unwrap();
+    assert!(report.policy.is_none());
+    assert_eq!(report.failed, 0);
+    for r in &responses {
+        assert!(!matches!(r, Response::Rejected { .. }));
+        if let Response::Calibration { probe, .. } = r {
+            assert!(probe.is_none(), "no policy, no probes");
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! R6 fixture: a "self-healing" fleet policy that rewrites RRAM from
+//! serve/. Quarantine must be pure scheduling — drain the lane and
+//! reroute traffic, never touch the crossbars — so both the direct
+//! healer and the transitive spare-rotation path must be flagged by
+//! the call-graph taint pass.
+
+/// Direct violation: the policy "heals" a stuck cell by reprogramming
+/// it in the field.
+pub fn heal_stuck_cells(row: usize, col: usize, g: f64) {
+    crate::rram::program_cell(row, col, g);
+}
+
+/// Helper that rewrites the whole array; seed for the transitive case.
+fn rewrite_array(g: f64) {
+    crate::rram::program_weights(g);
+}
+
+/// Transitive violation: rotating a spare device in via
+/// `rewrite_array` reaches the write API through one hop.
+pub fn rotate_spare_in(g: f64) {
+    rewrite_array(g);
+}

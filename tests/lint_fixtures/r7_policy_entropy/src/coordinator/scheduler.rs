@@ -1,0 +1,13 @@
+//! R7 fixture: an adaptive recalibration policy that jitters its retry
+//! backoff from wall-clock entropy. Policy time is counted in
+//! simulated epochs and must replay bit-for-bit across reruns and
+//! worker counts; an `Instant`-derived jitter makes every timeline
+//! different, so the linter must flag it.
+
+/// Exponential backoff with a wall-clock jitter term: nondeterministic
+/// scheduling, exactly what the policy layer may never do.
+pub fn backoff_epochs_with_jitter(base: u64, failures: u32) -> u64 {
+    let backoff = base.max(1) << failures.saturating_sub(1).min(8);
+    let jitter = std::time::Instant::now().elapsed().subsec_nanos() as u64;
+    backoff + (jitter & 3)
+}

@@ -97,8 +97,28 @@ class FixtureTests(unittest.TestCase):
                 f"stdout:\n{proc.stdout}",
             )
 
+    def test_r6_policy_write(self):
+        # a "self-healing" policy that rewrites RRAM from serve/:
+        # quarantine must stay pure scheduling, so the direct healer,
+        # the rewrite helper and the transitive rotation path are all
+        # tainted
+        self.assert_only_rule("r6_policy_write", "R6", min_findings=3)
+        proc = run_lint(FIXTURES / "r6_policy_write")
+        for fn in ("heal_stuck_cells", "rewrite_array", "rotate_spare_in"):
+            self.assertIn(
+                fn,
+                proc.stdout,
+                f"r6_policy_write: fn `{fn}` missing from R6 report\n"
+                f"stdout:\n{proc.stdout}",
+            )
+
     def test_r7_clock(self):
         self.assert_only_rule("r7_clock", "R7")
+
+    def test_r7_policy_entropy(self):
+        # wall-clock jitter in the retry-backoff schedule: policy time
+        # is simulated epochs, so R7 fires (and nothing else)
+        self.assert_only_rule("r7_policy_entropy", "R7")
 
     def test_r7_scenario_entropy(self):
         # wall-clock fault seeding in the scenario engine: R7 fires (and
