@@ -66,11 +66,17 @@ bench-json:
 	cd $(CARGO_DIR) && mv BENCH_serve_policy.json BENCH_serve_policy_serial.json
 	cd $(CARGO_DIR) && cargo run --release --bin rimc -- serve \
 	  --scenario full-stack --policy adaptive --smoke --threads 2
+	cd $(CARGO_DIR) && cargo run --release --bin rimc -- serve \
+	  --cross-batch --smoke --threads 1
+	cd $(CARGO_DIR) && mv BENCH_serve_batched.json BENCH_serve_batched_serial.json
+	cd $(CARGO_DIR) && cargo run --release --bin rimc -- serve \
+	  --cross-batch --smoke --threads 2
 	cd $(CARGO_DIR) && python3 ../tools/bench_check.py \
 	  BENCH_runtime_hotpath.json BENCH_runtime_hotpath_serial.json \
 	  BENCH_serving_throughput.json BENCH_scenarios.json \
 	  BENCH_scenarios_serial.json BENCH_scenarios_grid.json \
 	  BENCH_serve_policy.json BENCH_serve_policy_serial.json \
+	  BENCH_serve_batched.json BENCH_serve_batched_serial.json \
 	  --baselines ../bench_baselines
 
 # Promote the last bench-json run's results to the committed baselines
@@ -84,6 +90,8 @@ bench-baseline:
 	cp $(CARGO_DIR)/BENCH_scenarios_grid.json bench_baselines/scenarios_grid.json
 	cp $(CARGO_DIR)/BENCH_serve_policy.json bench_baselines/serve_policy.json
 	cp $(CARGO_DIR)/BENCH_serve_policy_serial.json bench_baselines/serve_policy_serial.json
+	cp $(CARGO_DIR)/BENCH_serve_batched.json bench_baselines/serve_batched.json
+	cp $(CARGO_DIR)/BENCH_serve_batched_serial.json bench_baselines/serve_batched_serial.json
 
 # AOT HLO artifacts for the optional PJRT backend (`--features pjrt`).
 # Requires python3 + jax; errors out with instructions when absent.

@@ -1,13 +1,15 @@
 //! Serving-layer throughput bench: replays the same synthetic request
-//! trace through the server twice — once with inference micro-batching
-//! enabled (requests coalesced up to the eval batch) and once
-//! dispatching one request at a time — and reports throughput, the
-//! batched/unbatched speedup, and per-lane latency percentiles.
+//! trace through the server three times — dispatching one request at a
+//! time, with same-device inference micro-batching (requests coalesced
+//! up to the eval batch), and with cross-device batching + the
+//! nonblocking submit/poll client — and reports throughput, the
+//! speedups, and per-lane latency percentiles.
 //!
-//! Correctness is gated, not just timed: the two replays run on
+//! Correctness is gated, not just timed: the replays run on
 //! identically-seeded fresh fleets, so every inference response must be
 //! bitwise identical between them; any divergence panics (and fails the
-//! CI smoke run).
+//! CI smoke run). Outside --smoke, cross-device batched throughput must
+//! additionally beat the same-device micro-batched path outright.
 //!
 //! Flags (after `cargo bench --bench serving_throughput --`):
 //!   --smoke       nano fleet, short trace (CI gate)
@@ -44,16 +46,22 @@ fn main() {
 
     let mut results = Vec::new();
     let mut responses: Vec<Vec<Response>> = Vec::new();
-    for (label, max_batch) in [
-        ("one-request-at-a-time", 1),
-        ("micro-batched", session.spec.eval_batch),
+    for (label, max_batch, cross_batch) in [
+        ("one-request-at-a-time", 1, false),
+        ("micro-batched", session.spec.eval_batch, false),
+        ("cross-device-batched", session.spec.eval_batch, true),
     ] {
         // fresh fleet per run, same seeds: identical device state, so
-        // responses must match bitwise across batching modes
+        // responses must match bitwise across batching modes. The
+        // cross-device mode also switches to the nonblocking client —
+        // the in-flight window is what keeps several devices' requests
+        // queued at once for the batcher to stack.
         let server = Server::new(session.clone(), &ServeConfig {
             n_devices: devices,
             max_batch_samples: max_batch,
             workers,
+            cross_batch,
+            max_in_flight: if cross_batch { 64 } else { 0 },
             ..ServeConfig::default()
         })
         .unwrap();
@@ -77,23 +85,30 @@ fn main() {
         responses.push(resp);
     }
 
-    // correctness gate: batching must not change a single prediction
-    for (i, (a, b)) in responses[0].iter().zip(&responses[1]).enumerate() {
-        match (a, b) {
-            (
-                Response::Inference { predictions: pa, correct: ca, .. },
-                Response::Inference { predictions: pb, correct: cb, .. },
-            ) => {
-                assert_eq!(
-                    (pa, ca),
-                    (pb, cb),
-                    "request {i}: micro-batched predictions diverge"
-                );
+    // correctness gate: no batching mode may change a single prediction
+    for m in 1..responses.len() {
+        let label = results[m].0;
+        for (i, (a, b)) in responses[0].iter().zip(&responses[m]).enumerate()
+        {
+            match (a, b) {
+                (
+                    Response::Inference { predictions: pa, correct: ca, .. },
+                    Response::Inference { predictions: pb, correct: cb, .. },
+                ) => {
+                    assert_eq!(
+                        (pa, ca),
+                        (pb, cb),
+                        "request {i}: {label} predictions diverge"
+                    );
+                }
+                (Response::Inference { .. }, _)
+                | (_, Response::Inference { .. }) => {
+                    panic!(
+                        "request {i}: response class diverges in {label}"
+                    )
+                }
+                _ => {}
             }
-            (Response::Inference { .. }, _) | (_, Response::Inference { .. }) => {
-                panic!("request {i}: response class diverges across modes")
-            }
-            _ => {}
         }
     }
     println!("determinism: batched == unbatched predictions, bitwise");
@@ -119,6 +134,29 @@ fn main() {
          (coalescing up to {} samples per dispatch)",
         session.spec.eval_batch
     );
+    let cross = &results[2].1;
+    println!(
+        "cross-device batching: {:.1} req/s, {} of {} work units spanned \
+         multiple devices (widest {}), {} backpressure waits, queue depth \
+         p99 {:.0}",
+        cross.throughput_rps,
+        cross.dispatch.cross_units,
+        cross.dispatch.units,
+        cross.dispatch.max_unit_devices,
+        cross.backpressure_waits,
+        cross.queue_depth.p99(),
+    );
+    // the tentpole claim, asserted outright at full scale (smoke traces
+    // are too short for a stable timing comparison)
+    if !smoke {
+        assert!(
+            cross.throughput_rps > results[1].1.throughput_rps,
+            "cross-device batched throughput ({:.1} req/s) did not beat \
+             the same-device micro-batched path ({:.1} req/s)",
+            cross.throughput_rps,
+            results[1].1.throughput_rps,
+        );
+    }
 
     // machine-readable trajectory: one record per dispatch mode
     let mut json_records: Vec<BenchRecord> = results

@@ -191,6 +191,7 @@ SUBCOMMANDS
             (Fig. 1c; `adaptive` adds retry/backoff + budget decisions)
   serve     [--devices N] [--requests N] [--workers N] [--drift R]
             [--batch SAMPLES] [--queue-cap N] [--age-bound K] [--smoke]
+            [--cross-batch] [--max-in-flight N]
             [--scenario drift-only|lognormal|stuck-at|full-stack]
             [--policy none|adaptive] [--probe-samples N]
             [--recovery-floor F] [--max-retries N] [--stuck-threshold F]
@@ -200,6 +201,15 @@ SUBCOMMANDS
             on `small`; --smoke shrinks to nano scale; --batch 1
             disables inference micro-batching; --age-bound K promotes
             maintenance passed over for K dispatches, 0 = strict;
+            --cross-batch stacks head-of-line inference runs from
+            different devices into one backend dispatch, replays a
+            same-device reference fleet, asserts the predictions are
+            bitwise identical and emits BENCH_serve_batched.json
+            (cross-batch-replay speedup + queue-depth-p99);
+            --max-in-flight N drives the replay through the nonblocking
+            submit/poll client with at most N outstanding tickets
+            (0 = blocking client; defaults to 64 under --cross-batch)
+            and reports queue-depth percentiles + backpressure waits;
             --scenario deploys the fleet under a non-ideality mix;
             --policy adaptive tracks per-device health, retries failed
             recalibrations with exponential backoff, quarantines
@@ -257,6 +267,17 @@ mod tests {
             "--stuck-threshold", "--grid",
         ] {
             assert!(HELP.contains(flag), "HELP missing policy flag `{flag}`");
+        }
+        // cross-device batching + nonblocking client surface
+        // (DESIGN.md §11)
+        for flag in [
+            "--cross-batch", "--max-in-flight", "BENCH_serve_batched",
+            "queue-depth-p99",
+        ] {
+            assert!(
+                HELP.contains(flag),
+                "HELP missing cross-batch surface `{flag}`"
+            );
         }
     }
 }
@@ -508,7 +529,8 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use rimc_dora::serve::{
-        replay, synth_trace, PolicyConfig, ServeConfig, Server, TraceSpec,
+        replay_collect, synth_trace, PolicyConfig, Response, ServeConfig,
+        Server, TraceSpec,
     };
 
     let smoke = args.bool_or("smoke", false)?;
@@ -530,6 +552,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }),
         p => bail!("--policy {p}: expected none|adaptive"),
     };
+    let cross_batch = args.bool_or("cross-batch", false)?;
+    if cross_batch && policy.is_some() {
+        bail!(
+            "--cross-batch is a no-policy replay mode (the comparison \
+             fleet would double every policy decision); drop --policy"
+        );
+    }
+    // cross-batching is pointless without pipelining: the nonblocking
+    // window is what lets several devices' requests be queued at once
+    let max_in_flight = args
+        .usize_or("max-in-flight", if cross_batch { 64 } else { 0 })?;
     let cfg = ServeConfig {
         n_devices: args.usize_or("devices", 8)?,
         drift_rel: args.f64_or("drift", 0.2)?,
@@ -541,6 +574,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         maintenance_age_bound: args.usize_or("age-bound", 0)?,
         workers: args.usize_or("workers", 0)?,
         policy,
+        cross_batch,
+        max_in_flight,
     };
     let spec = TraceSpec {
         n_requests: args.usize_or("requests", if smoke { 120 } else { 1000 })?,
@@ -558,17 +593,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         100.0 * cfg.drift_rel,
         cfg.scenario.name()
     );
-    let server = Server::new(session, &cfg)?;
+    let server = Server::new(session.clone(), &cfg)?;
     let trace = synth_trace(&spec, server.session().dataset.n_eval());
     println!(
         "replaying {} requests over {} dispatch workers \
-         (micro-batch cap {} samples, queue cap {})...",
+         (micro-batch cap {} samples, queue cap {}{}{})...",
         trace.len(),
         server.workers(),
         cfg.max_batch_samples,
-        cfg.queue_capacity
+        cfg.queue_capacity,
+        if cfg.cross_batch { ", cross-device batching" } else { "" },
+        if cfg.max_in_flight > 0 {
+            format!(", in-flight window {}", cfg.max_in_flight)
+        } else {
+            String::new()
+        },
     );
-    let report = replay(&server, &trace)?;
+    let (report, responses) = replay_collect(&server, &trace)?;
 
     // empty lanes (e.g. short traces with no maintenance) report "-"
     let ms = |ns: f64| {
@@ -662,6 +703,123 @@ fn cmd_serve(args: &Args) -> Result<()> {
          — calibration stayed SRAM-only",
         report.sram_writes
     );
+    // finite-or-dash for the depth stats (NaN when no samples landed)
+    let num = |v: f64| {
+        if v.is_finite() {
+            format!("{v:.1}")
+        } else {
+            "-".to_string()
+        }
+    };
+    if cfg.max_in_flight > 0 {
+        print_table(
+            "nonblocking client — admission & backpressure",
+            &["window", "waits", "depth mean", "depth p50", "depth p99",
+              "depth max"],
+            &[vec![
+                cfg.max_in_flight.to_string(),
+                report.backpressure_waits.to_string(),
+                num(report.queue_depth.mean()),
+                num(report.queue_depth.p50()),
+                num(report.queue_depth.p99()),
+                num(report.queue_depth.max()),
+            ]],
+        );
+    }
+    if cfg.cross_batch {
+        let d = report.dispatch;
+        println!(
+            "dispatch: {} work units, {} cross-device (widest spanned {} \
+             devices), {} requests served inside multi-request units",
+            d.units, d.cross_units, d.max_unit_devices, d.batched_requests
+        );
+        println!(
+            "replaying the same trace on a same-device reference fleet \
+             (cross-batching off) for the bitwise gate..."
+        );
+        let ref_cfg = ServeConfig {
+            cross_batch: false,
+            max_in_flight: 0,
+            ..cfg.clone()
+        };
+        let ref_server = Server::new(session, &ref_cfg)?;
+        let (ref_report, ref_responses) =
+            replay_collect(&ref_server, &trace)?;
+        for (i, (a, b)) in responses.iter().zip(&ref_responses).enumerate() {
+            match (a, b) {
+                (
+                    Response::Inference {
+                        predictions: pa, correct: ca, ..
+                    },
+                    Response::Inference {
+                        predictions: pb, correct: cb, ..
+                    },
+                ) => {
+                    if pa != pb || ca != cb {
+                        bail!(
+                            "request {i}: cross-batched predictions \
+                             diverged from the same-device reference"
+                        );
+                    }
+                }
+                (Response::Inference { .. }, _)
+                | (_, Response::Inference { .. }) => bail!(
+                    "request {i} resolved to different response kinds \
+                     across the two replays"
+                ),
+                _ => {}
+            }
+        }
+        for (a, b) in report.devices.iter().zip(&ref_report.devices) {
+            if a.hours.to_bits() != b.hours.to_bits()
+                || a.calibrations != b.calibrations
+                || a.inferred != b.inferred
+                || a.correct != b.correct
+                || a.sram_writes != b.sram_writes
+                || a.rram_writes_in_field != b.rram_writes_in_field
+                || a.rram_reads != b.rram_reads
+            {
+                bail!(
+                    "device {} counters diverged from the same-device \
+                     reference",
+                    a.id
+                );
+            }
+        }
+        println!(
+            "bitwise gate: cross-batched == same-device reference on \
+             every prediction and every device counter"
+        );
+        let speedup =
+            report.throughput_rps / ref_report.throughput_rps.max(1e-12);
+        println!(
+            "throughput: {:.1} req/s cross-batched vs {:.1} req/s \
+             same-device reference ({speedup:.2}x)",
+            report.throughput_rps, ref_report.throughput_rps
+        );
+        use rimc_dora::util::bench::{write_bench_json, BenchRecord};
+        let threads = rimc_dora::util::threads::threads();
+        let records = [
+            BenchRecord {
+                op: "cross-batch-replay".into(),
+                preset: model.clone(),
+                threads,
+                wall_ns: (report.wall_s * 1e9).max(1.0),
+                speedup,
+            },
+            BenchRecord {
+                op: "queue-depth-p99".into(),
+                preset: model.clone(),
+                threads,
+                // nearest-rank depth is >= 0; keep wall_ns positive for
+                // the ratio gate in tools/bench_check.py
+                wall_ns: report.queue_depth.p99().max(1.0),
+                speedup: 1.0,
+            },
+        ];
+        let path = write_bench_json("serve_batched", &records)?;
+        println!("wrote {}", path.display());
+    }
     if report.policy.is_some() {
         use rimc_dora::util::bench::{write_bench_json, BenchRecord};
         let record = BenchRecord {

@@ -1,0 +1,89 @@
+//! Queue-depth accounting: nearest-rank percentiles over the
+//! submission-queue depths the nonblocking replay client samples at
+//! each successful admission. Depth is the backpressure signal — how
+//! much accepted-but-undispatched work the bounded queue is holding —
+//! so its percentiles, next to the in-flight window's wait count, say
+//! whether a trace ran admission-limited or dispatch-limited.
+
+/// Sorted queue-depth samples with percentile accessors.
+#[derive(Debug, Clone, Default)]
+pub struct DepthSummary {
+    /// ascending depth samples (requests queued at sample time)
+    sorted: Vec<u64>,
+}
+
+impl DepthSummary {
+    pub fn from_samples(mut samples: Vec<u64>) -> DepthSummary {
+        samples.sort_unstable();
+        DepthSummary { sorted: samples }
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        crate::util::stats::mean(self.sorted.iter().map(|&n| n as f64))
+    }
+
+    /// Nearest-rank percentile, `p` in (0, 100]. NaN when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.sorted.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+        self.sorted[rank - 1] as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().map(|&n| n as f64).unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let s = DepthSummary::from_samples((1..=100).rev().collect());
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.max(), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let s = DepthSummary::from_samples(vec![3]);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.p99(), 3.0);
+    }
+
+    #[test]
+    fn empty_summary_is_nan_not_panic() {
+        let s = DepthSummary::from_samples(Vec::new());
+        assert!(s.is_empty());
+        assert!(s.p50().is_nan());
+        assert!(s.mean().is_nan());
+        assert!(s.max().is_nan());
+    }
+}

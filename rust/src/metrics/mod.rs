@@ -1,13 +1,16 @@
 //! Accounting layer: everything Table I and §IV-C/D/E report is computed
 //! here from measured counters + the cited constants in
 //! `device::constants`. The serving layer adds request-latency
-//! percentile accounting (`latency::LatencySummary`) on top of the
-//! same wear counters.
+//! percentile accounting (`latency::LatencySummary`) and queue-depth
+//! backpressure accounting (`depth::DepthSummary`) on top of the same
+//! wear counters.
 
+pub mod depth;
 pub mod health;
 pub mod latency;
 pub mod params;
 
+pub use depth::DepthSummary;
 pub use health::{RetryHistogram, RETRY_BINS};
 pub use latency::LatencySummary;
 

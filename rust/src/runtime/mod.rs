@@ -28,7 +28,7 @@ pub use pjrt::{ArtifactStore, Executable, PjrtBackend, RuntimeStats};
 
 use crate::anyhow::Result;
 
-use crate::model::ModelSpec;
+use crate::model::{AdapterKind, ModelSpec};
 use crate::util::tensor::Tensor;
 
 /// Executable inputs describing one crossbar array: drifted conductance
@@ -158,6 +158,52 @@ impl BpState {
             wb,
             wh,
         }
+    }
+}
+
+/// One device's adapter inputs inside a cross-device batched forward:
+/// the stacked block adapters plus the merged head adapter, borrowed
+/// from the device that owns them.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetAdapterSlice<'a> {
+    pub kind: AdapterKind,
+    pub stacked: &'a StackedAdapters,
+    pub head: AdapterIo<'a>,
+}
+
+/// One device's slice of a cross-device batched forward: how many
+/// samples it contributed to the stacked `[ΣB·T, d]` row tensor, and
+/// the crossbar state + (optional) adapters to run them through.
+/// Slices are assembled in canonical device-id order so the batched
+/// result is bitwise equal to serving each device serially.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetSlice<'a> {
+    pub n_samples: usize,
+    pub blocks: &'a StackedArrays,
+    pub head: &'a ArrayIo,
+    pub adapters: Option<FleetAdapterSlice<'a>>,
+}
+
+/// Forward one fleet slice: the uncalibrated student when the device
+/// carries no adapters, else the merged DoRA / LoRA calibrated model.
+/// Exactly the dispatch `serve::fleet::Device::infer` performs, so the
+/// batched path inherits its bitwise behavior kernel-for-kernel.
+pub fn fleet_slice_fwd<B: Backend + ?Sized>(
+    backend: &B,
+    spec: &ModelSpec,
+    x: &Tensor,
+    slice: &FleetSlice<'_>,
+) -> Result<Tensor> {
+    match &slice.adapters {
+        None => backend.student_fwd(spec, x, slice.blocks, slice.head),
+        Some(ad) => match ad.kind {
+            AdapterKind::Dora => backend.dora_model_fwd(
+                spec, x, slice.blocks, ad.stacked, slice.head, ad.head,
+            ),
+            AdapterKind::Lora => backend.lora_model_fwd(
+                spec, x, slice.blocks, ad.stacked, slice.head, ad.head,
+            ),
+        },
     }
 }
 
@@ -308,4 +354,35 @@ pub trait Backend: Send + Sync {
         head: &ArrayIo,
         head_ad: AdapterIo<'_>,
     ) -> Result<Tensor>;
+
+    // ---- cross-device batched serving forward -----------------------
+
+    /// One batched serving dispatch over many devices: `rows` stacks
+    /// every device's token rows (`[ΣB·T, d]`, slice `i` owning the
+    /// next `slices[i].n_samples * spec.tokens` rows), and the result
+    /// stacks per-device logits `[ΣB, C]` in the same slice order.
+    ///
+    /// The contract is bitwise: each sample's logits depend only on
+    /// that sample's rows and its own device's state, so the default
+    /// implementation — split, forward each slice through the exact
+    /// per-device model dispatch, re-concatenate — equals serving the
+    /// devices one at a time. Backends may override to exploit
+    /// intra-dispatch parallelism (the native backend fans slices over
+    /// the shared thread pool) but must preserve that equality.
+    fn fleet_fwd(
+        &self,
+        spec: &ModelSpec,
+        rows: &Tensor,
+        slices: &[FleetSlice<'_>],
+    ) -> Result<Tensor> {
+        let mut outs: Vec<Tensor> = Vec::with_capacity(slices.len());
+        let mut start = 0usize;
+        for s in slices {
+            let n_rows = s.n_samples * spec.tokens;
+            let x = rows.subrange0(start, n_rows);
+            outs.push(fleet_slice_fwd(self, spec, &x, s)?);
+            start += n_rows;
+        }
+        Tensor::concat0(&outs)
+    }
 }

@@ -29,12 +29,13 @@ use crate::anyhow::Result;
 
 use super::kernels as k;
 use super::{
-    AdapterIo, AdapterState, ArrayIo, Backend, BpState, LayerRole,
-    StackedAdapters, StackedArrays, StepIo, StepOutput,
+    fleet_slice_fwd, AdapterIo, AdapterState, ArrayIo, Backend, BpState,
+    FleetSlice, LayerRole, StackedAdapters, StackedArrays, StepIo, StepOutput,
 };
 use crate::model::ModelSpec;
 use crate::util::arena;
 use crate::util::tensor::Tensor;
+use crate::util::threads::ThreadPool;
 
 /// Pure-Rust execution backend (zero-sized; all state flows through
 /// arguments).
@@ -350,6 +351,41 @@ impl Backend for NativeBackend {
             head_ad.meff,
             k::ADC_BITS,
         )
+    }
+
+    /// Cross-device batched forward: fan the per-device slices over the
+    /// shared thread pool (heaviest slice claimed first), then fold the
+    /// per-slice logits back in input order. Each slice runs exactly
+    /// the serial per-device kernel sequence on exactly the rows that
+    /// device contributed, and `concat0` preserves slice order, so the
+    /// parallel schedule is bitwise equal to the default serial loop.
+    fn fleet_fwd(
+        &self,
+        spec: &ModelSpec,
+        rows: &Tensor,
+        slices: &[FleetSlice<'_>],
+    ) -> Result<Tensor> {
+        let mut jobs: Vec<(usize, &FleetSlice<'_>)> =
+            // lint:allow(R4) -- slice-offset / LPT-weight scheduling
+            // bookkeeping (usize/u64), not an f32 hot-path buffer
+            Vec::with_capacity(slices.len());
+        // lint:allow(R4) -- same scheduling bookkeeping as `jobs` above
+        let mut weights: Vec<u64> = Vec::with_capacity(slices.len());
+        let mut start = 0usize;
+        for s in slices {
+            jobs.push((start, s));
+            weights.push(s.n_samples.max(1) as u64);
+            start += s.n_samples * spec.tokens;
+        }
+        let outs = ThreadPool::global().try_map_weighted(
+            &jobs,
+            &weights,
+            |&(start, s)| {
+                let x = rows.subrange0(start, s.n_samples * spec.tokens);
+                fleet_slice_fwd(self, spec, &x, s)
+            },
+        )?;
+        Tensor::concat0(&outs)
     }
 
     fn lora_model_fwd(

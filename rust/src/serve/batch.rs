@@ -1,0 +1,84 @@
+//! Cross-device batch assembly: flatten every inference sample of a
+//! grouped work unit into one stacked `[ΣB·T, d]` row tensor for a
+//! single `Backend::fleet_fwd` dispatch.
+//!
+//! This is a serving hot path (it runs once per cross-device work
+//! unit), so the sample rows are copied straight from the eval split
+//! into one arena-backed buffer — no per-request tensor, no
+//! intermediate `[n, T, d]` stack, no reshape. The bytes land in
+//! exactly the order `gather_eval` + `Dataset::rows` would produce for
+//! each group in turn (groups are already in canonical device-id
+//! order), which is what keeps the batched forward bitwise equal to
+//! the serial per-device path.
+
+use crate::anyhow::{bail, Result};
+use crate::dataset::Dataset;
+use crate::util::arena;
+use crate::util::tensor::Tensor;
+
+use super::queue::{DeviceBatch, RequestKind};
+
+/// The stacked inputs of one cross-device inference dispatch.
+#[derive(Debug)]
+pub(crate) struct AssembledBatch {
+    /// `[ΣB·T, d]` token rows, group-major then request-major then
+    /// sample-major — the concatenation of each device's own stacked
+    /// batch in group order
+    pub(crate) rows: Tensor,
+    /// eval label per sample, same order as `rows`
+    pub(crate) labels: Vec<usize>,
+    /// samples contributed by each group (parallel to the unit's
+    /// groups; the per-slice split of the shared forward)
+    pub(crate) group_samples: Vec<usize>,
+}
+
+/// Assemble the inference samples of `groups` into one stacked batch.
+/// Errors on a non-inference request (the queue never co-batches
+/// maintenance) or an out-of-range sample.
+pub(crate) fn assemble(
+    ds: &Dataset,
+    groups: &[DeviceBatch],
+) -> Result<AssembledBatch> {
+    let shape = ds.eval_x.shape();
+    let (n_eval, tokens, d) = (shape[0], shape[1], shape[2]);
+    let stride = tokens * d;
+    let mut total = 0usize;
+    for g in groups {
+        for p in &g.items {
+            match &p.kind {
+                RequestKind::Infer { samples } => total += samples.len(),
+                _ => bail!("non-inference request in a cross-device batch"),
+            }
+        }
+    }
+    if total == 0 {
+        bail!("empty cross-device batch");
+    }
+    let mut data = arena::take_cap(total * stride);
+    // lint:allow(R4) -- usize label bookkeeping (one entry per sample),
+    // not an f32 buffer: the row payload above comes from the arena
+    let mut labels: Vec<usize> = Vec::with_capacity(total);
+    // lint:allow(R4) -- same usize bookkeeping as `labels` above
+    let mut group_samples: Vec<usize> = Vec::with_capacity(groups.len());
+    let x = ds.eval_x.data();
+    for g in groups {
+        let mut n_g = 0usize;
+        for p in &g.items {
+            if let RequestKind::Infer { samples } = &p.kind {
+                for &s in samples {
+                    if s >= n_eval {
+                        bail!(
+                            "eval sample {s} out of range (split has {n_eval})"
+                        );
+                    }
+                    data.extend_from_slice(&x[s * stride..(s + 1) * stride]);
+                    labels.push(ds.eval_y[s]);
+                    n_g += 1;
+                }
+            }
+        }
+        group_samples.push(n_g);
+    }
+    let rows = Tensor::new([total * tokens, d], data)?;
+    Ok(AssembledBatch { rows, labels, group_samples })
+}

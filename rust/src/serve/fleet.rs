@@ -24,7 +24,10 @@ use crate::dataset::Dataset;
 use crate::device::DriftModel;
 use crate::model::{AdapterKind, AdapterSet, StudentModel};
 use crate::rram::{NonIdealityModel, ScenarioMix};
-use crate::runtime::AdapterIo;
+use crate::runtime::{
+    AdapterIo, ArrayIo, FleetAdapterSlice, FleetSlice, StackedAdapters,
+    StackedArrays,
+};
 use crate::util::tensor::Tensor;
 use crate::util::threads::ThreadPool;
 
@@ -77,6 +80,51 @@ impl DeviceStats {
             return f64::NAN;
         }
         self.correct as f64 / self.inferred as f64
+    }
+}
+
+/// Adapter tensors snapshotted for one device's share of a cross-device
+/// batched forward (owned, because the borrowed forms in
+/// `forward_logits` cannot outlive a single device's stack frame).
+#[derive(Debug)]
+pub(crate) struct DeviceAdapterIo {
+    pub(crate) kind: AdapterKind,
+    pub(crate) stacked: StackedAdapters,
+    pub(crate) head_a: Tensor,
+    pub(crate) head_b: Tensor,
+    pub(crate) head_meff: Tensor,
+}
+
+/// One device's forward inputs, snapshotted under its lock for a
+/// cross-device batched dispatch. Exactly the tensors `forward_logits`
+/// builds for a solo forward, so the shared `fleet_fwd` call runs the
+/// same kernels on the same data and stays bitwise equal to serving
+/// the device alone.
+#[derive(Debug)]
+pub(crate) struct DeviceFwdIo {
+    pub(crate) blocks: StackedArrays,
+    pub(crate) head: ArrayIo,
+    pub(crate) ads: Option<DeviceAdapterIo>,
+}
+
+impl DeviceFwdIo {
+    /// Borrow this snapshot as one slice of a `Backend::fleet_fwd`
+    /// call, covering `n_samples` of the stacked batch.
+    pub(crate) fn slice(&self, n_samples: usize) -> FleetSlice<'_> {
+        FleetSlice {
+            n_samples,
+            blocks: &self.blocks,
+            head: &self.head,
+            adapters: self.ads.as_ref().map(|ad| FleetAdapterSlice {
+                kind: ad.kind,
+                stacked: &ad.stacked,
+                head: AdapterIo {
+                    a: &ad.head_a,
+                    b: &ad.head_b,
+                    meff: &ad.head_meff,
+                },
+            }),
+        }
     }
 }
 
@@ -190,6 +238,44 @@ impl Device {
             .filter(|(p, l)| *p == *l)
             .count() as u64;
         Ok(preds)
+    }
+
+    /// Snapshot this device's forward inputs for a cross-device batched
+    /// dispatch (pure reads; wear and accuracy are charged afterwards
+    /// by [`Device::finish_batched_infer`]).
+    pub(crate) fn fwd_io(&self) -> Result<DeviceFwdIo> {
+        let blocks = self.student.stacked_arrays()?;
+        let head = self.student.head_io();
+        let ads = match &self.adapters {
+            None => None,
+            Some(ads) => Some(DeviceAdapterIo {
+                kind: ads.kind,
+                stacked: ads.stacked()?,
+                head_a: ads.head.a.tensor().clone(),
+                head_b: ads.head.b.tensor().clone(),
+                head_meff: ads.head.merged_meff()?,
+            }),
+        };
+        Ok(DeviceFwdIo { blocks, head, ads })
+    }
+
+    /// Charge the device-side effects of its slice of a cross-device
+    /// batched forward: exactly the counter mutations [`Device::infer`]
+    /// performs after its forward, in the same order, so a batched
+    /// dispatch leaves identical wear and accuracy state.
+    pub(crate) fn finish_batched_infer(
+        &mut self,
+        preds: &[usize],
+        labels: &[usize],
+    ) {
+        let n = preds.len();
+        self.student.count_forward_reads(n as u64);
+        self.inferred += n as u64;
+        self.correct += preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| *p == *l)
+            .count() as u64;
     }
 
     /// Score the device on a probe batch **without** touching the

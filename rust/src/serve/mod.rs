@@ -20,13 +20,20 @@
 //!   multi-second calibration round never starves inference; an
 //!   optional K-dispatch aging bound promotes maintenance that has
 //!   been passed over K times, capping deferral under saturating
-//!   inference load) and micro-batching of consecutive same-device
-//!   inference requests into single backend dispatches, amortizing the
-//!   vectorized-matmul eval path. Per-device program order is never
-//!   reordered, which keeps served results bitwise equal to serial
-//!   per-device execution.
-//! * [`server`] — the blocking `submit`/`wait` front-end plus scoped
-//!   dispatch workers (`util::threads`).
+//!   inference load — a promoted request carries the inference run
+//!   queued behind it) and micro-batching: consecutive same-device
+//!   inference requests coalesce into single backend dispatches, and
+//!   with cross-device batching armed the head-of-line inference runs
+//!   of every compatible device stack into one `[ΣB, ...]` work unit,
+//!   assembled in canonical device-id order. Per-device program order
+//!   is never reordered, which keeps served results bitwise equal to
+//!   serial per-device execution.
+//! * `batch` (private) — arena-backed assembly of a cross-device work unit's
+//!   samples into the one stacked row tensor `Backend::fleet_fwd`
+//!   consumes (no per-request allocation on the stacking path).
+//! * [`server`] — the blocking `submit`/`wait` front-end, the
+//!   nonblocking `submit_nonblocking`/`poll` handle/poll front-end with
+//!   admission control, plus scoped dispatch workers (`util::threads`).
 //! * [`health`] — fault-reactive fleet self-healing: per-device health
 //!   records (drift age, last-K recovery ring, stuck-cell fraction),
 //!   the adaptive recalibration policy (shared state machine with
@@ -40,6 +47,7 @@
 //!
 //! See DESIGN.md §7 for the serving model and its invariants.
 
+mod batch;
 pub mod fleet;
 pub mod health;
 pub mod queue;
@@ -50,7 +58,10 @@ pub use fleet::{gather_eval, Device, DeviceStats, Fleet};
 pub use health::{
     FleetHealth, HealthRecord, PolicyConfig, ProbeSet, QuarantineReason,
 };
-pub use queue::{Lane, RequestKind, SubmitQueue, Ticket};
+pub use queue::{
+    DeviceBatch, DispatchStats, Lane, RequestKind, SubmitQueue, Ticket,
+    WorkUnit,
+};
 pub use server::{Response, ServeConfig, Server};
 pub use trace::{
     replay, replay_collect, synth_trace, PolicyReport, TraceReport, TraceSpec,

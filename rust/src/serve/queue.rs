@@ -29,10 +29,22 @@
 //!   input samples), so one backend dispatch — one crossbar-stack build,
 //!   one vectorized matmul chain — serves many requests. The run stops at
 //!   the first maintenance request to preserve program order; the tail
-//!   batch is ragged (the native backend supports ragged batches).
+//!   batch is ragged (the native backend supports ragged batches). A
+//!   *promoted* maintenance front (aging bound) carries the consecutive
+//!   inference run queued behind it in the same work unit — program
+//!   order inside the unit, one fewer dispatch under aging pressure.
+//! * **Cross-device batching (optional).** With `with_cross_batch(true)`,
+//!   an inference dispatch also pulls the head-of-line inference runs of
+//!   every other *eligible* device — not busy, not draining, same
+//!   compatibility class (preset), inference at its front — into the
+//!   same work unit, one backend call over `[ΣB, ...]` stacked samples.
+//!   Groups are assembled in **canonical device-id order** and each
+//!   device's run is still capped at `max_batch_samples`, so batched
+//!   results stay bitwise equal to dispatching the same runs serially.
 //! * **Bounded.** `submit` blocks while `capacity` requests are queued
 //!   (backpressure), so a fast client cannot grow the queue without
-//!   bound.
+//!   bound; `try_submit` reports saturation to the caller instead of
+//!   blocking (the nonblocking front-end's admission control).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -97,13 +109,47 @@ pub struct Pending {
     pub passed_over: u64,
 }
 
-/// One unit of device work popped by a dispatch worker: a single
-/// maintenance request, or a coalesced run of inference requests.
+/// One device's share of a work unit: the requests popped from its
+/// FIFO, in program order. A mixed list (`[maintenance, inference…]`)
+/// occurs only for a promoted maintenance front with trailing
+/// inference coalesced behind it.
+#[derive(Debug)]
+pub struct DeviceBatch {
+    pub device: usize,
+    pub items: Vec<Pending>,
+}
+
+/// One unit of work popped by a dispatch worker. Groups are in
+/// strictly ascending device-id order (the canonical cross-batch
+/// assembly order); `groups.len() > 1` only for cross-device batched
+/// inference, and every grouped device is marked busy until
+/// `complete(device)` is called for it.
 #[derive(Debug)]
 pub struct WorkUnit {
-    pub device: usize,
-    /// len > 1 only for micro-batched inference
-    pub items: Vec<Pending>,
+    pub groups: Vec<DeviceBatch>,
+}
+
+impl WorkUnit {
+    /// Total requests across all groups.
+    pub fn n_items(&self) -> usize {
+        self.groups.iter().map(|g| g.items.len()).sum()
+    }
+}
+
+/// Dispatch-shape counters accumulated by `pop` since queue creation.
+/// Grouping is schedule-dependent (it reflects what happened to be
+/// queued when a worker popped), so these are reporting-only — like
+/// wall-clock fields, never part of a bitwise contract.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchStats {
+    /// work units popped
+    pub units: u64,
+    /// units spanning more than one device (cross-device batches)
+    pub cross_units: u64,
+    /// widest unit, in devices
+    pub max_unit_devices: u64,
+    /// requests that shared their unit with at least one other request
+    pub batched_requests: u64,
 }
 
 /// Coalesce the run of consecutive inference requests at the front of
@@ -150,6 +196,7 @@ struct QueueState {
     queued: usize,
     next_seq: u64,
     shutdown: bool,
+    stats: DispatchStats,
 }
 
 /// The bounded two-lane queue `Server` dispatches from.
@@ -166,6 +213,13 @@ pub struct SubmitQueue {
     /// K-dispatch aging bound for the maintenance lane; 0 = strict
     /// priority (maintenance can be deferred unboundedly)
     maintenance_age_bound: usize,
+    /// stack compatible inference runs from different devices into one
+    /// work unit (off by default: PR 3 same-device-only behavior)
+    cross_batch: bool,
+    /// per-device compatibility class: only devices of equal class ever
+    /// share a cross-device batch (mixed-preset fleets never co-batch).
+    /// Immutable after construction, so reads need no lock.
+    classes: Vec<u32>,
 }
 
 impl std::fmt::Debug for SubmitQueue {
@@ -174,6 +228,7 @@ impl std::fmt::Debug for SubmitQueue {
             .field("capacity", &self.capacity)
             .field("max_batch_samples", &self.max_batch_samples)
             .field("maintenance_age_bound", &self.maintenance_age_bound)
+            .field("cross_batch", &self.cross_batch)
             .finish_non_exhaustive()
     }
 }
@@ -193,17 +248,48 @@ impl SubmitQueue {
                 queued: 0,
                 next_seq: 0,
                 shutdown: false,
+                stats: DispatchStats::default(),
             }),
             work: Condvar::new(),
             space: Condvar::new(),
             capacity: capacity.max(1),
             max_batch_samples: max_batch_samples.max(1),
             maintenance_age_bound,
+            cross_batch: false,
+            classes: vec![0; n_devices],
         }
+    }
+
+    /// Enable (or disable) cross-device batch assembly.
+    pub fn with_cross_batch(mut self, on: bool) -> SubmitQueue {
+        self.cross_batch = on;
+        self
+    }
+
+    /// Set per-device compatibility classes (one per device). Devices
+    /// only co-batch with equal-class peers; the all-zero default means
+    /// a homogeneous fleet.
+    pub fn with_classes(mut self, classes: Vec<u32>) -> SubmitQueue {
+        assert_eq!(
+            classes.len(),
+            self.classes.len(),
+            "one class per device"
+        );
+        self.classes = classes;
+        self
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    pub fn cross_batch(&self) -> bool {
+        self.cross_batch
+    }
+
+    /// Dispatch-shape counters accumulated so far (reporting only).
+    pub fn dispatch_stats(&self) -> DispatchStats {
+        self.state.lock().expect("queue lock").stats
     }
 
     pub fn max_batch_samples(&self) -> usize {
@@ -272,6 +358,53 @@ impl SubmitQueue {
         Ok(())
     }
 
+    /// Nonblocking `submit`: enqueue if the queue has room and return
+    /// `Ok(true)`, or report saturation with `Ok(false)` instead of
+    /// waiting on backpressure. Shutdown / quarantine / range errors
+    /// are the same hard errors `submit` raises — saturation is the
+    /// only soft outcome, and the caller (the handle/poll client's
+    /// admission control) decides whether to retry, reap completions,
+    /// or shed the request.
+    pub fn try_submit(
+        &self,
+        device: usize,
+        ticket: Ticket,
+        kind: RequestKind,
+    ) -> Result<bool> {
+        let mut st = self.state.lock().expect("queue lock");
+        if device >= st.per_device.len() {
+            bail!(
+                "device {device} out of range (fleet has {})",
+                st.per_device.len()
+            );
+        }
+        if st.shutdown {
+            bail!("submit after shutdown");
+        }
+        if st.draining[device] {
+            bail!("device {device} is quarantined (draining)");
+        }
+        if st.queued >= self.capacity {
+            return Ok(false);
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.per_device[device].push_back(Pending {
+            ticket,
+            seq,
+            kind,
+            // lint:allow(R7) -- queue-latency timestamp feeding the
+            // serve report; scheduling order keys on `seq`, never on
+            // this clock, so results stay deterministic
+            submitted_at: Instant::now(),
+            passed_over: 0,
+        });
+        st.queued += 1;
+        drop(st);
+        self.work.notify_one();
+        Ok(true)
+    }
+
     /// Pop the next work unit, blocking until one is eligible. Returns
     /// `None` once the queue is shut down and fully drained (in-flight
     /// units may still be completing on other workers).
@@ -283,9 +416,10 @@ impl SubmitQueue {
             // maintenance front that has been *passed over* — eligible
             // at its head of line while another device's request was
             // dispatched — K times ranks as inference (still tie-broken
-            // by seq, so older requests win); it dispatches as the
-            // maintenance singleton it is. A device's own backlog never
-            // ages a request: only losses in the cross-device race do.
+            // by seq, so older requests win); it dispatches on its own
+            // device, carrying any consecutive inference run queued
+            // behind it. A device's own backlog never ages a request:
+            // only losses in the cross-device race do.
             let bound = self.maintenance_age_bound as u64;
             let effective_lane = |front: &Pending| {
                 if bound > 0
@@ -326,19 +460,79 @@ impl SubmitQueue {
                         }
                     }
                 }
-                let q = &mut st.per_device[d];
-                let items = if q.front().expect("non-empty").kind.lane()
-                    == Lane::Inference
-                {
-                    coalesce_inference(q, self.max_batch_samples)
+                let front_lane =
+                    st.per_device[d].front().expect("non-empty").kind.lane();
+                let mut groups: Vec<DeviceBatch> = Vec::new();
+                if front_lane == Lane::Inference {
+                    if self.cross_batch && !st.draining[d] {
+                        // cross-device assembly: every eligible peer —
+                        // not busy, not draining, same compatibility
+                        // class, *actual* inference at its front (a
+                        // promoted maintenance front ranks as inference
+                        // in the race but never joins a batch) — adds
+                        // its own coalesced run. Ascending device-id
+                        // iteration is the canonical assembly order the
+                        // bitwise contract keys on.
+                        let inner = &mut *st;
+                        for dev in 0..inner.per_device.len() {
+                            let join = dev == d
+                                || (!inner.busy[dev]
+                                    && !inner.draining[dev]
+                                    && self.classes[dev] == self.classes[d]
+                                    && inner.per_device[dev]
+                                        .front()
+                                        .map(|f| {
+                                            f.kind.lane() == Lane::Inference
+                                        })
+                                        .unwrap_or(false));
+                            if join {
+                                let items = coalesce_inference(
+                                    &mut inner.per_device[dev],
+                                    self.max_batch_samples,
+                                );
+                                groups.push(DeviceBatch { device: dev, items });
+                            }
+                        }
+                    } else {
+                        let items = coalesce_inference(
+                            &mut st.per_device[d],
+                            self.max_batch_samples,
+                        );
+                        groups.push(DeviceBatch { device: d, items });
+                    }
                 } else {
-                    vec![q.pop_front().expect("non-empty")]
-                };
-                st.queued -= items.len();
-                st.busy[d] = true;
+                    let q = &mut st.per_device[d];
+                    let mut items = vec![q.pop_front().expect("non-empty")];
+                    // a *promoted* maintenance front carries the
+                    // consecutive inference run behind it: program
+                    // order inside the unit, one fewer dispatch than
+                    // the singleton-then-batch sequence it replaces
+                    if bound > 0 && items[0].passed_over >= bound {
+                        items.extend(coalesce_inference(
+                            q,
+                            self.max_batch_samples,
+                        ));
+                    }
+                    groups.push(DeviceBatch { device: d, items });
+                }
+                let total: usize =
+                    groups.iter().map(|g| g.items.len()).sum();
+                st.queued -= total;
+                for g in &groups {
+                    st.busy[g.device] = true;
+                }
+                st.stats.units += 1;
+                if groups.len() > 1 {
+                    st.stats.cross_units += 1;
+                }
+                st.stats.max_unit_devices =
+                    st.stats.max_unit_devices.max(groups.len() as u64);
+                if total > 1 {
+                    st.stats.batched_requests += total as u64;
+                }
                 drop(st);
                 self.space.notify_all();
-                return Some(WorkUnit { device: d, items });
+                return Some(WorkUnit { groups });
             }
             if st.shutdown && st.queued == 0 {
                 return None;
@@ -415,6 +609,12 @@ mod tests {
         items.iter().map(|p| p.ticket).collect()
     }
 
+    /// Unwrap a unit expected to cover exactly one device.
+    fn solo(u: WorkUnit) -> DeviceBatch {
+        assert_eq!(u.groups.len(), 1, "expected a single-device unit");
+        u.groups.into_iter().next().expect("one group")
+    }
+
     #[test]
     fn coalesce_merges_consecutive_inference_up_to_cap() {
         let mut q: VecDeque<Pending> =
@@ -475,9 +675,9 @@ mod tests {
         .unwrap();
         q.submit(1, 11, RequestKind::Infer { samples: vec![0, 1] }).unwrap();
         q.submit(2, 12, RequestKind::Infer { samples: vec![2, 3] }).unwrap();
-        let u1 = q.pop().unwrap();
-        let u2 = q.pop().unwrap();
-        let u3 = q.pop().unwrap();
+        let u1 = solo(q.pop().unwrap());
+        let u2 = solo(q.pop().unwrap());
+        let u3 = solo(q.pop().unwrap());
         assert_eq!((u1.device, tickets(&u1.items)), (1, vec![11]));
         assert_eq!((u2.device, tickets(&u2.items)), (2, vec![12]));
         assert_eq!(
@@ -497,13 +697,13 @@ mod tests {
         })
         .unwrap();
         q.submit(0, 21, RequestKind::Infer { samples: vec![0] }).unwrap();
-        let u1 = q.pop().unwrap();
+        let u1 = solo(q.pop().unwrap());
         assert_eq!(tickets(&u1.items), vec![20], "program order within device");
         // device 0 is now busy; its infer is ineligible until complete()
         q.shutdown();
         // only after completing the calibration does the infer surface
         q.complete(0);
-        let u2 = q.pop().unwrap();
+        let u2 = solo(q.pop().unwrap());
         assert_eq!(tickets(&u2.items), vec![21]);
         q.complete(0);
         assert!(q.pop().is_none(), "drained + shutdown");
@@ -526,23 +726,23 @@ mod tests {
         q.submit(2, 2, RequestKind::Infer { samples: vec![1] }).unwrap();
         q.submit(3, 3, RequestKind::Infer { samples: vec![2] }).unwrap();
         // dispatch 0: age 0 < 2 — inference wins
-        let u1 = q.pop().unwrap();
+        let u1 = solo(q.pop().unwrap());
         assert_eq!((u1.device, tickets(&u1.items)), (1, vec![1]));
         q.complete(1);
         // dispatch 1: age 1 < 2 — inference still wins
-        let u2 = q.pop().unwrap();
+        let u2 = solo(q.pop().unwrap());
         assert_eq!((u2.device, tickets(&u2.items)), (2, vec![2]));
         q.complete(2);
         // dispatch 2: age 2 >= K — the calibration is promoted and its
         // older seq beats device 3's queued inference
-        let u3 = q.pop().unwrap();
+        let u3 = solo(q.pop().unwrap());
         assert_eq!(
             (u3.device, tickets(&u3.items)),
             (0, vec![0]),
             "aged maintenance must outrank younger inference"
         );
         q.complete(0);
-        let u4 = q.pop().unwrap();
+        let u4 = solo(q.pop().unwrap());
         assert_eq!((u4.device, tickets(&u4.items)), (3, vec![3]));
     }
 
@@ -559,7 +759,7 @@ mod tests {
             let dev = 1 + (i as usize % 2);
             q.submit(dev, 10 + i, RequestKind::Infer { samples: vec![0] })
                 .unwrap();
-            let u = q.pop().unwrap();
+            let u = solo(q.pop().unwrap());
             assert_eq!(
                 tickets(&u.items),
                 vec![10 + i],
@@ -567,28 +767,52 @@ mod tests {
             );
             q.complete(dev);
         }
-        let last = q.pop().unwrap();
+        let last = solo(q.pop().unwrap());
         assert_eq!(tickets(&last.items), vec![0]);
     }
 
     #[test]
-    fn promoted_maintenance_still_dispatches_as_singleton() {
-        // device 0 queues calibrate-then-infer; once the calibrate is
-        // promoted the following inference must NOT coalesce with it
+    fn promoted_maintenance_carries_trailing_inference() {
+        // device 0 queues advance-then-infer; once the advance is
+        // promoted, the consecutive inference run behind it rides in
+        // the same work unit — program order preserved, one dispatch
+        // instead of the old singleton-then-batch pair
         let q = SubmitQueue::new(2, 64, 32, 1);
         q.submit(0, 0, RequestKind::Advance { hours: 1.0 }).unwrap();
         q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
         q.submit(1, 2, RequestKind::Infer { samples: vec![1] }).unwrap();
-        let u1 = q.pop().unwrap();
+        let u1 = solo(q.pop().unwrap());
         assert_eq!((u1.device, tickets(&u1.items)), (1, vec![2]));
         q.complete(1);
-        let u2 = q.pop().unwrap();
+        let u2 = solo(q.pop().unwrap());
         assert_eq!(
             (u2.device, tickets(&u2.items)),
-            (0, vec![0]),
-            "promoted advance dispatches alone"
+            (0, vec![0, 1]),
+            "promoted advance carries the inference queued behind it"
         );
-        assert_eq!(u2.items.len(), 1);
+        assert!(matches!(u2.items[0].kind, RequestKind::Advance { .. }));
+        assert!(matches!(u2.items[1].kind, RequestKind::Infer { .. }));
+        q.complete(0);
+        q.shutdown();
+        assert!(q.pop().is_none(), "nothing left behind the merged unit");
+    }
+
+    #[test]
+    fn unpromoted_maintenance_still_dispatches_as_singleton() {
+        // no aging pressure: a maintenance front that wins on its own
+        // (nothing else queued) keeps the PR 3 singleton shape
+        let q = SubmitQueue::new(2, 64, 32, 1);
+        q.submit(0, 0, RequestKind::Advance { hours: 1.0 }).unwrap();
+        q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
+        let u1 = solo(q.pop().unwrap());
+        assert_eq!(
+            (u1.device, tickets(&u1.items)),
+            (0, vec![0]),
+            "never passed over, never promoted: dispatches alone"
+        );
+        q.complete(0);
+        let u2 = solo(q.pop().unwrap());
+        assert_eq!(tickets(&u2.items), vec![1]);
     }
 
     #[test]
@@ -610,13 +834,13 @@ mod tests {
         // healthy devices are unaffected
         q.submit(1, 3, RequestKind::Infer { samples: vec![2] }).unwrap();
         // everything accepted before the drain still runs, in order
-        let u1 = q.pop().unwrap();
+        let u1 = solo(q.pop().unwrap());
         assert_eq!((u1.device, tickets(&u1.items)), (1, vec![3]));
         q.complete(1);
-        let u2 = q.pop().unwrap();
+        let u2 = solo(q.pop().unwrap());
         assert_eq!((u2.device, tickets(&u2.items)), (0, vec![0]));
         q.complete(0);
-        let u3 = q.pop().unwrap();
+        let u3 = solo(q.pop().unwrap());
         assert_eq!((u3.device, tickets(&u3.items)), (0, vec![1]));
         q.complete(0);
         q.shutdown();
@@ -627,33 +851,28 @@ mod tests {
     fn drain_mid_promotion_keeps_lane_and_busy_clean() {
         // K = 1: device 0's advance is passed over once (promoted),
         // then the device is drained *between* promotion and dispatch.
-        // The promoted request must still dispatch as a maintenance
-        // singleton (its latency bins in the maintenance lane — it
-        // dispatches alone, never inside an inference batch), the busy
-        // flag must cycle normally, and the infer queued behind it must
-        // still drain in program order.
+        // The promoted request still dispatches in program order with
+        // its trailing inference riding along (accepted work is never
+        // abandoned by a drain), the busy flag must cycle normally, and
+        // nothing is left behind.
         let q = SubmitQueue::new(2, 8, 4, 1);
         q.submit(0, 0, RequestKind::Advance { hours: 1.0 }).unwrap();
         q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
         q.submit(1, 2, RequestKind::Infer { samples: vec![1] }).unwrap();
-        let u1 = q.pop().unwrap();
+        let u1 = solo(q.pop().unwrap());
         assert_eq!((u1.device, tickets(&u1.items)), (1, vec![2]));
         // the advance has now aged past K; drain device 0 mid-promotion
         q.drain(0);
         q.complete(1);
-        let u2 = q.pop().unwrap();
-        assert_eq!((u2.device, tickets(&u2.items)), (0, vec![0]));
+        let u2 = solo(q.pop().unwrap());
         assert_eq!(
-            u2.items.len(),
-            1,
-            "promoted advance still dispatches alone (maintenance lane)"
+            (u2.device, tickets(&u2.items)),
+            (0, vec![0, 1]),
+            "promoted advance + trailing inference drain in program order"
         );
         assert!(matches!(u2.items[0].kind, RequestKind::Advance { .. }));
-        // busy flag must not stay stale: after complete, the queued
-        // infer surfaces
-        q.complete(0);
-        let u3 = q.pop().unwrap();
-        assert_eq!((u3.device, tickets(&u3.items)), (0, vec![1]));
+        assert!(matches!(u2.items[1].kind, RequestKind::Infer { .. }));
+        // busy flag must not stay stale
         q.complete(0);
         q.shutdown();
         assert!(q.pop().is_none());
@@ -676,7 +895,7 @@ mod tests {
             "blocked submitter for a drained device must fail"
         );
         // the healthy device's queued request is untouched
-        let u = q.pop().unwrap();
+        let u = solo(q.pop().unwrap());
         assert_eq!((u.device, tickets(&u.items)), (1, vec![0]));
         q.complete(1);
     }
@@ -687,9 +906,119 @@ mod tests {
         q.submit(0, 1, RequestKind::Infer { samples: vec![0] }).unwrap();
         q.shutdown();
         assert!(q.submit(0, 2, RequestKind::Advance { hours: 1.0 }).is_err());
-        let u = q.pop().unwrap();
+        let u = solo(q.pop().unwrap());
         assert_eq!(tickets(&u.items), vec![1]);
         q.complete(0);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cross_batch_stacks_devices_in_id_order() {
+        // submissions land out of device order; the assembled unit must
+        // group by ascending device id regardless, and every grouped
+        // device must be busy until its own complete()
+        let q = SubmitQueue::new(3, 64, 32, 0).with_cross_batch(true);
+        q.submit(2, 0, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.submit(0, 1, RequestKind::Infer { samples: vec![1] }).unwrap();
+        q.submit(1, 2, RequestKind::Infer { samples: vec![2] }).unwrap();
+        let u = q.pop().unwrap();
+        let shape: Vec<(usize, Vec<u64>)> = u
+            .groups
+            .iter()
+            .map(|g| (g.device, tickets(&g.items)))
+            .collect();
+        assert_eq!(
+            shape,
+            vec![(0, vec![1]), (1, vec![2]), (2, vec![0])],
+            "canonical device-id assembly order"
+        );
+        assert_eq!(u.n_items(), 3);
+        let stats = q.dispatch_stats();
+        assert_eq!(stats.units, 1);
+        assert_eq!(stats.cross_units, 1);
+        assert_eq!(stats.max_unit_devices, 3);
+        assert_eq!(stats.batched_requests, 3);
+        // all three devices are in flight: new work for them waits
+        q.submit(1, 3, RequestKind::Infer { samples: vec![3] }).unwrap();
+        q.shutdown();
+        for g in &u.groups {
+            q.complete(g.device);
+        }
+        let tail = solo(q.pop().unwrap());
+        assert_eq!((tail.device, tickets(&tail.items)), (1, vec![3]));
+        q.complete(1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cross_batch_never_mixes_classes() {
+        // devices 0/2 are one preset class, device 1 another: the
+        // winner's batch takes only equal-class peers
+        let q = SubmitQueue::new(3, 64, 32, 0)
+            .with_cross_batch(true)
+            .with_classes(vec![7, 9, 7]);
+        q.submit(0, 0, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.submit(1, 1, RequestKind::Infer { samples: vec![1] }).unwrap();
+        q.submit(2, 2, RequestKind::Infer { samples: vec![2] }).unwrap();
+        let u = q.pop().unwrap();
+        let devs: Vec<usize> = u.groups.iter().map(|g| g.device).collect();
+        assert_eq!(devs, vec![0, 2], "class 9 never co-batches with class 7");
+        let u2 = solo(q.pop().unwrap());
+        assert_eq!((u2.device, tickets(&u2.items)), (1, vec![1]));
+    }
+
+    #[test]
+    fn cross_batch_skips_draining_busy_and_maintenance_peers() {
+        let q = SubmitQueue::new(4, 64, 32, 0).with_cross_batch(true);
+        // device 3 queues maintenance, device 1 is quarantined, the
+        // rest queue inference
+        q.submit(0, 0, RequestKind::Infer { samples: vec![0] }).unwrap();
+        q.submit(1, 1, RequestKind::Infer { samples: vec![1] }).unwrap();
+        q.submit(2, 2, RequestKind::Infer { samples: vec![2] }).unwrap();
+        q.submit(3, 3, RequestKind::Advance { hours: 1.0 }).unwrap();
+        q.drain(1);
+        let u = q.pop().unwrap();
+        let devs: Vec<usize> = u.groups.iter().map(|g| g.device).collect();
+        assert_eq!(
+            devs,
+            vec![0, 2],
+            "draining and maintenance-fronted peers stay out of the batch"
+        );
+        // the quarantined device's accepted work still dispatches —
+        // alone, outside any cross-device batch
+        let u2 = solo(q.pop().unwrap());
+        assert_eq!((u2.device, tickets(&u2.items)), (1, vec![1]));
+        q.complete(1);
+        let u3 = solo(q.pop().unwrap());
+        assert_eq!((u3.device, tickets(&u3.items)), (3, vec![3]));
+    }
+
+    #[test]
+    fn try_submit_reports_saturation_instead_of_blocking() {
+        let q = SubmitQueue::new(2, 1, 4, 0);
+        assert!(q
+            .try_submit(0, 0, RequestKind::Infer { samples: vec![0] })
+            .unwrap());
+        assert!(
+            !q.try_submit(0, 1, RequestKind::Infer { samples: vec![1] })
+                .unwrap(),
+            "full queue is a soft Ok(false), not a blocked thread"
+        );
+        let u = solo(q.pop().unwrap());
+        assert_eq!(tickets(&u.items), vec![0]);
+        assert!(
+            q.try_submit(0, 1, RequestKind::Infer { samples: vec![1] })
+                .unwrap(),
+            "space freed by the pop admits the retry"
+        );
+        // hard failures stay hard
+        q.drain(0);
+        assert!(q
+            .try_submit(0, 2, RequestKind::Infer { samples: vec![2] })
+            .is_err());
+        q.shutdown();
+        assert!(q
+            .try_submit(1, 3, RequestKind::Infer { samples: vec![3] })
+            .is_err());
     }
 }

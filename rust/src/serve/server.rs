@@ -1,20 +1,34 @@
-//! Request-serving front-end: a blocking `submit`/`wait` API over one
-//! shared engine session, with dispatch workers pulled from the scoped
-//! thread pool (`util::threads`).
+//! Request-serving front-end over one shared engine session, with
+//! dispatch workers pulled from the scoped thread pool
+//! (`util::threads`). Two client styles share one ticket space:
+//!
+//! * **Blocking** `submit`/`wait` — the PR 3 API, unchanged.
+//! * **Nonblocking** `submit_nonblocking`/`poll` — handle/poll with
+//!   admission control: `submit_nonblocking` validates and returns
+//!   `Ok(None)` when the queue is saturated instead of blocking, and
+//!   `poll` redeems a ticket without waiting (completed responses are
+//!   harvested in whatever order they finish). The replay client layers
+//!   a bounded in-flight window on top and reports queue-depth /
+//!   backpressure metrics.
 //!
 //! Lifecycle: build a `Server` (deploys the fleet), then enter
 //! [`Server::serve`] — it spawns the dispatch workers on scoped
 //! threads, runs your client closure on the calling thread, and shuts
 //! the queue down (draining it) when the closure returns. Inside the
-//! closure, any thread with a `&Server` may `submit` requests and
-//! `wait` on tickets; responses are posted by whichever worker executed
-//! the unit.
+//! closure, any thread with a `&Server` may submit requests and
+//! wait/poll on tickets; responses are posted by whichever worker
+//! executed the unit.
 //!
-//! Workers execute one `WorkUnit` at a time: lock the device, run the
-//! (micro-batched) request(s), release the device via
-//! `SubmitQueue::complete`, post responses. Request validation happens
-//! at `submit` time; execution errors (which valid requests do not
-//! produce) still resolve the ticket, as `Response::Failed`.
+//! Workers execute one `WorkUnit` at a time. A single-device unit
+//! locks its device and walks the items in program order (consecutive
+//! inference requests share one stacked dispatch). A cross-device unit
+//! locks its devices in ascending id order, assembles one `[ΣB·T, d]`
+//! row batch (`serve::batch`), runs one `Backend::fleet_fwd` call, and
+//! splits predictions/wear back per device — bitwise equal to running
+//! the same groups serially. Devices are released via
+//! `SubmitQueue::complete`, then responses post. Request validation
+//! happens at submit time; execution errors (which valid requests do
+//! not produce) still resolve the ticket, as `Response::Failed`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -22,12 +36,17 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::anyhow::{bail, Result};
 
-use super::fleet::{gather_eval, Fleet};
+use super::batch;
+use super::fleet::{gather_eval, DeviceFwdIo, Fleet};
 use super::health::{PolicyConfig, ProbeSet};
-use super::queue::{Pending, RequestKind, SubmitQueue, Ticket, WorkUnit};
+use super::queue::{
+    DeviceBatch, DispatchStats, Pending, RequestKind, SubmitQueue, Ticket,
+    WorkUnit,
+};
 use crate::coordinator::Session;
 use crate::model::AdapterKind;
 use crate::rram::ScenarioMix;
+use crate::runtime::FleetSlice;
 use crate::util::threads::{threads, ThreadPool};
 
 /// Serving-layer knobs.
@@ -64,6 +83,15 @@ pub struct ServeConfig {
     /// `None` (default) is the pre-policy serving path, bitwise
     /// unchanged: no probes run and no request is rerouted.
     pub policy: Option<PolicyConfig>,
+    /// Stack compatible inference requests from *different* devices
+    /// into one backend dispatch (`serve --cross-batch`). Off (default)
+    /// keeps the PR 3 same-device-only micro-batching, byte-identical.
+    pub cross_batch: bool,
+    /// Bounded in-flight window for the nonblocking replay client:
+    /// at most this many unresolved tickets outstanding at once.
+    /// 0 (default) selects the blocking submit/wait replay client,
+    /// byte-identical to the historical path.
+    pub max_in_flight: usize,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +106,8 @@ impl Default for ServeConfig {
             maintenance_age_bound: 0,
             workers: 0,
             policy: None,
+            cross_batch: false,
+            max_in_flight: 0,
         }
     }
 }
@@ -140,6 +170,8 @@ pub struct Server {
     results: Results,
     next_ticket: AtomicU64,
     workers: usize,
+    /// in-flight window for the nonblocking replay client; 0 = blocking
+    max_in_flight: usize,
     /// fault-reactive policy knobs; `None` = pre-policy serving path
     policy: Option<PolicyConfig>,
     /// fixed probe batch, built once at deploy when a policy is armed
@@ -176,12 +208,16 @@ impl Server {
         Ok(Server {
             policy: cfg.policy,
             probe,
+            // one preset per server, so every device shares the default
+            // compatibility class; a mixed-preset fleet would set
+            // per-device classes here and never co-batch across them
             queue: SubmitQueue::new(
                 cfg.n_devices,
                 cfg.queue_capacity,
                 cfg.max_batch_samples,
                 cfg.maintenance_age_bound,
-            ),
+            )
+            .with_cross_batch(cfg.cross_batch),
             fleet,
             results: Results {
                 map: Mutex::new(BTreeMap::new()),
@@ -193,6 +229,7 @@ impl Server {
             } else {
                 cfg.workers
             },
+            max_in_flight: cfg.max_in_flight,
         })
     }
 
@@ -225,11 +262,58 @@ impl Server {
         self.queue.is_draining(device)
     }
 
+    pub fn max_in_flight(&self) -> usize {
+        self.max_in_flight
+    }
+
+    /// Whether the queue assembles cross-device batches.
+    pub fn cross_batch(&self) -> bool {
+        self.queue.cross_batch()
+    }
+
+    /// Requests currently queued (not yet popped) — the backpressure
+    /// signal the trace report's queue-depth percentiles sample.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Dispatch-shape counters accumulated so far (reporting only;
+    /// grouping is schedule-dependent, results are not).
+    pub fn dispatch_stats(&self) -> DispatchStats {
+        self.queue.dispatch_stats()
+    }
+
     /// Validate and enqueue a request for `device`; blocks while the
     /// queue is at capacity. The ticket resolves via [`Server::wait`].
     pub fn submit(&self, device: usize, kind: RequestKind) -> Result<Ticket> {
+        self.validate(&kind)?;
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        self.queue.submit(device, ticket, kind)?;
+        Ok(ticket)
+    }
+
+    /// Nonblocking admission: validate, then enqueue only if the queue
+    /// has room. `Ok(None)` means saturation — the caller holds the
+    /// request, reaps completions, and retries — never a blocked
+    /// thread. Hard errors (validation, shutdown, quarantine) are the
+    /// same errors `submit` raises.
+    pub fn submit_nonblocking(
+        &self,
+        device: usize,
+        kind: RequestKind,
+    ) -> Result<Option<Ticket>> {
+        self.validate(&kind)?;
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        if self.queue.try_submit(device, ticket, kind)? {
+            Ok(Some(ticket))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn validate(&self, kind: &RequestKind) -> Result<()> {
         let session = self.fleet.session();
-        match &kind {
+        match kind {
             RequestKind::Infer { samples } => {
                 if samples.is_empty() {
                     bail!("inference request with no samples");
@@ -264,9 +348,7 @@ impl Server {
                 }
             }
         }
-        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
-        self.queue.submit(device, ticket, kind)?;
-        Ok(ticket)
+        Ok(())
     }
 
     /// Block until `ticket` resolves; each ticket redeems exactly once.
@@ -278,6 +360,18 @@ impl Server {
             }
             map = self.results.ready.wait(map).expect("results lock");
         }
+    }
+
+    /// Nonblocking redeem: take `ticket`'s response if it has resolved,
+    /// `None` if it is still in flight. Completed tickets can be polled
+    /// in any order — the handle/poll client harvests whatever finished
+    /// while it was submitting.
+    pub fn poll(&self, ticket: Ticket) -> Option<Response> {
+        self.results
+            .map
+            .lock()
+            .expect("results lock")
+            .remove(&ticket)
     }
 
     /// Run the serving loop: `workers` dispatch threads drain the queue
@@ -311,24 +405,26 @@ impl Server {
         )
     }
 
-    /// Execute one work unit on its (locked) device and post responses.
+    /// Execute one work unit on its (locked) device(s) and post
+    /// responses.
     ///
     /// Completion runs from a drop guard so that even a *panic* inside
-    /// execution frees the device and resolves every ticket as
-    /// `Failed`: a blocked `wait()` then wakes and the worker's panic
-    /// propagates through the scope join — fail fast, never a hang.
+    /// execution frees every grouped device and resolves every ticket
+    /// as `Failed`: a blocked `wait()` then wakes and the worker's
+    /// panic propagates through the scope join — fail fast, never a
+    /// hang.
     fn execute(&self, unit: WorkUnit) {
         struct FinishGuard<'a> {
             server: &'a Server,
-            device: usize,
-            items: Vec<Pending>,
+            groups: Vec<DeviceBatch>,
             responses: Option<Vec<(Ticket, Response)>>,
         }
         impl Drop for FinishGuard<'_> {
             fn drop(&mut self) {
                 let responses = self.responses.take().unwrap_or_else(|| {
-                    self.items
+                    self.groups
                         .iter()
+                        .flat_map(|g| g.items.iter())
                         .map(|p| {
                             (p.ticket, Response::Failed {
                                 error: "work unit panicked".to_string(),
@@ -338,7 +434,9 @@ impl Server {
                         })
                         .collect()
                 });
-                self.server.queue.complete(self.device);
+                for g in &self.groups {
+                    self.server.queue.complete(g.device);
+                }
                 // avoid a double panic on a poisoned results lock while
                 // already unwinding
                 if let Ok(mut map) = self.server.results.map.lock() {
@@ -349,19 +447,23 @@ impl Server {
         }
         let mut guard = FinishGuard {
             server: self,
-            device: unit.device,
-            items: unit.items,
+            groups: unit.groups,
             responses: None,
         };
-        guard.responses = Some(match self.run_unit(guard.device, &guard.items)
-        {
+        let result = if let [g] = guard.groups.as_slice() {
+            self.run_single(g.device, &g.items)
+        } else {
+            self.run_cross(&guard.groups)
+        };
+        guard.responses = Some(match result {
             Ok(rs) => rs,
             Err(e) => {
                 // resolve every ticket in the failed unit
                 let msg = format!("{e:#}");
                 guard
-                    .items
+                    .groups
                     .iter()
+                    .flat_map(|g| g.items.iter())
                     .map(|p| {
                         (p.ticket, Response::Failed {
                             error: msg.clone(),
@@ -374,17 +476,22 @@ impl Server {
         });
     }
 
-    fn run_unit(
+    /// Run a single-device unit: walk the items in program order,
+    /// fusing each run of consecutive inference requests into one
+    /// stacked dispatch. Covers the classic shapes (one maintenance
+    /// request; a coalesced inference run) and the aging-promotion
+    /// shape (`[maintenance, inference…]`) with one device lock.
+    fn run_single(
         &self,
         device: usize,
         items: &[Pending],
     ) -> Result<Vec<(Ticket, Response)>> {
         let session = self.fleet.session().clone();
         let mut dev = self.fleet.lock(device)?;
-
-        // maintenance units are always singletons (the queue never
-        // coalesces them)
-        if let [p] = items {
+        let mut out = Vec::with_capacity(items.len());
+        let mut i = 0;
+        while i < items.len() {
+            let p = &items[i];
             match &p.kind {
                 RequestKind::Calibrate { n_samples, cfg } => {
                     // with a policy armed, bracket the round with
@@ -408,55 +515,119 @@ impl Server {
                         }
                         _ => None,
                     };
-                    return Ok(vec![(p.ticket, Response::Calibration {
+                    out.push((p.ticket, Response::Calibration {
                         sram_writes: sram,
                         rram_writes: rram,
                         probe,
                         latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
-                    })]);
+                    }));
+                    i += 1;
                 }
                 RequestKind::Advance { hours } => {
                     dev.advance(*hours);
-                    return Ok(vec![(p.ticket, Response::Drift {
+                    out.push((p.ticket, Response::Drift {
                         hours: *hours,
                         latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
-                    })]);
+                    }));
+                    i += 1;
                 }
-                // single inference goes through the batched path below
-                RequestKind::Infer { .. } => {}
+                RequestKind::Infer { .. } => {
+                    // consecutive inference run: one stacked backend
+                    // dispatch, predictions split back per request
+                    let mut j = i;
+                    let mut samples = Vec::new();
+                    while j < items.len() {
+                        match &items[j].kind {
+                            RequestKind::Infer { samples: s } => {
+                                samples.extend_from_slice(s);
+                                j += 1;
+                            }
+                            _ => break,
+                        }
+                    }
+                    let (x, labels) = gather_eval(&session.dataset, &samples)?;
+                    let preds = dev.infer(&session, &x, &labels)?;
+                    let mut off = 0;
+                    for q in &items[i..j] {
+                        let n = q.kind.n_samples();
+                        let part = &preds[off..off + n];
+                        let correct = part
+                            .iter()
+                            .zip(&labels[off..off + n])
+                            .filter(|(a, b)| *a == *b)
+                            .count();
+                        off += n;
+                        out.push((q.ticket, Response::Inference {
+                            predictions: part.to_vec(),
+                            correct,
+                            latency_ns: q.submitted_at.elapsed().as_nanos()
+                                as u64,
+                        }));
+                    }
+                    i = j;
+                }
             }
         }
+        Ok(out)
+    }
 
-        // inference unit (one request or a coalesced run): one stacked
-        // backend dispatch, predictions split back per request
-        let mut samples = Vec::new();
-        for p in items {
-            match &p.kind {
-                RequestKind::Infer { samples: s } => {
-                    samples.extend_from_slice(s)
-                }
-                _ => bail!("non-inference request in a micro-batch"),
-            }
+    /// Run a cross-device unit: lock every grouped device (ascending
+    /// device-id order — the groups' order — so concurrent cross units
+    /// can never deadlock), assemble one stacked row batch, make one
+    /// `Backend::fleet_fwd` call, then split predictions and charge
+    /// wear per device in group order. Sample data, kernel sequence,
+    /// and counter mutation order are identical to dispatching each
+    /// group through [`Server::run_single`] serially, so the batched
+    /// path is bitwise equal to the same-device-only path.
+    fn run_cross(
+        &self,
+        groups: &[DeviceBatch],
+    ) -> Result<Vec<(Ticket, Response)>> {
+        let session = self.fleet.session().clone();
+        let mut devs = Vec::with_capacity(groups.len());
+        for g in groups {
+            devs.push(self.fleet.lock(g.device)?);
         }
-        let (x, labels) = gather_eval(&session.dataset, &samples)?;
-        let preds = dev.infer(&session, &x, &labels)?;
-        drop(dev);
-        let mut out = Vec::with_capacity(items.len());
+        let batch = batch::assemble(&session.dataset, groups)?;
+        let ios = devs
+            .iter()
+            .map(|d| d.fwd_io())
+            .collect::<Result<Vec<DeviceFwdIo>>>()?;
+        let slices: Vec<FleetSlice<'_>> = ios
+            .iter()
+            .zip(&batch.group_samples)
+            .map(|(io, &n)| io.slice(n))
+            .collect();
+        let logits =
+            session
+                .backend
+                .fleet_fwd(&session.spec, &batch.rows, &slices)?;
+        let preds = logits.argmax_rows();
+        let mut out = Vec::with_capacity(
+            groups.iter().map(|g| g.items.len()).sum(),
+        );
         let mut off = 0;
-        for p in items {
-            let n = p.kind.n_samples();
-            let part = &preds[off..off + n];
-            let correct = part
-                .iter()
-                .zip(&labels[off..off + n])
-                .filter(|(a, b)| *a == *b)
-                .count();
-            off += n;
-            out.push((p.ticket, Response::Inference {
-                predictions: part.to_vec(),
-                correct,
-                latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
-            }));
+        for (gi, g) in groups.iter().enumerate() {
+            let n_g = batch.group_samples[gi];
+            devs[gi].finish_batched_infer(
+                &preds[off..off + n_g],
+                &batch.labels[off..off + n_g],
+            );
+            for p in &g.items {
+                let n = p.kind.n_samples();
+                let part = &preds[off..off + n];
+                let correct = part
+                    .iter()
+                    .zip(&batch.labels[off..off + n])
+                    .filter(|(a, b)| *a == *b)
+                    .count();
+                off += n;
+                out.push((p.ticket, Response::Inference {
+                    predictions: part.to_vec(),
+                    correct,
+                    latency_ns: p.submitted_at.elapsed().as_nanos() as u64,
+                }));
+            }
         }
         Ok(out)
     }

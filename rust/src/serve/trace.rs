@@ -7,18 +7,34 @@
 //! A trace is just `Vec<(device, RequestKind)>` in submission order —
 //! the same value feeds the threaded server replay and the serial
 //! per-device reference the determinism test compares against.
+//!
+//! Two replay clients share this module:
+//!
+//! * the historical **blocking** client (`max_in_flight == 0`):
+//!   submit every request up front (the bounded queue provides
+//!   backpressure), then redeem tickets in order;
+//! * the **nonblocking handle/poll** client (`max_in_flight > 0`):
+//!   admission-controlled submission through `submit_nonblocking`,
+//!   a bounded in-flight window of outstanding tickets harvested by
+//!   `poll`, and queue-depth / backpressure-wait accounting surfaced
+//!   in the [`TraceReport`].
+//!
+//! Both clients produce bitwise-identical responses for the same trace
+//! — the window only changes *when* requests are admitted, never the
+//! per-device program order the queue preserves.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::anyhow::Result;
 
 use super::fleet::DeviceStats;
 use super::health::{FleetHealth, PolicyConfig};
-use super::queue::{Lane, RequestKind};
+use super::queue::{DispatchStats, Lane, RequestKind};
 use super::server::{Response, Server};
 use crate::calib::CalibConfig;
 use crate::coordinator::PolicyDecision;
-use crate::metrics::{LatencySummary, RetryHistogram};
+use crate::metrics::{DepthSummary, LatencySummary, RetryHistogram};
 use crate::util::rng::Rng;
 
 /// Knobs for the synthetic request mix.
@@ -136,6 +152,16 @@ pub struct TraceReport {
     pub rram_writes_in_field: u64,
     pub sram_writes: u64,
     pub failed: usize,
+    /// queue depth sampled at each successful admission of the
+    /// nonblocking client; empty under the blocking and policy clients
+    /// (reporting only — never pinned by determinism tests)
+    pub queue_depth: DepthSummary,
+    /// times the nonblocking client had to block — in-flight window
+    /// full or queue saturated; 0 under the blocking client
+    pub backpressure_waits: u64,
+    /// work-unit shape counters from the dispatch queue (reporting
+    /// only: schedule-dependent, never pinned by determinism tests)
+    pub dispatch: DispatchStats,
     /// fault-reactive policy outcomes; `None` without a policy
     pub policy: Option<PolicyReport>,
 }
@@ -149,26 +175,34 @@ pub fn replay_collect(
     // lint:allow(R7) -- wall-clock throughput measurement for the replay
     // report; predictions and orderings never depend on it
     let t0 = Instant::now();
-    let (responses, policy) = match server.policy().copied() {
-        // pre-policy path, byte-for-byte the historical replay
-        None => {
-            let responses: Result<Vec<Response>> = server.serve(|srv| {
-                // submit everything (backpressure via the bounded
-                // queue), then redeem tickets in order; workers drain
-                // concurrently
-                let mut tickets = Vec::with_capacity(trace.len());
-                for (device, kind) in trace {
-                    tickets.push(srv.submit(*device, kind.clone())?);
-                }
-                Ok(tickets.into_iter().map(|t| srv.wait(t)).collect())
-            });
-            (responses?, None)
-        }
-        Some(pc) => {
-            let (responses, report) = replay_policy(server, trace, &pc)?;
-            (responses, Some(report))
-        }
-    };
+    let (responses, policy, depth_samples, backpressure_waits) =
+        match server.policy().copied() {
+            // nonblocking handle/poll client with a bounded in-flight
+            // window and admission control
+            None if server.max_in_flight() > 0 => {
+                let (responses, depths, waits) =
+                    replay_nonblocking(server, trace)?;
+                (responses, None, depths, waits)
+            }
+            // pre-window path, byte-for-byte the historical replay
+            None => {
+                let responses: Result<Vec<Response>> = server.serve(|srv| {
+                    // submit everything (backpressure via the bounded
+                    // queue), then redeem tickets in order; workers
+                    // drain concurrently
+                    let mut tickets = Vec::with_capacity(trace.len());
+                    for (device, kind) in trace {
+                        tickets.push(srv.submit(*device, kind.clone())?);
+                    }
+                    Ok(tickets.into_iter().map(|t| srv.wait(t)).collect())
+                });
+                (responses?, None, Vec::new(), 0)
+            }
+            Some(pc) => {
+                let (responses, report) = replay_policy(server, trace, &pc)?;
+                (responses, Some(report), Vec::new(), 0)
+            }
+        };
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut infer_ns = Vec::new();
@@ -210,9 +244,91 @@ pub fn replay_collect(
         sram_writes: devices.iter().map(|d| d.sram_writes).sum(),
         devices,
         failed,
+        queue_depth: DepthSummary::from_samples(depth_samples),
+        backpressure_waits,
+        dispatch: server.dispatch_stats(),
         policy,
     };
     Ok((report, responses))
+}
+
+/// The nonblocking handle/poll replay client: at most
+/// `server.max_in_flight()` tickets outstanding, responses harvested
+/// by `poll` in submission order, saturation answered by blocking on
+/// the oldest outstanding handle (the backpressure path). Queue depth
+/// is sampled at every successful admission.
+///
+/// Returns `(responses, depth_samples, backpressure_waits)`.
+fn replay_nonblocking(
+    server: &Server,
+    trace: &[(usize, RequestKind)],
+) -> Result<(Vec<Response>, Vec<u64>, u64)> {
+    let window = server.max_in_flight();
+    let mut depth_samples: Vec<u64> = Vec::with_capacity(trace.len());
+    let mut backpressure_waits = 0u64;
+    let responses: Result<Vec<Response>> = server.serve(|srv| {
+        let mut slots: Vec<Option<Response>> =
+            (0..trace.len()).map(|_| None).collect();
+        let mut inflight: VecDeque<(usize, super::queue::Ticket)> =
+            VecDeque::with_capacity(window);
+        for (i, (device, kind)) in trace.iter().enumerate() {
+            loop {
+                // poll-sweep: harvest completed responses from the
+                // front of the window without blocking
+                while let Some(&(idx, t)) = inflight.front() {
+                    match srv.poll(t) {
+                        Some(r) => {
+                            slots[idx] = Some(r);
+                            inflight.pop_front();
+                        }
+                        None => break,
+                    }
+                }
+                if inflight.len() >= window {
+                    // window full: block on the oldest handle, then
+                    // re-sweep before admitting
+                    backpressure_waits += 1;
+                    let (idx, t) =
+                        inflight.pop_front().expect("window non-empty");
+                    slots[idx] = Some(srv.wait(t));
+                    continue;
+                }
+                match srv.submit_nonblocking(*device, kind.clone())? {
+                    Some(t) => {
+                        depth_samples.push(srv.queue_depth() as u64);
+                        inflight.push_back((i, t));
+                        break;
+                    }
+                    None => {
+                        // queue saturated: reap the oldest outstanding
+                        // response to open space, then retry admission
+                        backpressure_waits += 1;
+                        match inflight.pop_front() {
+                            Some((idx, t)) => slots[idx] = Some(srv.wait(t)),
+                            // saturated by traffic we are not holding
+                            // handles for — fall back to one blocking
+                            // admission so the replay still progresses
+                            None => {
+                                let t = srv.submit(*device, kind.clone())?;
+                                depth_samples.push(srv.queue_depth() as u64);
+                                inflight.push_back((i, t));
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // drain the tail of the window
+        while let Some((idx, t)) = inflight.pop_front() {
+            slots[idx] = Some(srv.wait(t));
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every slot resolved"))
+            .collect())
+    });
+    Ok((responses?, depth_samples, backpressure_waits))
 }
 
 /// One replay slot while the policy loop is in flight: either a ticket

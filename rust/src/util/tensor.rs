@@ -331,6 +331,52 @@ impl Tensor {
         Tensor { shape: Shape::new(&self.shape[1..]), data }
     }
 
+    /// Contiguous `[start, start+len)` range of the leading axis,
+    /// keeping rank (a `[N, ...]` tensor yields `[len, ...]`). Used by
+    /// the cross-device serving path to split a stacked `[ΣB, ...]`
+    /// batch back into per-device slices.
+    pub fn subrange0(&self, start: usize, len: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && start + len <= self.shape[0]);
+        let stride: usize = self.shape[1..].iter().product();
+        let mut data = arena::take_cap(len * stride);
+        data.extend_from_slice(
+            &self.data[start * stride..(start + len) * stride],
+        );
+        let mut shape = self.shape;
+        shape.dims[0] = len;
+        Tensor { shape, data }
+    }
+
+    /// Concatenate along the existing leading axis (inner shapes must
+    /// match). The inverse of per-slice `subrange0` splitting: the
+    /// cross-device forward builds the `[ΣB, ...]` result by folding
+    /// per-device outputs back together in canonical device-id order.
+    pub fn concat0(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("concat0 of zero tensors");
+        }
+        let inner = &parts[0].shape.dims()[1..];
+        let mut total = 0usize;
+        for p in parts {
+            if p.shape.is_empty() || &p.shape.dims()[1..] != inner {
+                bail!(
+                    "concat0 inner-shape mismatch: {:?} vs {:?}",
+                    p.shape,
+                    parts[0].shape
+                );
+            }
+            total += p.shape[0];
+        }
+        let stride: usize = inner.iter().product();
+        let mut data = arena::take_cap(total * stride);
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = parts[0].shape;
+        shape.dims[0] = total;
+        Ok(Tensor { shape, data })
+    }
+
     /// Stack equal-shape tensors along a new leading axis.
     pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
         if parts.is_empty() {

@@ -1,8 +1,9 @@
 //! Serving-layer integration tests: priority ordering under contention,
-//! bounded-queue backpressure, and the headline determinism claim —
-//! threaded, micro-batched serving returns bitwise the same results as
-//! serial per-device execution, with zero RRAM write attempts from
-//! field traffic.
+//! bounded-queue backpressure, and the headline determinism claims —
+//! threaded, micro-batched serving (and cross-device batched serving
+//! through the nonblocking submit/poll client) returns bitwise the same
+//! results as serial per-device execution, with zero RRAM write
+//! attempts from field traffic.
 
 use rimc_dora::calib::CalibConfig;
 use rimc_dora::coordinator::Engine;
@@ -10,6 +11,7 @@ use rimc_dora::serve::{
     gather_eval, replay_collect, synth_trace, Fleet, RequestKind, Response,
     ServeConfig, Server, SubmitQueue, TraceSpec,
 };
+use rimc_dora::util::threads;
 
 fn assert_send_sync<T: Send + Sync>() {}
 
@@ -44,8 +46,14 @@ fn priority_ordering_under_contention() {
 
     let mut order: Vec<Vec<u64>> = Vec::new();
     while let Some(unit) = q.pop() {
-        order.push(unit.items.iter().map(|p| p.ticket).collect());
-        q.complete(unit.device);
+        assert_eq!(
+            unit.groups.len(),
+            1,
+            "cross-batching off: every unit is a single device group"
+        );
+        let g = &unit.groups[0];
+        order.push(g.items.iter().map(|p| p.ticket).collect());
+        q.complete(g.device);
     }
     assert_eq!(order, vec![
         vec![2, 3], // earliest eligible inference, coalesced (d1)
@@ -212,6 +220,202 @@ fn served_equals_serial_per_device_bitwise() {
             _ => panic!("device {d}: adapter presence diverges"),
         }
     }
+}
+
+/// The tentpole determinism gate (DESIGN.md §11): cross-device batched
+/// serving through the nonblocking submit/poll client is bitwise
+/// identical to serial per-device execution — predictions, drift
+/// clocks, wear counters, accuracy counters, and the exact adapter
+/// tensors in SRAM — across shared thread budgets 1, 2 and auto, and
+/// field traffic still never writes RRAM.
+#[test]
+fn cross_batched_equals_serial_bitwise_across_thread_budgets() {
+    let eng = Engine::native();
+    let session = eng.shared_session("nano").unwrap();
+    let n_devices = 4;
+    let spec = TraceSpec {
+        n_requests: 80,
+        n_devices,
+        max_infer_samples: 6,
+        advance_every: 9,
+        advance_hours: 30.0,
+        calibrate_every: 17,
+        calib_samples: 8,
+        calib_cfg: CalibConfig {
+            max_steps_per_layer: 20,
+            ..CalibConfig::default()
+        },
+        seed: 0xdead,
+    };
+    let trace = synth_trace(&spec, session.dataset.n_eval());
+    let cfg = ServeConfig {
+        n_devices,
+        workers: 4,
+        max_batch_samples: 32,
+        queue_capacity: 16,
+        cross_batch: true,
+        max_in_flight: 8,
+        ..ServeConfig::default()
+    };
+
+    // serial per-device reference: identical fleet seeds, one request
+    // per dispatch, no queue, no workers, no cross-batching
+    let fleet =
+        Fleet::deploy(session.clone(), n_devices, cfg.drift_rel, cfg.seed)
+            .unwrap();
+    let mut serial: Vec<Option<Vec<usize>>> = Vec::with_capacity(trace.len());
+    for (d, kind) in &trace {
+        let mut dev = fleet.lock(*d).unwrap();
+        match kind {
+            RequestKind::Infer { samples } => {
+                let (x, labels) =
+                    gather_eval(&session.dataset, samples).unwrap();
+                serial.push(Some(dev.infer(&session, &x, &labels).unwrap()));
+            }
+            RequestKind::Calibrate { n_samples, cfg } => {
+                dev.calibrate(&session, *n_samples, cfg).unwrap();
+                serial.push(None);
+            }
+            RequestKind::Advance { hours } => {
+                dev.advance(*hours);
+                serial.push(None);
+            }
+        }
+    }
+
+    for budget in [1usize, 2, 0] {
+        threads::set_threads(budget);
+        let server = Server::new(session.clone(), &cfg).unwrap();
+        let (report, responses) = replay_collect(&server, &trace).unwrap();
+        assert_eq!(report.failed, 0, "budget {budget}");
+        assert_eq!(
+            report.rram_writes_in_field, 0,
+            "budget {budget}: field traffic wrote RRAM"
+        );
+        // the nonblocking client samples queue depth at every admission
+        assert_eq!(report.queue_depth.count(), trace.len());
+        assert!(report.dispatch.units > 0);
+        // with an 8-deep window over 4 devices and millisecond-scale
+        // work units, the queue holds several device fronts at every
+        // pop — the replay must actually exercise cross-device units
+        assert!(
+            report.dispatch.cross_units > 0,
+            "budget {budget}: no cross-device unit formed"
+        );
+
+        for (i, (resp, reference)) in
+            responses.iter().zip(&serial).enumerate()
+        {
+            match (resp, reference) {
+                (Response::Inference { predictions, .. }, Some(want)) => {
+                    assert_eq!(
+                        predictions, want,
+                        "budget {budget}: request {i} diverged"
+                    );
+                }
+                (Response::Inference { .. }, None) => {
+                    panic!("request {i}: class mismatch (served inference)")
+                }
+                (Response::Failed { error, .. }, _) => {
+                    panic!("request {i} failed: {error}")
+                }
+                _ => {}
+            }
+        }
+        for d in 0..n_devices {
+            let served = server.fleet().lock(d).unwrap();
+            let want = fleet.lock(d).unwrap();
+            let (s, w) = (served.stats(), want.stats());
+            assert_eq!(s.hours, w.hours, "device {d} drift clock");
+            assert_eq!(s.inferred, w.inferred, "device {d} samples");
+            assert_eq!(s.correct, w.correct, "device {d} accuracy counter");
+            assert_eq!(s.calibrations, w.calibrations, "device {d} rounds");
+            assert_eq!(s.sram_writes, w.sram_writes, "device {d} SRAM wear");
+            assert_eq!(s.rram_reads, w.rram_reads, "device {d} read wear");
+            assert_eq!(s.rram_writes_in_field, 0, "device {d} wrote RRAM");
+            match (served.adapters(), want.adapters()) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.layers.len(), b.layers.len());
+                    for (la, lb) in a.layers.iter().zip(&b.layers) {
+                        assert_eq!(la.a.tensor(), lb.a.tensor());
+                        assert_eq!(la.b.tensor(), lb.b.tensor());
+                        assert_eq!(la.m.tensor(), lb.m.tensor());
+                    }
+                    assert_eq!(a.head.a.tensor(), b.head.a.tensor());
+                    assert_eq!(
+                        a.head.merged_meff().unwrap(),
+                        b.head.merged_meff().unwrap()
+                    );
+                }
+                _ => panic!("device {d}: adapter presence diverges"),
+            }
+        }
+    }
+    threads::set_threads(0);
+}
+
+/// Mixed-preset fleets never co-batch: devices carrying different
+/// compatibility classes (different presets) stay in separate work
+/// units even with cross-batching armed, because their stacked shapes
+/// would not agree.
+#[test]
+fn mixed_preset_queues_never_co_batch() {
+    let inf = |s: usize| RequestKind::Infer { samples: vec![s] };
+    let q = SubmitQueue::new(3, 16, 8, 0)
+        .with_cross_batch(true)
+        .with_classes(vec![1, 1, 2]); // devices 0,1 share a preset
+    q.submit(2, 0, inf(0)).unwrap();
+    q.submit(0, 1, inf(1)).unwrap();
+    q.submit(1, 2, inf(2)).unwrap();
+    q.shutdown();
+
+    // device 2 submitted first, so it wins the pop — but neither
+    // class-1 device may ride along
+    let u = q.pop().unwrap();
+    assert_eq!(u.groups.len(), 1);
+    assert_eq!(u.groups[0].device, 2);
+    q.complete(2);
+
+    // the two class-1 devices co-batch with each other just fine
+    let u = q.pop().unwrap();
+    let shape: Vec<(usize, Vec<u64>)> = u
+        .groups
+        .iter()
+        .map(|g| (g.device, g.items.iter().map(|p| p.ticket).collect()))
+        .collect();
+    assert_eq!(shape, vec![(0, vec![1]), (1, vec![2])]);
+}
+
+/// Quarantined (draining) devices are excluded from cross-batch
+/// assembly: their already-queued work still completes, but it never
+/// rides inside another device's work unit, and new submissions are
+/// refused.
+#[test]
+fn quarantined_devices_excluded_from_cross_batches() {
+    let inf = |s: usize| RequestKind::Infer { samples: vec![s] };
+    let q = SubmitQueue::new(3, 16, 8, 0).with_cross_batch(true);
+    q.submit(0, 0, inf(0)).unwrap();
+    q.submit(1, 1, inf(1)).unwrap();
+    q.submit(2, 2, inf(2)).unwrap();
+    q.drain(1);
+    assert!(q.submit(1, 9, inf(3)).is_err(), "draining refuses new work");
+    q.shutdown();
+
+    // devices 0 and 2 stack; draining device 1 is skipped
+    let u = q.pop().unwrap();
+    let devs: Vec<usize> = u.groups.iter().map(|g| g.device).collect();
+    assert_eq!(devs, vec![0, 2]);
+    q.complete(0);
+    q.complete(2);
+
+    // device 1's queued request still completes — as its own unit
+    let u = q.pop().unwrap();
+    assert_eq!(u.groups.len(), 1);
+    assert_eq!(u.groups[0].device, 1);
+    assert_eq!(u.groups[0].items[0].ticket, 1);
+    q.complete(1);
+    assert!(q.pop().is_none());
 }
 
 /// R3/R7 audit pin (rimc-lint, DESIGN.md §8): everything a

@@ -43,11 +43,17 @@ a vectorization or threading win silently rotting away is exactly the
 regression this trajectory exists to catch.
 
 Latency-percentile records (op `latency-*`, from the serving bench's
-per-lane p50/p99) gate wall time against `--max-latency-regress`
-(default 30%) instead of `--max-regress`: tail percentiles off a
+per-lane p50/p99), cross-device batching records (op `cross-batch-*`,
+from `rimc serve --cross-batch`), and queue-depth records (op
+`queue-depth-p99`, the nonblocking client's backpressure signal) gate
+wall time against `--max-latency-regress` (default 30%) instead of
+`--max-regress`: tail percentiles and whole-replay wall times off a
 queueing simulation are legitimately noisier than kernel means, and a
-gate that cries wolf gets deleted. Their speedup field is a constant
-1.0 by construction, so the speedup gate never fires for them.
+gate that cries wolf gets deleted. The `latency-*` / `queue-depth-*`
+speedup fields are a constant 1.0 by construction, so the speedup gate
+never fires for them; `cross-batch-replay` carries the real
+batched-vs-same-device throughput ratio, so a rotting batching win
+still trips the 70% speedup floor.
 """
 import argparse
 import json
@@ -126,9 +132,12 @@ def check_regressions(path, doc, base_dir, max_regress, min_delta_ns,
                   f"missing from this run (coverage drop?)")
             continue
         matched += 1
-        # tail percentiles from the serving trace are noisier than
-        # kernel means — they get their own (looser) threshold
-        limit = (max_latency_regress if key[0].startswith("latency-")
+        # tail percentiles, queue-depth samples and whole-replay walls
+        # from the serving trace are noisier than kernel means — they
+        # get their own (looser) threshold
+        limit = (max_latency_regress
+                 if key[0].startswith(("latency-", "cross-batch-",
+                                       "queue-depth-"))
                  else max_regress)
         grew = nr["wall_ns"] - br["wall_ns"]
         if (grew > br["wall_ns"] * limit and grew > min_delta_ns):

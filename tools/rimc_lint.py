@@ -85,6 +85,9 @@ R4_HOT_FILES = {
     "src/runtime/native.rs",
     "src/util/tensor.rs",
     "src/rram/nonideal.rs",
+    # cross-device batch assembly: runs once per stacked work unit on
+    # the serving hot path, so its row buffers must come from the arena
+    "src/serve/batch.rs",
 }
 R5_ALLOW_FILES = {
     "src/util/tensor.rs",
